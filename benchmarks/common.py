@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: run a policy set over traces, emit CSV."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core.policies import make_policy
+from repro.core.simulator import simulate_trace
+from repro.core.workload import Workload
+
+#: the policy set the paper benchmarks against (Figures 1-3)
+PAPER_POLICIES = ("bs", "fcfs", "serverfilling", "sf-srpt", "ff-srpt", "msf")
+
+
+def run_policies(wl: Workload, num_jobs: int, seed: int,
+                 policies=PAPER_POLICIES, extra_cols=None) -> list[dict]:
+    trace = wl.sample_trace(num_jobs, seed=seed)
+    rows = []
+    for name in policies:
+        pol = make_policy(name, wl=wl)
+        t0 = time.time()
+        try:
+            res = simulate_trace(trace, pol)
+            row = res.row()
+        except RuntimeError as e:       # unstable on this trace
+            row = {"policy": name, "jobs": num_jobs,
+                   "mean_response": float("inf"), "mean_wait": float("inf"),
+                   "p_wait": 1.0, "p_helper": None,
+                   "p95_response": float("inf"), "utilization": 0.0,
+                   "note": str(e)[:60]}
+        row["sim_s"] = round(time.time() - t0, 2)
+        if extra_cols:
+            row.update(extra_cols)
+        rows.append(row)
+    return rows
+
+
+def emit(rows: list[dict], cols: list[str], file=None) -> None:
+    file = file or sys.stdout
+    print(",".join(cols), file=file)
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols), file=file)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

@@ -1,0 +1,47 @@
+"""Figure 1 — mean response time in the critical (Halfin-Whitt) regime.
+
+k sweeps with f_k = floor((k/32)^(2/3)), (1-ρ)√(k/f_k) -> θ = 0.7;
+small jobs (f_k, 1) w.p. 0.95; large (2f_k,40)/(4f_k,20)/(8f_k,10) w.p.
+0.05/3 each; exponential services, Poisson arrivals (paper Fig. 1 setup).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.theory import analyze
+from repro.core.workload import figure1_workload
+
+from .common import PAPER_POLICIES, emit, run_policies
+
+COLS = ["k", "policy", "mean_response", "mean_wait", "p_wait", "p_helper",
+        "p95_response", "utilization", "ph_bound", "zero_wait_R", "sim_s"]
+
+
+def run(ks=(256, 512, 1024, 2048), num_jobs=30_000, seed=0,
+        policies=PAPER_POLICIES, theta=0.7):
+    rows = []
+    for k in ks:
+        wl = figure1_workload(k, theta=theta)
+        rep = analyze(wl)
+        rows += run_policies(
+            wl, num_jobs, seed, policies,
+            extra_cols={"k": k, "ph_bound": rep.p_helper_modified,
+                        "zero_wait_R": wl.zero_wait_response_time()})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=30_000)
+    ap.add_argument("--ks", type=int, nargs="+",
+                    default=[256, 512, 1024, 2048])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 10^6 arrivals")
+    args = ap.parse_args(argv)
+    jobs = 1_000_000 if args.full else args.jobs
+    emit(run(ks=tuple(args.ks), num_jobs=jobs), COLS)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Figure 2 — (a) heavy traffic: k fixed, load -> 1; (b) subcritical sweep.
+
+Same job classes and server needs as Figure 1 (k = 512, f_k = 6).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.workload import figure2_workload, figure1_base_classes, \
+    subcritical_scaling
+
+from .common import PAPER_POLICIES, emit, run_policies
+
+COLS = ["regime", "k", "load", "policy", "mean_response", "mean_wait",
+        "p_wait", "p_helper", "p95_response", "utilization", "sim_s"]
+
+
+def run_heavy(k=512, loads=(0.5, 0.7, 0.8, 0.9, 0.95), num_jobs=20_000,
+              seed=0, policies=PAPER_POLICIES):
+    rows = []
+    for load in loads:
+        wl = figure2_workload(k, load)
+        rows += run_policies(wl, num_jobs, seed, policies,
+                             extra_cols={"regime": "heavy", "k": k,
+                                         "load": load})
+    return rows
+
+
+def run_subcritical(load=0.85, ks=(256, 512, 1024, 2048), num_jobs=20_000,
+                    seed=0, policies=PAPER_POLICIES):
+    base = figure1_base_classes()
+    lam = load / sum(c.alpha * c.d * c.n for c in base)
+    rows = []
+    for k in ks:
+        wl = subcritical_scaling(base, lam, k)
+        rows += run_policies(wl, num_jobs, seed, policies,
+                             extra_cols={"regime": "subcritical", "k": k,
+                                         "load": round(wl.load, 4)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=20_000)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    jobs = 1_000_000 if args.full else args.jobs
+    emit(run_heavy(num_jobs=jobs) + run_subcritical(num_jobs=jobs), COLS)
+
+
+if __name__ == "__main__":
+    main()

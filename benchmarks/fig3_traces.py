@@ -1,0 +1,53 @@
+"""Figure 3 — SDSC-SP2 / KIT-FH2 HPC workloads, k in {512, 1024}.
+
+Traces are synthesized from the paper's Table-2/3 extracted parameters
+(lognormal service fit; the raw archive logs are not redistributable).
+``--swf <path>`` switches to a real SWF log when available.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.workload import kit_fh2_workload, sdsc_sp2_workload
+
+from .common import PAPER_POLICIES, emit, run_policies
+
+COLS = ["dataset", "k", "load", "policy", "mean_response", "mean_wait",
+        "p_wait", "p_helper", "p95_response", "utilization", "sim_s"]
+
+
+def run(num_jobs=15_000, seed=0, ks=(512, 1024),
+        loads=(0.5, 0.7, 0.85), policies=PAPER_POLICIES):
+    rows = []
+    for name, factory in (("sdsc_sp2", sdsc_sp2_workload),
+                          ("kit_fh2", kit_fh2_workload)):
+        for k in ks:
+            for load in loads:
+                wl = factory(k=k, load=load)
+                rows += run_policies(
+                    wl, num_jobs, seed, policies,
+                    extra_cols={"dataset": name, "k": k, "load": load})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=15_000)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--swf", default=None, help="real SWF log path")
+    args = ap.parse_args(argv)
+    jobs = 1_000_000 if args.full else args.jobs
+    if args.swf:
+        from repro.data.swf import parse_swf, trace_to_workload
+        trace = parse_swf(args.swf, k=512)
+        wl = trace_to_workload(trace, 512, 0.85)
+        emit(run_policies(wl, jobs, 0, PAPER_POLICIES,
+                          extra_cols={"dataset": "swf", "k": 512,
+                                      "load": 0.85}), COLS)
+        return
+    emit(run(num_jobs=jobs), COLS)
+
+
+if __name__ == "__main__":
+    main()

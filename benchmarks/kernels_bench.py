@@ -1,0 +1,93 @@
+"""Kernel micro-benchmarks: wall-time of the jnp model paths (the CPU
+stand-ins) + the structural flops/bytes signatures of the Pallas kernels.
+
+On CPU only relative timings are meaningful; the table's purpose is the
+derived columns (arithmetic intensity per kernel call), which transfer to
+the TPU roofline directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+COLS = ["kernel", "shape", "us_per_call", "flops", "hbm_bytes",
+        "intensity"]
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    # flash attention: [B,S,H,D]
+    from repro.models.layers import flash_attention
+    B, S, H, Kh, D = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, Kh, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, Kh, D)), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, causal=True, chunk_q=256, chunk_k=256))
+    us = _time(fa, q, k, v)
+    flops = 4 * B * S * S * H * D
+    hbm = 2 * (q.size + k.size + v.size + q.size)
+    rows.append({"kernel": "flash_attention", "shape": f"{B}x{S}x{H}x{D}",
+                 "us_per_call": us, "flops": flops, "hbm_bytes": hbm,
+                 "intensity": flops / hbm})
+    # wkv
+    from repro.models.rwkv import wkv_chunked
+    B, S, Hh, N = 1, 1024, 8, 64
+    r = jnp.asarray(rng.normal(size=(B, S, Hh, N)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(B, S, Hh, N)), jnp.float32) * 0.3
+    vv = jnp.asarray(rng.normal(size=(B, S, Hh, N)), jnp.float32)
+    w = -jnp.asarray(rng.uniform(0.01, 1, (B, S, Hh, N)), jnp.float32)
+    u = jnp.zeros((Hh, N), jnp.float32)
+    S0 = jnp.zeros((B, Hh, N, N), jnp.float32)
+    wk = jax.jit(lambda *a: wkv_chunked(*a, chunk=64)[0])
+    us = _time(wk, r, kk, vv, w, u, S0)
+    flops = B * S * Hh * (2 * 64 * N + 4 * N * N)   # intra tiles + carry
+    hbm = 4 * 4 * B * S * Hh * N
+    rows.append({"kernel": "wkv6", "shape": f"{B}x{S}x{Hh}x{N}",
+                 "us_per_call": us, "flops": flops, "hbm_bytes": hbm,
+                 "intensity": flops / hbm})
+    # moe dispatch+combine
+    from repro.models.moe import moe_ffn
+    from repro.models.config import MoECfg, ArchConfig
+    cfg = ArchConfig(name="bench", family="moe", num_layers=1, d_model=256,
+                     num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=512,
+                     moe=MoECfg(num_experts=16, top_k=2, d_ff_expert=256))
+    from repro.models.layers import init_params
+    from repro.models.moe import moe_param_defs
+    params = init_params(moe_param_defs(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 512, 256)), jnp.bfloat16)
+    mf = jax.jit(lambda x: moe_ffn(x, params, cfg)[0])
+    us = _time(mf, x)
+    T = 1024
+    flops = T * cfg.moe.top_k * 3 * 2 * 256 * 256
+    hbm = 16 * 3 * 256 * 256 * 2 + T * 256 * 2 * 4
+    rows.append({"kernel": "moe_ffn", "shape": "1024tok_16e_top2",
+                 "us_per_call": us, "flops": flops, "hbm_bytes": hbm,
+                 "intensity": flops / hbm})
+    return rows
+
+
+def main(argv=None):
+    argparse.ArgumentParser().parse_args(argv)
+    emit(run(), COLS)
+
+
+if __name__ == "__main__":
+    main()

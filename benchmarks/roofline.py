@@ -1,0 +1,60 @@
+"""§Roofline report — reads the dry-run JSON artifacts and prints the
+per-(arch x shape x mesh) three-term table (see launch.roofline)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import emit
+
+COLS = ["mesh", "arch", "shape", "compute_s", "memory_s", "collective_s",
+        "dominant", "useful_flops_ratio", "roofline_fraction",
+        "temp_gb", "wire_gb"]
+
+DEFAULT_FILES = ("dryrun_final.json", "dryrun_single.json",
+                 "dryrun_multi.json")
+
+
+def load_rows(files):
+    rows = []
+    files = list(files)
+    if "dryrun_final.json" in files and os.path.exists("dryrun_final.json"):
+        files = ["dryrun_final.json"]        # the refreshed superset
+    for path in files:
+        if not os.path.exists(path):
+            continue
+        for rec in json.load(open(path)):
+            if rec.get("skipped") or not rec.get("ok"):
+                continue
+            r = rec["roofline"]
+            rows.append({
+                "mesh": rec["mesh"], "arch": rec["arch"],
+                "shape": rec["shape"],
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"], "dominant": r["dominant"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "roofline_fraction": r["roofline_fraction"],
+                "temp_gb": rec.get("memory", {}).get(
+                    "temp_size_in_bytes", 0) / 1e9,
+                "wire_gb": rec["collectives"]["total_wire_bytes"] / 1e9,
+            })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=list(DEFAULT_FILES))
+    args = ap.parse_args(argv)
+    rows = load_rows(args.files)
+    if not rows:
+        print("no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --mesh both --out "
+              "dryrun.json` first")
+        return
+    emit(rows, COLS)
+
+
+if __name__ == "__main__":
+    main()

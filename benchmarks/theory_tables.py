@@ -1,0 +1,55 @@
+"""Theorem 1/2 convergence tables (the paper's analytical claims, validated
+numerically + by Monte-Carlo on the jit'd sample-path simulator)."""
+
+from __future__ import annotations
+
+import argparse
+import math
+
+from repro.core.sim_jax import estimate_p_helper
+from repro.core.theory import (p_helper_upper_bound, theorem2_limit,
+                               theorem2_prelimit)
+from repro.core.workload import (critical_scaling, figure1_base_classes,
+                                 subcritical_scaling)
+
+from .common import emit
+
+COLS = ["table", "k", "f_k", "value", "reference", "mc"]
+
+
+def run(mc_jobs=150_000):
+    from repro.core.workload import default_fk
+    base = figure1_base_classes()
+    rows = []
+    # Thm 1: subcritical P_H^(k) -> 0  (f_k = 1 variant: exponential decay)
+    lam = 0.85 / sum(c.alpha * c.d * c.n for c in base)
+    one = lambda k: 1  # noqa: E731
+    for k in (64, 256, 1024):
+        wl = subcritical_scaling(base, lam, k, fk=one)
+        bound = p_helper_upper_bound(wl)
+        mc = estimate_p_helper(wl, num_jobs=mc_jobs) if k <= 1024 else None
+        rows.append({"table": "thm1_ph", "k": k, "f_k": 1, "value": bound,
+                     "reference": 0.0, "mc": mc})
+    # Thm 2: sqrt(k/f_k) P_H -> theta * sum (alpha_i/theta_i) phi/Phi
+    theta = 0.7
+    limit = theorem2_limit(base, theta)
+    for k in (512, 4096, 32768):
+        f = default_fk(k)
+        pre = theorem2_prelimit(base, theta, k)
+        wl = critical_scaling(base, theta, k)
+        mc = math.sqrt(k / f) * estimate_p_helper(wl, num_jobs=mc_jobs) \
+            if k <= 4096 else None
+        rows.append({"table": "thm2_rate", "k": k, "f_k": f, "value": pre,
+                     "reference": limit, "mc": mc})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mc-jobs", type=int, default=150_000)
+    args = ap.parse_args(argv)
+    emit(run(args.mc_jobs), COLS)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""End-to-end serving driver: zero-wait admission on a simulated fleet.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+
+Request classes = (model, context bucket) pairs with fixed chip needs —
+exactly the paper's multiserver-job classes.  The fleet is partitioned
+per eq. (2); requests are admitted per BS-pi; a handful are executed
+end-to-end (prefill + batched greedy decode) through the real model
+stack (reduced configs on CPU).  Watch P_H track the Erlang bound and
+the class-slice requests admit with zero wait.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main  # noqa
+
+sys.argv = [sys.argv[0], "--fleet", "512", "--requests", "400",
+            "--load", "0.8", "--execute", "2"]
+main()

@@ -1,0 +1,3 @@
+from .ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "restore_checkpoint", "save_checkpoint"]

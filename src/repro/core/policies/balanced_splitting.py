@@ -1,0 +1,151 @@
+"""BalancedSplitting-π (Definition 1) and ModifiedBS-π (Definition 2).
+
+The policy owns a :class:`BalancedPartition` and tracks, per class i, the
+number of free whole-job *slots* in A_i (a_i/n_i of them).  The helper set H
+runs the auxiliary policy π — nonpreemptive, size-oblivious, independent of
+the A system.  We ship π ∈ {fcfs, backfill} (strict head-of-line FCFS is the
+paper's experimental choice).
+
+Rules (Def. 1):
+  1. class-i arrival → A_i if a free slot exists, else the helper set;
+  2. helpers process their jobs according to π;
+  3. on a class-i completion *in A_i*, pull the oldest class-i job still
+     WAITING (not yet started) in the helper set into the freed A_i slot.
+
+ModifiedBS-π (Def. 2) drops rule 3: routing to H is irrevocable.  Its A_i
+subsystems are then exactly independent M/GI/s_i/s_i loss queues
+(Property 1) — the object our tests cross-validate against Erlang-B.
+"""
+
+from __future__ import annotations
+
+from ..partition import BalancedPartition, balanced_partition
+from ..workload import Workload
+from .base import Policy, SystemView
+
+
+class BalancedSplitting(Policy):
+    name = "bs"
+    preemptive = False
+    size_aware = False
+    pull_back = True  # Def. 1 rule 3; ModifiedBS-π sets False
+
+    def __init__(self, partition: BalancedPartition, aux: str = "fcfs"):
+        if aux not in ("fcfs", "backfill"):
+            raise ValueError(f"unsupported auxiliary policy {aux!r}")
+        self.partition = partition
+        self.aux = aux
+        self.name = f"{'bs' if self.pull_back else 'modbs'}-{aux}"
+        self._reset_state()
+
+    @classmethod
+    def for_workload(cls, wl: Workload, aux: str = "fcfs"):
+        return cls(balanced_partition(wl), aux=aux)
+
+    # -- internal state ------------------------------------------------------
+
+    def _reset_state(self):
+        self.free_slots = list(self.partition.slots)
+        self.helper_free = self.partition.helpers
+        self.a_running: set[int] = set()       # jobs running in their A_i
+        self.h_running: set[int] = set()       # jobs running on helpers
+        self.h_wait: list[int] = []            # helper queue, arrival order
+        self.n_routed_helper = 0               # jobs sent to H on arrival
+        self.n_served_helper = 0               # jobs that START on H servers
+        self.n_arrivals = 0
+
+    def reset(self, view: SystemView) -> None:
+        self._reset_state()
+        if view.k != self.partition.k:
+            raise ValueError("partition built for a different k")
+
+    # -- helper-set scheduling (π) -------------------------------------------
+
+    def _helper_schedule(self, view: SystemView) -> None:
+        """Start helper jobs per π.  Mutates h_wait/h_running/helper_free."""
+        if self.aux == "fcfs":
+            while self.h_wait:
+                j = self.h_wait[0]
+                n = view.need(j)
+                if n > self.helper_free:
+                    break  # head-of-line blocking
+                self.h_wait.pop(0)
+                self.h_running.add(j)
+                self.n_served_helper += 1
+                self.helper_free -= n
+        else:  # backfill: first-fit through the whole helper queue
+            i = 0
+            while i < len(self.h_wait) and self.helper_free > 0:
+                j = self.h_wait[i]
+                n = view.need(j)
+                if n <= self.helper_free:
+                    self.h_wait.pop(i)
+                    self.h_running.add(j)
+                    self.n_served_helper += 1
+                    self.helper_free -= n
+                else:
+                    i += 1
+
+    # -- event hooks -----------------------------------------------------------
+
+    def on_arrival(self, view: SystemView, j: int) -> None:
+        i = view.cls(j)
+        self.n_arrivals += 1
+        if self.free_slots[i] > 0:
+            self.free_slots[i] -= 1
+            self.a_running.add(j)
+        else:
+            self.n_routed_helper += 1
+            self.h_wait.append(j)
+            self._helper_schedule(view)
+
+    def on_departure(self, view: SystemView, j: int) -> None:
+        if j in self.a_running:
+            self.a_running.discard(j)
+            i = view.cls(j)
+            self.free_slots[i] += 1
+            if self.pull_back:
+                # rule 3: oldest class-i job still waiting in the helper set
+                for idx, h in enumerate(self.h_wait):
+                    if view.cls(h) == i:
+                        self.h_wait.pop(idx)
+                        self.free_slots[i] -= 1
+                        self.a_running.add(h)
+                        break
+        elif j in self.h_running:
+            self.h_running.discard(j)
+            self.helper_free += view.need(j)
+            self._helper_schedule(view)
+        else:  # pragma: no cover - engine guarantees this
+            raise AssertionError(f"departure of unknown job {j}")
+
+    def select(self, view: SystemView):
+        return list(self.a_running) + list(self.h_running)
+
+    # -- observables -----------------------------------------------------------
+
+    @property
+    def p_helper_estimate(self) -> float:
+        """Empirical P_H — fraction of arrivals that USE helper servers.
+
+        This matches the paper's P_H ("needs to use the servers in the helper
+        set"): under BS-π a job parked in the helper queue that is pulled
+        back into A_i by rule 3 never uses a helper server and so does not
+        count.  Under ModifiedBS-π routed == served (irrevocable routing).
+        """
+        if self.n_arrivals == 0:
+            return 0.0
+        return self.n_served_helper / self.n_arrivals
+
+    @property
+    def p_routed_estimate(self) -> float:
+        """Fraction of arrivals that did not find a free A_i slot on arrival."""
+        if self.n_arrivals == 0:
+            return 0.0
+        return self.n_routed_helper / self.n_arrivals
+
+
+class ModifiedBalancedSplitting(BalancedSplitting):
+    """Definition 2 — A→H routing is irrevocable (no rule 3)."""
+
+    pull_back = False

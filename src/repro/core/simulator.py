@@ -1,0 +1,252 @@
+"""Event-driven reference simulator for the multiserver-job model.
+
+The engine owns time, the event heap and job bookkeeping; a
+:class:`~repro.core.policies.base.Policy` decides, at every event, the set of
+jobs that should be running.  Preempt-resume semantics: a preempted job keeps
+its remaining service time and may be resumed later (possibly on different
+servers — the model has no affinity).
+
+Metrics collected per run: mean/percentile response times, mean waiting
+time, queueing probability (P[wait > 0]), utilization, and for BSF policies
+the empirical P_H.  Response time = completion − arrival.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .policies.base import Policy
+from .workload import Trace, Workload
+
+_ARRIVAL = 0
+_DEPARTURE = 1
+
+
+class _View:
+    """SystemView implementation handed to policies (thin facade)."""
+
+    __slots__ = ("sim",)
+
+    def __init__(self, sim: "Simulation"):
+        self.sim = sim
+
+    @property
+    def now(self) -> float:
+        return self.sim.now
+
+    @property
+    def k(self) -> int:
+        return self.sim.k
+
+    def queue(self) -> Sequence[int]:
+        return self.sim.waiting
+
+    def running(self) -> frozenset:
+        return frozenset(self.sim.running)
+
+    def free(self) -> int:
+        return self.sim.free
+
+    def need(self, j: int) -> int:
+        return int(self.sim.trace.need[j])
+
+    def cls(self, j: int) -> int:
+        return int(self.sim.trace.cls[j])
+
+    def arrival(self, j: int) -> float:
+        return float(self.sim.trace.arrival[j])
+
+    def remaining(self, j: int) -> float:
+        return self.sim.remaining_now(j)
+
+    def num_classes(self) -> int:
+        return int(self.sim.trace.cls.max()) + 1 if len(self.sim.trace.cls) else 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    num_jobs: int
+    mean_response: float
+    mean_wait: float
+    p_wait: float                  # queueing probability P[wait > eps]
+    p_helper: float | None         # BSF only
+    mean_response_by_class: np.ndarray
+    p95_response: float
+    utilization: float             # busy server-time / (k * horizon)
+    horizon: float
+
+    def row(self) -> dict:
+        return {
+            "policy": self.policy,
+            "jobs": self.num_jobs,
+            "mean_response": self.mean_response,
+            "mean_wait": self.mean_wait,
+            "p_wait": self.p_wait,
+            "p_helper": self.p_helper,
+            "p95_response": self.p95_response,
+            "utilization": self.utilization,
+        }
+
+
+class Simulation:
+    """One policy, one trace, run to completion of every job."""
+
+    def __init__(self, trace: Trace, policy: Policy, *,
+                 wait_eps: float = 1e-9, max_events: int | None = None):
+        self.trace = trace
+        self.policy = policy
+        self.k = trace.k
+        self.wait_eps = wait_eps
+        self.max_events = max_events or 50 * trace.num_jobs + 10_000
+
+        J = trace.num_jobs
+        self.now = 0.0
+        self.free = self.k
+        self.waiting: list[int] = []
+        self.running: set[int] = set()
+        self.remaining = trace.service.astype(np.float64).copy()
+        self.run_start = np.zeros(J)          # start of current service burst
+        self.start_time = np.full(J, -1.0)    # first time the job ran
+        self.completion = np.full(J, np.nan)
+        self.epoch = np.zeros(J, dtype=np.int64)  # invalidates stale departures
+        self.busy_time = 0.0                  # integral of busy servers dt
+        self._last_t = 0.0
+        self._events: list[tuple[float, int, int, int, int]] = []
+        # (time, kind, seq, job, epoch) — kind breaks ties arrival-first
+        self._seq = 0
+        self.view = _View(self)
+
+    # -- engine ----------------------------------------------------------------
+
+    def _push(self, t: float, kind: int, job: int, epoch: int) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, kind, self._seq, job, epoch))
+
+    def remaining_now(self, j: int) -> float:
+        if j in self.running:
+            return max(0.0, self.remaining[j] - (self.now - self.run_start[j]))
+        return self.remaining[j]
+
+    def _advance_busy(self) -> None:
+        busy = self.k - self.free
+        self.busy_time += busy * (self.now - self._last_t)
+        self._last_t = self.now
+
+    def run(self) -> SimResult:
+        tr, pol = self.trace, self.policy
+        pol.reset(self.view)
+        for j in range(tr.num_jobs):
+            self._push(tr.arrival[j], _ARRIVAL, j, 0)
+
+        n_events = 0
+        while self._events:
+            t, kind, _, j, ep = heapq.heappop(self._events)
+            if kind == _DEPARTURE and ep != self.epoch[j]:
+                continue  # stale (job was preempted since this was scheduled)
+            n_events += 1
+            if n_events > self.max_events:
+                raise RuntimeError(
+                    f"event budget exceeded ({self.max_events}) — "
+                    f"policy {pol.name} likely unstable on this trace")
+            self.now = t
+            self._advance_busy()
+
+            if kind == _ARRIVAL:
+                self.waiting.append(j)
+                pol.on_arrival(self.view, j)
+            else:
+                # complete job j
+                self.running.discard(j)
+                self.free += int(tr.need[j])
+                self.remaining[j] = 0.0
+                self.completion[j] = t
+                pol.on_departure(self.view, j)
+
+            self._reconcile(pol)
+
+        return self._result()
+
+    def _reconcile(self, pol: Policy) -> None:
+        desired = set(pol.select(self.view))
+        # sanity: capacity
+        need_sum = sum(int(self.trace.need[j]) for j in desired)
+        if need_sum > self.k:
+            raise AssertionError(
+                f"policy {pol.name} selected {need_sum} > k={self.k} servers")
+        # preemptions
+        preempted = self.running - desired
+        for j in preempted:
+            if not pol.preemptive:
+                raise AssertionError(
+                    f"nonpreemptive policy {pol.name} tried to preempt job {j}")
+            self.remaining[j] = self.remaining_now(j)
+            self.epoch[j] += 1
+            self.running.discard(j)
+            self.free += int(self.trace.need[j])
+            self.waiting.append(j)
+        if preempted:
+            self.waiting.sort(key=lambda x: self.trace.arrival[x])
+        # starts
+        for j in desired - self.running:
+            if not math.isnan(self.completion[j]):
+                raise AssertionError(f"policy restarted finished job {j}")
+            try:
+                self.waiting.remove(j)
+            except ValueError:
+                raise AssertionError(
+                    f"policy {pol.name} selected job {j} that is not waiting")
+            self.running.add(j)
+            self.free -= int(self.trace.need[j])
+            self.run_start[j] = self.now
+            if self.start_time[j] < 0:
+                self.start_time[j] = self.now
+            self.epoch[j] += 1
+            self._push(self.now + self.remaining[j], _DEPARTURE, j,
+                       int(self.epoch[j]))
+        if self.free < 0:  # pragma: no cover
+            raise AssertionError("negative free servers — engine bug")
+
+    # -- metrics -----------------------------------------------------------------
+
+    def _result(self) -> SimResult:
+        tr = self.trace
+        resp = self.completion - tr.arrival
+        assert not np.isnan(resp).any(), "some jobs never completed"
+        wait = self.start_time - tr.arrival
+        C = int(tr.cls.max()) + 1
+        by_class = np.array([
+            resp[tr.cls == c].mean() if (tr.cls == c).any() else np.nan
+            for c in range(C)
+        ])
+        p_helper = getattr(self.policy, "p_helper_estimate", None)
+        horizon = float(self.now)
+        util = self.busy_time / (self.k * horizon) if horizon > 0 else 0.0
+        return SimResult(
+            policy=self.policy.name,
+            num_jobs=tr.num_jobs,
+            mean_response=float(resp.mean()),
+            mean_wait=float(wait.mean()),
+            p_wait=float((wait > self.wait_eps).mean()),
+            p_helper=p_helper,
+            mean_response_by_class=by_class,
+            p95_response=float(np.percentile(resp, 95)),
+            utilization=float(util),
+            horizon=horizon,
+        )
+
+
+def simulate(wl: Workload, policy: Policy, num_jobs: int = 100_000,
+             seed: int = 0, **kw) -> SimResult:
+    """Sample a trace from the workload and run one simulation."""
+    trace = wl.sample_trace(num_jobs, seed=seed)
+    return Simulation(trace, policy, **kw).run()
+
+
+def simulate_trace(trace: Trace, policy: Policy, **kw) -> SimResult:
+    return Simulation(trace, policy, **kw).run()

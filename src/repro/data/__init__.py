@@ -1,0 +1,5 @@
+from .pipeline import SyntheticTokens, make_train_batches
+from .swf import parse_swf, synthesize_swf, trace_to_workload
+
+__all__ = ["SyntheticTokens", "make_train_batches", "parse_swf",
+           "synthesize_swf", "trace_to_workload"]

@@ -1,0 +1,105 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Grid (B, Kh, nk) — kv blocks iterate fastest; the partial-softmax state
+(m, l, acc) for the G=H/Kh query heads of one kv head lives in VMEM
+scratch across the kv sweep.  ``pos`` masks cache entries beyond the
+current decode position (scalar prefetch).  This is the TPU analogue of
+GPU "flash decoding": the sequence axis is the parallel axis, combined by
+online softmax rather than a second combine kernel because the kv sweep
+is sequential within one grid cell.
+
+    q:   [B, H, D]        block (1, G, D)   indexed (b, kh, 0)
+    k:   [B, Sk, Kh, D]   block (1, bk, 1, D) indexed (b, ki, kh, 0)
+    v:   [B, Sk, Kh, Dv]  block (1, bk, 1, Dv)
+    out: [B, H, Dv]       block (1, G, Dv)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int,
+                   num_kv_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                  # [G, D]
+    k = k_ref[0, :, 0, :]                         # [bk, D]
+    v = v_ref[0, :, 0, :]                         # [bk, Dv]
+    pos = pos_ref[pl.program_id(0)]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos <= pos, s, NEG_INF)       # [G, bk]
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_fwd(q, k, v, pos, *, block_k: int = 512,
+                         interpret: bool = False):
+    """q: [B, H, D]; k: [B, Sk, Kh, D]; v: [B, Sk, Kh, Dv]; pos: [B] int32
+    -> [B, H, Dv].  Entries at positions > pos are masked."""
+    B, H, D = q.shape
+    _, Sk, Kh, Dv = v.shape
+    G = H // Kh
+    block_k = min(block_k, Sk)
+    nk = pl.cdiv(Sk, block_k)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               num_kv_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Kh, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, kh, ki, pos: (b, kh, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, kh, ki, pos: (b, ki, kh, 0)),
+            pl.BlockSpec((1, block_k, 1, Dv),
+                         lambda b, kh, ki, pos: (b, ki, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dv), lambda b, kh, ki, pos: (b, kh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+    # heads are group-major (kv head = h // G), matching the model layout
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Dv), q.dtype),
+        interpret=interpret,
+    )(pos, q, k, v)
+    return out

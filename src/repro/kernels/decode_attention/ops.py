@@ -1,0 +1,13 @@
+"""jit'd public wrapper for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import decode_attention_fwd
+
+
+def decode_attention(q, k, v, pos, *, block_k: int = 512):
+    interpret = jax.default_backend() != "tpu"
+    return decode_attention_fwd(q, k, v, pos, block_k=block_k,
+                                interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, pos):
+    """q: [B, H, D]; k: [B, Sk, Kh, D]; v: [B, Sk, Kh, Dv]; pos: [B]."""
+    B, H, D = q.shape
+    _, Sk, Kh, Dv = v.shape
+    G = H // Kh
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    valid = jnp.arange(Sk)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhv->bhv", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

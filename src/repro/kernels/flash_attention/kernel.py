@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid (B, H, nq, nk) — the kv dimension iterates fastest, so the VMEM
+scratch accumulators (m, l, acc) persist across the kv sweep of one
+(batch, head, q-block) cell.  BlockSpecs stream MXU-aligned tiles:
+
+    q: (1, block_q, 1, D)   indexed (b, qi, h, 0)
+    k: (1, block_k, 1, D)   indexed (b, ki, h // G, 0)   <- GQA via index_map
+    v: (1, block_k, 1, Dv)  indexed (b, ki, h // G, 0)
+    o: (1, block_q, 1, Dv)  indexed (b, qi, h, 0)
+
+Causal blocks with no overlap are masked (the jnp fallback does the same,
+so the oracle comparison is exact).  D and block sizes should be multiples
+of 128 for MXU alignment on real hardware; interpret mode (CPU CI) accepts
+any shape, and the tests sweep both aligned and unaligned shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      scale: float, causal: bool, block_q: int, block_k: int,
+                      num_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]                       # [bq, D]
+    k = k_ref[0, :, 0, :]                       # [bk, D]
+    v = v_ref[0, :, 0, :]                       # [bk, Dv]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: [B, Sq, H, D]; k/v: [B, Sk, Kh, D/Dv] -> [B, Sq, H, Dv]."""
+    B, Sq, H, D = q.shape
+    _, Sk, Kh, Dv = v.shape
+    G = H // Kh
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq, nk = pl.cdiv(Sq, block_q), pl.cdiv(Sk, block_k)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, Dv),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, Dv),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, Dv), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q,)),
+            _vmem((block_q,)),
+            _vmem((block_q, Dv)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype=jnp.float32):
+    """VMEM scratch allocation (works in interpret mode on CPU too)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,15 @@
+"""jit'd public wrapper: Pallas kernel on TPU, interpret mode elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention_fwd
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """Dispatches to the TPU kernel; interpret-mode execution on CPU."""
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)

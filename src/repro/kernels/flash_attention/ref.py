@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Naive O(S²) attention.  q: [B,Sq,H,D]; k/v: [B,Sk,Kh,D/Dv]."""
+    B, Sq, H, D = q.shape
+    _, Sk, Kh, Dv = v.shape
+    G = H // Kh
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhv->bqhv", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

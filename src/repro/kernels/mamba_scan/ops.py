@@ -1,0 +1,13 @@
+"""jit'd public wrapper for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import mamba_scan_fwd
+
+
+def mamba_scan(a, b, c, *, chunk: int = 64, block_d: int = 256):
+    interpret = jax.default_backend() != "tpu"
+    return mamba_scan_fwd(a, b, c, chunk=chunk, block_d=block_d,
+                          interpret=interpret)

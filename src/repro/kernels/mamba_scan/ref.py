@@ -1,0 +1,23 @@
+"""Pure-jnp sequential oracle for the selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(a, b, c):
+    """a/b: [B, S, d_in, N]; c: [B, S, N] -> y [B, S, d_in]."""
+    B, S, d_in, N = a.shape
+    af = a.astype(jnp.float32).transpose(1, 0, 2, 3)
+    bf = b.astype(jnp.float32).transpose(1, 0, 2, 3)
+    cf = c.astype(jnp.float32).transpose(1, 0, 2)
+
+    def step(h, inp):
+        at, bt, ct = inp
+        h = at * h + bt
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    h0 = jnp.zeros((B, d_in, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (af, bf, cf))
+    return ys.transpose(1, 0, 2).astype(a.dtype)

@@ -1,0 +1,4 @@
+from .ops import gmm, pad_groups
+from .ref import gmm_ref
+
+__all__ = ["gmm", "pad_groups", "gmm_ref"]

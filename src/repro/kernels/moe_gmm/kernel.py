@@ -1,0 +1,97 @@
+"""Pallas TPU grouped matmul (megablox-style) for MoE expert FFNs.
+
+Computes ``out[i] = x[i] @ W[e(i)]`` where tokens are pre-sorted by expert
+and every expert's row-group is padded to a multiple of ``block_m`` — the
+``block_expert`` map (expert id per m-block) is a *scalar-prefetch* input,
+so the W BlockSpec can index the right expert's weights per grid cell:
+
+    grid (nm, nn, nk):  x block (block_m, block_k) @ w block (block_k,
+    block_n) accumulated over nk in VMEM scratch.
+
+This replaces the dense [E, C, D] einsum dispatch for the sorted/dropless
+execution path: no capacity padding waste and no flops on empty slots
+(blocks of fully-padded rows are skipped via @pl.when on the row validity
+count, also prefetched).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(block_expert_ref, nvalid_ref, x_ref, w_ref, o_ref, acc_scr,
+                *, num_k_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    mi = pl.program_id(0)
+    valid = nvalid_ref[mi] > 0
+
+    @pl.when(valid)
+    def _mac():
+        acc_scr[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def gmm(x, w, block_expert, nvalid, *, block_m: int = 128,
+        block_n: int = 128, block_k: int = 128, interpret: bool = False):
+    """x: [M, K] sorted-by-expert (M % block_m == 0); w: [E, K, N];
+    block_expert: [M // block_m] int32 expert id per row block;
+    nvalid: [M // block_m] int32 count of non-padded rows per block.
+    -> out [M, N]."""
+    M, K = x.shape
+    E, _, N = w.shape
+    nm = M // block_m
+    nn = pl.cdiv(N, block_n)
+    nk = pl.cdiv(K, block_k)
+    kernel = functools.partial(_gmm_kernel, num_k_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda mi, ni, ki, be, nv: (mi, ki)),
+            pl.BlockSpec((1, block_k, block_n),
+                         lambda mi, ni, ki, be, nv: (be[mi], ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda mi, ni, ki, be, nv: (mi, ni)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(block_expert, nvalid, x, w)
+
+
+def pad_groups(x_groups, block_m: int):
+    """Static capacity path: x_groups [E, C, K] -> (x [E*Cp, K],
+    block_expert, nvalid) with C padded to a block_m multiple."""
+    E, C, K = x_groups.shape
+    Cp = (C + block_m - 1) // block_m * block_m
+    pad = Cp - C
+    xg = jnp.pad(x_groups, ((0, 0), (0, pad), (0, 0)))
+    x = xg.reshape(E * Cp, K)
+    blocks_per_e = Cp // block_m
+    block_expert = jnp.repeat(jnp.arange(E, dtype=jnp.int32), blocks_per_e)
+    row_valid = jnp.concatenate(
+        [jnp.ones(C, jnp.int32), jnp.zeros(pad, jnp.int32)])
+    nvalid = row_valid.reshape(blocks_per_e, block_m).sum(1)
+    nvalid = jnp.tile(nvalid, E)
+    return x, block_expert, nvalid

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the grouped matmul."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import gmm as _gmm
+from .kernel import pad_groups
+
+
+def gmm(x, w, block_expert, nvalid, *, block_m: int = 128,
+        block_n: int = 128, block_k: int = 128):
+    interpret = jax.default_backend() != "tpu"
+    return _gmm(x, w, block_expert, nvalid, block_m=block_m,
+                block_n=block_n, block_k=block_k, interpret=interpret)
+
+
+__all__ = ["gmm", "pad_groups"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w, block_expert, nvalid, *, block_m: int):
+    """out[i] = x[i] @ w[expert_of_block(i // block_m)], zero for blocks
+    with no valid rows."""
+    M, K = x.shape
+    nm = M // block_m
+    xb = x.reshape(nm, block_m, K)
+    wb = w[block_expert]                              # [nm, K, N]
+    out = jnp.einsum("mbk,mkn->mbn", xb, wb)
+    out = jnp.where((nvalid > 0)[:, None, None], out, 0.0)
+    return out.reshape(M, -1).astype(x.dtype)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the chunked RWKV6 (Finch) WKV recurrence.
+
+Grid (B, H, n_chunks) — chunks iterate fastest so the [N, N] state matrix
+persists in VMEM scratch across the sequential chunk sweep of one
+(batch, head) cell.  Within a chunk of length T:
+
+    c        = cumsum(logw)                       (cumulative log decay)
+    y_inter  = (r · e^{c_prev}) @ S
+    A[i,j]   = (r_i e^{c_prev_i}) · (k_j e^{-c_j})   masked j<i
+    A[i,i]   = r_i · (u ⊙ k_i)                       (bonus)
+    y        = y_inter + A @ V
+    S'       = e^{c_T} S + (k e^{c_T - c})ᵀ V
+
+All chunk-local tensors ([T, N] and [T, T]) are VMEM-resident; HBM traffic
+is the r/k/v/w chunk loads and the y chunk store — the property the
+roofline's kernel-adjusted memory term models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)     # [T, N]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)     # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)              # [N]
+
+    c = jnp.cumsum(w, axis=0)
+    c_prev = c - w
+    r_dec = r * jnp.exp(c_prev)
+    k_dec = k * jnp.exp(-c)
+
+    S = s_scr[...]
+    y = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    scores = jax.lax.dot_general(r_dec, k_dec, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(ii > jj, scores, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)                 # [T]
+    scores = scores + jnp.where(ii == jj, diag[:, None], 0.0)
+    y = y + jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    cT = c[-1]                                    # [N]
+    S_new = jnp.exp(cT)[:, None] * S + jax.lax.dot_general(
+        k_dec * jnp.exp(cT)[None, :], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = S_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_fwd(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/logw: [B, S, H, N]; u: [H, N] -> y [B, S, H, N]."""
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    nc = pl.cdiv(S, chunk)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    seq_spec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, ci: (b, ci, h, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, N), lambda b, h, ci: (h, 0))],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, N), r.dtype),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,12 @@
+"""jit'd public wrapper for the WKV6 kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import wkv_fwd
+
+
+def wkv(r, k, v, logw, u, *, chunk: int = 64):
+    interpret = jax.default_backend() != "tpu"
+    return wkv_fwd(r, k, v, logw, u, chunk=chunk, interpret=interpret)

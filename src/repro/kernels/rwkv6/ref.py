@@ -1,0 +1,30 @@
+"""Pure-jnp sequential oracle for WKV6 (exact recurrence, no chunking)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u):
+    """r/k/v/logw: [B, S, H, N]; u: [H, N] -> y [B, S, H, N].
+
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t);  S_t = diag(e^{w_t}) S_{t-1}
+    + k_tᵀ v_t.  Sequential scan over t — the exact recurrence.
+    """
+    B, S, H, N = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for x in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+
+    def step(S_c, inp):
+        rt, kt, vt, wt = inp                     # [B, H, N]
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       S_c + uf[None, :, :, None] * kv)
+        S_new = jnp.exp(wt)[..., None] * S_c + kv
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)

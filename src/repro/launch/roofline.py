@@ -1,0 +1,195 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link bandwidth ~50 GB/s  (we charge the bottleneck single link)
+
+    compute_term    = HLO_FLOPs            / peak
+    memory_term     = HLO_bytes_accessed   / HBM_bw
+    collective_term = collective_wire_bytes/ ICI_bw
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (per-device,
+post-SPMD).  collective_wire_bytes is parsed from the optimized HLO text:
+for each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we take per-device *wire bytes under a ring model* on
+the op's replica-group size g:
+
+    all-gather, reduce-scatter : (g-1)/g × buffer
+    all-reduce                 : 2(g-1)/g × buffer
+    all-to-all                 : (g-1)/g × buffer
+    collective-permute         : buffer
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (bottleneck single-link model)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(?P<result>\(?[\w\[\],{}\s]*?\)?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(text: str) -> int:
+    """Sum byte sizes of every `dtype[dims]` shape appearing in text."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dt])
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_type: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, op: str, wire: float):
+        self.wire_bytes += wire
+        t = self.by_type.setdefault(op, {"wire_bytes": 0.0, "count": 0})
+        t["wire_bytes"] += wire
+        t["count"] += 1
+        self.count += 1
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    """Per-device wire bytes of every collective in the optimized HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        g = _group_size(line, total_devices)
+        if g <= 1:
+            continue
+        # operand text = inside the call parens; result text = lhs type
+        call = line[m.end():]
+        depth, end = 1, 0
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[:end]
+        operand_bytes = _type_bytes(operands)
+        result_bytes = _type_bytes(m.group("result"))
+        if op == "all-gather":
+            wire = result_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = operand_bytes * (g - 1) / g
+        elif op == "all-reduce":
+            wire = operand_bytes * 2 * (g - 1) / g
+        elif op == "all-to-all":
+            wire = operand_bytes * (g - 1) / g
+        else:  # collective-permute
+            wire = operand_bytes
+        stats.add(op, wire)
+    return stats
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """6·N_active·D (train) or 2·N_active·D (forward-only), global."""
+    from ..models.model import active_param_count
+    n = active_param_count(cfg)
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch          # decode: one token per sequence
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per-device HLO flops
+    bytes_accessed: float         # per-device HLO bytes
+    wire_bytes: float             # per-device collective wire bytes
+    model_flops_per_device: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops_per_device / self.flops if self.flops else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline-optimal step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute-time / achievable step time — the score we report.
+
+        = (model_flops/peak) / max(compute, memory, collective): how close
+        the cell is to spending all its time on useful peak-rate math."""
+        t_useful = self.model_flops_per_device / PEAK_FLOPS
+        return t_useful / self.bound_s if self.bound_s else 0.0
+
+    def row(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "wire_bytes": self.wire_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

@@ -1,0 +1,110 @@
+"""Serving entry point: Balanced-Splitting admission over a chip fleet.
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet 512 --requests 200
+
+Builds (arch × context-bucket) request classes, partitions the fleet per
+eq. (2), and replays a Poisson request stream through the engine printing
+the admission/queueing statistics next to the paper's Erlang bound.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.theory import analyze
+from repro.serve.engine import Request, RequestClass, ServingEngine
+from repro.serve.kv_cache import chips_needed
+
+
+def default_classes(fleet: int) -> list[RequestClass]:
+    mk = lambda name, arch, bucket, chips, mean, alpha: RequestClass(  # noqa
+        name=name, cfg=get_config(arch), bucket=bucket, chips=chips,
+        mean_service_s=mean, alpha=alpha)
+    return [
+        mk("yi9b-8k", "yi_9b", 8192, 2, 1.0, 0.55),
+        mk("starcoder-8k", "starcoder2_7b", 8192, 2, 1.5, 0.25),
+        mk("llamav-32k", "llama_3_2_vision_90b", 32768, 16, 8.0, 0.12),
+        mk("deepseek-32k", "deepseek_v3_671b", 32768, 64, 20.0, 0.08),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fleet", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--load", type=float, default=0.85)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--execute", type=int, default=0,
+                    help="actually run N of the requests through "
+                    "prefill/decode (reduced configs on CPU)")
+    args = ap.parse_args()
+
+    classes = default_classes(args.fleet)
+    eng = ServingEngine(classes, args.fleet, seed=args.seed)
+    print(eng.partition.summary())
+    rep = analyze(_as_workload(classes, args.fleet, args.load),
+                  eng.partition.as_core_partition())
+    print(f"Erlang bound on P_H (Cor. 1): {rep.p_helper_modified:.4f}")
+
+    rng = np.random.default_rng(args.seed)
+    demand = sum(c.alpha * c.mean_service_s * c.chips for c in classes)
+    lam = args.load * args.fleet / demand
+    t = 0.0
+    import heapq
+    heap = []
+    names = [c.name for c in classes]
+    probs = np.array([c.alpha for c in classes])
+    for rid in range(args.requests):
+        t += rng.exponential(1.0 / lam)
+        i = rng.choice(len(classes), p=probs)
+        req = Request(rid=rid, cls_name=names[i],
+                      prompt=rng.integers(0, 100, size=16), arrival=t)
+        heapq.heappush(heap, (t, 0, rid, "arrive", req))
+    # replay
+    jid_of = {}
+    seq = args.requests
+    while heap:
+        now, _, rid, kind, req = heapq.heappop(heap)
+        if kind == "arrive":
+            eng.submit(req, now)
+            jid = max(eng._jobs)          # submitted job id
+            jid_of[rid] = jid
+            job = eng.sched.running.get(jid)
+            if job is not None:
+                svc = rng.exponential(
+                    eng.classes[eng.by_name[req.cls_name]].mean_service_s)
+                heapq.heappush(heap, (job.start + svc, 1, rid, "finish", req))
+        else:
+            eng.complete(jid_of[rid], now)
+            for j in list(eng.sched.running.values()):
+                r = eng._jobs[j.jid]
+                if r.finished_at is None and not any(
+                        e[2] == r.rid and e[3] == "finish" for e in heap):
+                    svc = rng.exponential(eng.classes[j.cls].mean_service_s)
+                    heapq.heappush(heap, (j.start + svc, 1, r.rid, "finish",
+                                          r))
+    print(f"requests={args.requests} P_H={eng.p_helper:.4f} "
+          f"mean_wait={eng.mean_wait():.4f}s "
+          f"direct={eng.metrics['admitted_direct']} "
+          f"helper={eng.metrics['via_helper']}")
+    if args.execute:
+        done = 0
+        for jid, req in list(eng._jobs.items())[: args.execute]:
+            out = eng.run_request(jid)
+            done += 1
+            print(f"  executed request {out.rid}: {len(out.output)} tokens")
+        print(f"executed {done} requests end-to-end (reduced configs)")
+
+
+def _as_workload(classes, fleet, load):
+    from repro.core.workload import Exp, JobClass, Workload
+    jc = tuple(JobClass(c.name, c.chips, Exp(c.mean_service_s), c.alpha)
+               for c in classes)
+    return Workload(k=fleet, lam=1.0, classes=jc).with_load(load)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi_9b --steps 100 \
+        --reduced --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+``--reduced`` trains the smoke-scale config on the local devices (the CPU
+path used by examples/CI); full-scale runs use the production mesh on a
+real fleet with the same code.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.optim.optimizer import AdamWConfig
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n = len(jax.devices())
+    mesh = make_mesh((n, 1), ("data", "model"))
+    trainer = Trainer(
+        cfg=cfg, mesh=mesh, global_batch=args.batch, seq_len=args.seq,
+        opt_cfg=AdamWConfig(lr=args.lr, total_steps=args.steps),
+        microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, seed=args.seed,
+        on_metrics=lambda s, m: print(
+            f"step {s:5d}  loss {m.get('loss', float('nan')):.4f}  "
+            f"lr {m.get('lr', 0):.2e}  gnorm {m.get('grad_norm', 0):.3f}",
+            flush=True))
+    result = trainer.run(args.steps)
+    print(f"done: {len(result['history'])} log points, "
+          f"{result['steps_per_s']:.3f} steps/s")
+    first, last = result["history"][0], result["history"][-1]
+    print(f"loss {first['loss']:.4f} -> {last['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

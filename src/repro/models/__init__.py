@@ -1,0 +1,5 @@
+from .config import ArchConfig, MLACfg, MambaCfg, MoECfg
+from .model import Model, active_param_count, num_params, param_defs
+
+__all__ = ["ArchConfig", "MLACfg", "MambaCfg", "MoECfg", "Model",
+           "active_param_count", "num_params", "param_defs"]

@@ -1,0 +1,171 @@
+"""Mamba-1 selective-scan block (Jamba's SSM layer).
+
+The sequence recurrence  h_t = dA_t ⊙ h_{t-1} + dB_t x_t  is computed in
+*chunks*: within a chunk, a ``lax.associative_scan`` over the (a, b) monoid
+((a2,b2)∘(a1,b1) = (a1·a2, a2·b1 + b2)); across chunks, an O(1)-state carry.
+Working memory is O(B · chunk · d_inner · d_state) — independent of S, which
+is what lets the long_500k jamba cells compile.  d_inner carries the 'tp'
+logical axis so the state tensor shards over the model axis.
+
+Decode is the O(1) recurrence step with a (d_conv−1)-token conv buffer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import PDef
+
+
+def _dims(cfg: ArchConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, m.d_state, m.d_conv, dt_rank
+
+
+def mamba_param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    d_in, N, K, R = _dims(cfg)
+    return {
+        "in_proj": PDef((d, 2 * d_in), ("fsdp", "tp"), "scaled"),
+        "conv_w": PDef((K, d_in), (None, "tp"), "scaled"),
+        "conv_b": PDef((d_in,), ("tp",), "zeros"),
+        "x_dt": PDef((d_in, R), ("tp", None), "scaled"),
+        "dt_proj": PDef((R, d_in), (None, "tp"), "scaled"),
+        "dt_bias": PDef((d_in,), ("tp",), "mamba_dt"),
+        "x_B": PDef((d_in, N), ("tp", None), "scaled"),
+        "x_C": PDef((d_in, N), ("tp", None), "scaled"),
+        "A_log": PDef((d_in, N), ("tp", None), "mamba_A"),
+        "D_skip": PDef((d_in,), ("tp",), "ones"),
+        "out_proj": PDef((d_in, d), ("tp", "fsdp"), "scaled"),
+    }
+
+
+def _ssm_inputs(p, xz, cfg: ArchConfig):
+    """Shared projections: xz [.., 2*d_in] -> (x, z, dt, B, C)."""
+    d_in, N, _, _ = _dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z
+
+
+def _dt_B_C(p, x):
+    """x [..., d_in] (post-conv, post-silu) -> (dt, B, C) in f32."""
+    xf = x.astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dr->...r", xf, p["x_dt"].astype(jnp.float32))
+        @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    B = jnp.einsum("...d,dn->...n", xf, p["x_B"].astype(jnp.float32))
+    C = jnp.einsum("...d,dn->...n", xf, p["x_C"].astype(jnp.float32))
+    return dt, B, C
+
+
+def _causal_conv_chunk(x, conv_state, w, b):
+    """x [Bt, T, d_in]; conv_state [Bt, K-1, d_in] -> (y, new_state)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    # depthwise causal conv: y_t = sum_k w_k * x_{t-K+1+k}
+    T = x.shape[1]
+    y = sum(xp[:, i:i + T] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else conv_state
+    return y, new_state
+
+
+def mamba_apply(p, x, cfg: ArchConfig, state=None):
+    """Full-sequence (train/prefill) mamba block.
+
+    x: [B, S, D] -> (y [B, S, D], final_state dict) — state returned so
+    prefill can seed decode.
+    """
+    from ..parallel.sharding import shard_constraint, DEFAULT_RULES
+    d_in, N, K, _ = _dims(cfg)
+    Bt, S, D = x.shape
+    chunk = min(cfg.mamba.chunk, S)
+    if S % chunk:
+        chunk = S
+    n_chunks = S // chunk
+    dt_c = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xz = shard_constraint(xz, DEFAULT_RULES, ("batch", None, "tp"))
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        state = init_mamba_state(cfg, Bt, dt_c)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # [d_in, N]
+
+    xs = xin.reshape(Bt, n_chunks, chunk, d_in).swapaxes(0, 1)
+
+    def body(carry, xc):
+        h, conv = carry                                 # h [Bt,d_in,N] f32
+        xc_conv, conv = _causal_conv_chunk(xc, conv, p["conv_w"], p["conv_b"])
+        u = jax.nn.silu(xc_conv)
+        dt, Bm, Cm = _dt_B_C(p, u)                      # [Bt,T,d_in],[Bt,T,N]
+        a = jnp.exp(dt[..., None] * A)                  # [Bt,T,d_in,N]
+        b = (dt[..., None] * Bm[:, :, None, :]) * u.astype(jnp.float32)[..., None]
+        # within-chunk scan
+        a_cum, b_cum = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, b), axis=1)
+        hs = a_cum * h[:, None] + b_cum                 # [Bt,T,d_in,N]
+        h_new = hs[:, -1]
+        y = jnp.einsum("btdn,btn->btd", hs, Cm)
+        y = y + u.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+        return (h_new, conv), y.astype(dt_c)
+
+    with jax.named_scope("mambakern"):
+        (h, conv), ys = jax.lax.scan(body, (state["h"], state["conv"]), xs)
+    y = ys.swapaxes(0, 1).reshape(Bt, S, d_in)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"h": h, "conv": conv}
+
+
+def mamba_decode(p, x, cfg: ArchConfig, state):
+    """One-token step.  x: [B, 1, D] -> (y [B, 1, D], new_state)."""
+    d_in, N, K, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc_conv, conv = _causal_conv_chunk(xin, state["conv"], p["conv_w"],
+                                       p["conv_b"])
+    u = jax.nn.silu(xc_conv)                            # [B,1,d_in]
+    dt, Bm, Cm = _dt_B_C(p, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A)                  # [B,d_in,N]
+    b = (dt[:, 0, :, None] * Bm[:, 0, None, :]) * \
+        u.astype(jnp.float32)[:, 0, :, None]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+    y = y + u.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"h": h, "conv": conv}
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    d_in, N, K, _ = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_in, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, d_in), dtype),
+    }
+
+
+def mamba_state_specs(cfg: ArchConfig, batch: int, dtype) -> dict:
+    d_in, N, K, _ = _dims(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, d_in, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, d_in), jnp.dtype(dtype)),
+    }
+
+
+def mamba_state_axes(cfg: ArchConfig) -> dict:
+    """Logical sharding axes for the decode state."""
+    return {
+        "h": ("batch", "tp", None),
+        "conv": ("batch", None, "tp"),
+    }

@@ -1,0 +1,304 @@
+"""Model facade: embeddings, stages, head, loss, prefill/decode entry points.
+
+One :class:`Model` serves every family.  The three lowered entry points are
+
+  ``loss_fn(params, batch)``          -> (scalar loss, metrics)   [train_*]
+  ``prefill(params, inputs)``         -> (last logits, caches)    [prefill_*]
+  ``decode_step(params, caches, tok, pos)`` -> (logits, caches)   [decode_*/long_*]
+
+``input_specs`` / ``cache_specs`` build ShapeDtypeStruct stand-ins so the
+multi-pod dry-run lowers every cell without allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (PDef, chunked_cross_entropy, init_params, rms_norm,
+                     rope_angles, shapes_tree, axes_tree, stack_defs)
+from . import transformer as T
+
+
+def _vocab_padded(cfg: ArchConfig) -> int:
+    return (cfg.vocab_size + 255) // 256 * 256
+
+
+# --------------------------------------------------------------------------
+# Parameter tree
+# --------------------------------------------------------------------------
+
+
+def param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    d, Vp = cfg.d_model, _vocab_padded(cfg)
+    stages = T.decoder_stages(cfg)
+    defs: dict[str, Any] = {
+        "embed": PDef((Vp, d), ("vocab", "fsdp"), "normal"),
+        "stages": tuple(T.stage_param_defs(cfg, s) for s in stages),
+        "final_norm": PDef((d,), (None,), "ones"),
+        "head": PDef((d, Vp), ("fsdp", "vocab"), "scaled"),
+    }
+    if cfg.family == "encdec":
+        enc = T.encoder_stages(cfg)
+        defs["encoder"] = {
+            "stages": tuple(T.stage_param_defs(cfg, s) for s in enc),
+            "final_norm": PDef((d,), (None,), "ones"),
+        }
+    if cfg.mtp:
+        spec = T.LayerSpec("mla" if cfg.mla else "attn", ffn="moe")
+        defs["mtp"] = {
+            "proj": PDef((2 * d, d), ("fsdp", None), "scaled"),
+            "norm_h": PDef((d,), (None,), "ones"),
+            "norm_e": PDef((d,), (None,), "ones"),
+            "layer": stack_defs(T.layer_param_defs(cfg, spec), 1),
+        }
+    return defs
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Per-token active params (= total minus inactive routed experts)."""
+    total = num_params(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_moe = sum(
+        sum(1 for spec in s.pattern if spec.ffn == "moe") * s.repeats
+        for s in T.decoder_stages(cfg))
+    if cfg.mtp:
+        n_moe += 1
+    inactive = n_moe * (m.num_experts - m.top_k) * 3 * cfg.d_model * \
+        m.d_ff_expert
+    return total - inactive
+
+
+def num_params(cfg: ArchConfig) -> int:
+    defs = param_defs(cfg)
+    return sum(int(math.prod(d.shape)) for d in jax.tree.leaves(
+        defs, is_leaf=lambda x: isinstance(x, PDef)))
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def _rope_dim(cfg: ArchConfig) -> int:
+    return cfg.mla.rope_dim if cfg.mla is not None else cfg.head_dim
+
+
+def _make_ctx(cfg: ArchConfig, mode: str, positions, src=None, pos=None):
+    sin, cos = rope_angles(positions, _rope_dim(cfg), cfg.rope_theta)
+    return {"mode": mode, "rope": (sin, cos), "src": src, "pos": pos}
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    from .layers import _act
+    dt = jnp.dtype(cfg.compute_dtype)
+    return _act(params["embed"][tokens].astype(dt), ("batch", None, None))
+
+
+def _encode(cfg: ArchConfig, params, frames):
+    """Seamless encoder over stubbed frame embeddings [B, S_src, D]."""
+    enc = params["encoder"]
+    ctx = _make_ctx(cfg, "train", jnp.arange(frames.shape[1]))
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x, _, _ = T.run_stages(cfg, T.encoder_stages(cfg), enc["stages"], x, ctx)
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def _backbone(cfg: ArchConfig, params, tokens, mode, *, src=None,
+              caches=None, pos=None):
+    positions = (jnp.arange(tokens.shape[1]) if mode != "decode"
+                 else jnp.asarray(pos)[None])
+    ctx = _make_ctx(cfg, mode, positions, src=src, pos=pos)
+    x = _embed(cfg, params, tokens)
+    x, new_caches, aux = T.run_stages(cfg, T.decoder_stages(cfg),
+                                      params["stages"], x, ctx, caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def _source(cfg: ArchConfig, params, batch):
+    """Cross-attention source tokens for vlm / encdec, else None."""
+    if cfg.family == "vlm":
+        return batch["image_emb"]
+    if cfg.family == "encdec":
+        return _encode(cfg, params, batch["frames"])
+    return None
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    """Next-token CE (+ MoE aux, + MTP aux for deepseek).  Returns
+    (loss, metrics)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    src = _source(cfg, params, batch)
+    x, _, aux = _backbone(cfg, params, tokens, "train", src=src)
+    nll, n_tok = chunked_cross_entropy(
+        x, params["head"], labels, num_chunks=cfg.loss_chunk,
+        valid_vocab=cfg.vocab_size)
+    loss = nll
+    metrics = {"nll": nll, "tokens": n_tok}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+        metrics["moe_aux"] = aux
+    if cfg.mtp:
+        mtp_nll = _mtp_loss(cfg, params, x, labels)
+        loss = loss + 0.3 * mtp_nll
+        metrics["mtp_nll"] = mtp_nll
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(cfg: ArchConfig, params, h, labels):
+    """DeepSeek-v3 multi-token prediction: one extra layer predicts t+2."""
+    p = params["mtp"]
+    emb_next = _embed(cfg, params, labels)            # token t+1 embeddings
+    z = jnp.concatenate(
+        [rms_norm(h, p["norm_h"], cfg.norm_eps),
+         rms_norm(emb_next, p["norm_e"], cfg.norm_eps)], axis=-1)
+    z = jnp.einsum("bsd,de->bse", z, p["proj"].astype(z.dtype))
+    spec = T.LayerSpec("mla" if cfg.mla else "attn", ffn="moe")
+    ctx = _make_ctx(cfg, "train", jnp.arange(z.shape[1]))
+    lp = jax.tree.map(lambda a: a[0], p["layer"])
+    z, _, _ = T.apply_layer(cfg, spec, lp, z, ctx, None)
+    # labels for t+2: shift left, mask the last column
+    mtp_labels = jnp.concatenate(
+        [labels[:, 1:], jnp.zeros_like(labels[:, :1])], axis=1)
+    nll, _ = chunked_cross_entropy(
+        z, params["head"], mtp_labels, num_chunks=cfg.loss_chunk,
+        valid_vocab=cfg.vocab_size,
+        mask_last=True)
+    return nll
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Full-sequence forward returning (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    src = _source(cfg, params, batch)
+    x, caches, _ = _backbone(cfg, params, tokens, "prefill", src=src)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                        params["head"].astype(x.dtype))
+    return logits[:, :cfg.vocab_size], caches
+
+
+def decode_step(cfg: ArchConfig, params, caches, tokens, pos):
+    """One-token step: tokens [B, 1], pos scalar int32."""
+    x, caches, _ = _backbone(cfg, params, tokens, "decode", caches=caches,
+                             pos=pos)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                        params["head"].astype(x.dtype))
+    return logits[:, :cfg.vocab_size], caches
+
+
+# --------------------------------------------------------------------------
+# Input / cache specs (ShapeDtypeStruct stand-ins + logical axes)
+# --------------------------------------------------------------------------
+
+
+def _extra_inputs(cfg: ArchConfig, batch: int, seq: int, what: str):
+    dt = jnp.dtype(cfg.compute_dtype)
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        shp = (batch, cfg.num_image_tokens, cfg.d_model)
+        out["image_emb"] = (jax.ShapeDtypeStruct(shp, dt) if what == "spec"
+                            else ("batch", None, None))
+    if cfg.family == "encdec":
+        n_frames = cfg.num_frame_tokens or seq
+        shp = (batch, n_frames, cfg.d_model)
+        out["frames"] = (jax.ShapeDtypeStruct(shp, dt) if what == "spec"
+                         else ("batch", None, None))
+    return out
+
+
+def train_inputs(cfg: ArchConfig, batch: int, seq: int, what: str = "spec"):
+    tok = (jax.ShapeDtypeStruct((batch, seq), jnp.int32) if what == "spec"
+           else ("batch", None))
+    out = {"tokens": tok, "labels": tok}
+    out.update(_extra_inputs(cfg, batch, seq, what))
+    return out
+
+
+def prefill_inputs(cfg: ArchConfig, batch: int, seq: int, what: str = "spec"):
+    tok = (jax.ShapeDtypeStruct((batch, seq), jnp.int32) if what == "spec"
+           else ("batch", None))
+    out = {"tokens": tok}
+    out.update(_extra_inputs(cfg, batch, seq, what))
+    return out
+
+
+def _src_len(cfg: ArchConfig, seq: int) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_image_tokens
+    if cfg.family == "encdec":
+        return cfg.num_frame_tokens or seq
+    return 0
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    return T.cache_template(cfg, T.decoder_stages(cfg), batch, seq,
+                            _src_len(cfg, seq), "spec")
+
+
+def cache_axes(cfg: ArchConfig):
+    return T.cache_template(cfg, T.decoder_stages(cfg), 1, 1, 1, "axes")
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int):
+    return T.cache_template(cfg, T.decoder_stages(cfg), batch, seq,
+                            _src_len(cfg, seq), "init")
+
+
+def decode_inputs(cfg: ArchConfig, batch: int, seq: int, what: str = "spec"):
+    if what == "spec":
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "caches": cache_specs(cfg, batch, seq),
+        }
+    return {
+        "tokens": ("batch", None),
+        "pos": (),
+        "caches": cache_axes(cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# Facade
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    def param_defs(self):
+        return param_defs(self.cfg)
+
+    def param_specs(self):
+        return shapes_tree(self.param_defs())
+
+    def param_axes(self):
+        return axes_tree(self.param_defs())
+
+    def init(self, rng):
+        return init_params(self.param_defs(), rng)
+
+    def loss(self, params, batch):
+        return loss_fn(self.cfg, params, batch)
+
+    def prefill(self, params, batch):
+        return prefill(self.cfg, params, batch)
+
+    def decode_step(self, params, caches, tokens, pos):
+        return decode_step(self.cfg, params, caches, tokens, pos)
+
+    def num_params(self) -> int:
+        return num_params(self.cfg)
+
+    def active_params(self) -> int:
+        return active_param_count(self.cfg)

@@ -1,0 +1,245 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Per head (size N), the WKV state is an [N, N] matrix S and
+
+    y_t = (S_{t-1} + diag(u) k_tᵀ v_t) r_t
+    S_t = diag(exp(-exp(w_t))) S_{t-1} + k_tᵀ v_t
+
+with w_t *data-dependent* (the defining RWKV6 feature; a LoRA on x).  We
+compute it chunk-parallel: within a chunk of length T the pairwise decay
+products exp(c_i − c_j) (c = cumulative log-decay) give an attention-like
+[T, T] intra-chunk matrix, and the inter-chunk part is a single [N, N]
+carry — O(1) state, which is why rwkv6 runs the long_500k cell.
+
+Token shift uses the static learned lerp (v5 form) — the v6 LoRA'd shift is
+a minor refinement orthogonal to the data-dependent decay; noted in DESIGN.
+Channel-mix is the standard relu² FFN with token shift.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import PDef
+
+_DECAY_LORA = 64
+
+
+def _dims(cfg: ArchConfig):
+    H = cfg.num_heads
+    N = cfg.d_model // H
+    return H, N
+
+
+def rwkv_time_param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    H, N = _dims(cfg)
+    r = _DECAY_LORA
+    return {
+        "mix_r": PDef((d,), (None,), "ones"),
+        "mix_k": PDef((d,), (None,), "ones"),
+        "mix_v": PDef((d,), (None,), "ones"),
+        "mix_g": PDef((d,), (None,), "ones"),
+        "mix_w": PDef((d,), (None,), "ones"),
+        "w_r": PDef((d, d), ("fsdp", "tp"), "scaled"),
+        "w_k": PDef((d, d), ("fsdp", "tp"), "scaled"),
+        "w_v": PDef((d, d), ("fsdp", "tp"), "scaled"),
+        "w_g": PDef((d, d), ("fsdp", "tp"), "scaled"),
+        "w_o": PDef((d, d), ("tp", "fsdp"), "scaled"),
+        "decay_w1": PDef((d, r), (None, None), "scaled"),
+        "decay_w2": PDef((r, d), (None, "tp"), "zeros"),
+        "decay_bias": PDef((d,), ("tp",), "rwkv_decay"),
+        "bonus_u": PDef((H, N), ("tp", None), "zeros"),
+        "ln_x": PDef((d,), (None,), "ones"),  # per-head groupnorm gain
+    }
+
+
+def rwkv_channel_param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": PDef((d,), (None,), "ones"),
+        "mix_r": PDef((d,), (None,), "ones"),
+        "w_k": PDef((d, f), ("fsdp", "tp"), "scaled"),
+        "w_v": PDef((f, d), ("tp", "fsdp"), "scaled"),
+        "w_r": PDef((d, d), ("fsdp", "tp"), "scaled"),
+    }
+
+
+def _token_shift(x, prev):
+    """x [B,S,D], prev [B,1,D] (last token of previous segment)."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _group_norm(x, gain, H, N, eps=64e-5):
+    """Per-head groupnorm on [B, S, H*N]."""
+    B, S, _ = x.shape
+    xf = x.astype(jnp.float32).reshape(B, S, H, N)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, H * N) * gain.astype(jnp.float32)).astype(x.dtype)
+
+
+def wkv_chunked(r, k, v, logw, u, S0, *, chunk: int):
+    """Chunk-parallel WKV6.
+
+    r,k,v: [B, S, H, N];  logw: [B, S, H, N] (log decay, <= 0);  u: [H, N];
+    S0: [B, H, N, N] f32 carry.  Returns (y [B,S,H,N], S_final).
+    """
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+
+    def reshape(x):
+        return x.reshape(B, n, chunk, H, N).swapaxes(0, 1)
+
+    rs, ks, vs, ws = map(reshape, (r, k, v, logw))
+    from .layers import _act
+    S0 = _act(S0, ("batch", "heads", None, None))
+
+    def body(S_c, inp):
+        rc, kc, vc, wc = inp                       # [B, T, H, N]
+        rc = rc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        c = jnp.cumsum(wc, axis=1)                 # inclusive cum log decay
+        c_prev = c - wc                            # exclusive
+        # inter-chunk:  y_i += (r_i ⊙ exp(c_prev_i)) @ S_c
+        r_dec = rc * jnp.exp(c_prev)
+        y = jnp.einsum("bthn,bhnm->bthm", r_dec, S_c)
+        # intra-chunk:  A[i,j] = Σ_n r_i exp(c_prev_i − c_j) k_j   (j < i)
+        #               A[i,i] = Σ_n r_i u k_i
+        k_dec = kc * jnp.exp(-c)                   # k_j e^{−c_j}
+        scores = jnp.einsum("bihn,bjhn->bhij", r_dec, k_dec)
+        ii = jnp.arange(chunk)
+        mask = ii[:, None] > ii[None, :]
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        diag = jnp.einsum("bihn,hn,bihn->bhi", rc, u.astype(jnp.float32), kc)
+        scores = scores + jnp.eye(chunk, dtype=scores.dtype) * diag[..., None]
+        y = y + jnp.einsum("bhij,bjhn->bihn", scores, vc)
+        # carry update: S' = e^{c_T} S + Σ_j e^{c_T − c_j} k_jᵀ v_j
+        cT = c[:, -1]                              # [B, H, N]
+        S_new = jnp.exp(cT)[..., None] * S_c + jnp.einsum(
+            "bjhn,bjhm->bhnm", k_dec * jnp.exp(cT)[:, None], vc)
+        return S_new, y.astype(r.dtype)
+
+    with jax.named_scope("wkvkern"):
+        S_f, ys = jax.lax.scan(body, S0, (rs, ks, vs, ws))
+    return ys.swapaxes(0, 1).reshape(B, S, H, N), S_f
+
+
+def wkv_step(r, k, v, logw, u, S):
+    """One-token WKV: r,k,v,logw [B, H, N];  S [B, H, N, N] f32."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    y = jnp.einsum("bhn,bhnm->bhm",
+                   rf, S + u.astype(jnp.float32)[None, :, :, None] * kv)
+    S_new = jnp.exp(logw.astype(jnp.float32))[..., None] * S + kv
+    return y.astype(r.dtype), S_new
+
+
+def _projections(p, x, xprev, cfg: ArchConfig):
+    """Token-shifted projections shared by chunked + step paths."""
+    H, N = _dims(cfg)
+    B = x.shape[0]
+    S = x.shape[1]
+
+    def mix(m):
+        return x * p[m].astype(x.dtype) + xprev * (1.0 - p[m].astype(x.dtype))
+
+    r = jnp.einsum("bsd,de->bse", mix("mix_r"), p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mix("mix_k"), p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mix("mix_v"), p["w_v"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", mix("mix_g"), p["w_g"].astype(x.dtype))
+    # data-dependent decay (the Finch feature): w = bias + tanh LoRA
+    xw = mix("mix_w").astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["decay_w1"].astype(jnp.float32)) @ \
+        p["decay_w2"].astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(p["decay_bias"].astype(jnp.float32) + dd,
+                             -10.0, 2.0))           # log decay, < 0
+    from .layers import _act
+    hd = (B, S, H, N)
+    ax = ("batch", None, "heads", None)
+    return (_act(r.reshape(hd), ax), _act(k.reshape(hd), ax),
+            _act(v.reshape(hd), ax), g, _act(logw.reshape(hd), ax))
+
+
+def rwkv_time_mix(p, x, cfg: ArchConfig, state=None, *, chunk: int = 64):
+    """Full-sequence time-mix.  x [B,S,D] -> (y, state)."""
+    H, N = _dims(cfg)
+    B, S, D = x.shape
+    if state is None:
+        state = init_rwkv_time_state(cfg, B, x.dtype)
+    xprev = _token_shift(x, state["x_prev"])
+    r, k, v, g, logw = _projections(p, x, xprev, cfg)
+    y, S_f = wkv_chunked(r, k, v, logw, p["bonus_u"], state["S"], chunk=chunk)
+    y = _group_norm(y.reshape(B, S, D), p["ln_x"], H, N)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"].astype(x.dtype))
+    return out, {"S": S_f, "x_prev": x[:, -1:]}
+
+
+def rwkv_time_step(p, x, cfg: ArchConfig, state):
+    """One-token time-mix.  x [B,1,D]."""
+    H, N = _dims(cfg)
+    B, _, D = x.shape
+    xprev = state["x_prev"].astype(x.dtype)
+    r, k, v, g, logw = _projections(p, x, xprev, cfg)
+    y, S_f = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], p["bonus_u"],
+                      state["S"])
+    y = _group_norm(y.reshape(B, 1, D), p["ln_x"], H, N)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"].astype(x.dtype))
+    return out, {"S": S_f, "x_prev": x}
+
+
+def rwkv_channel_mix(p, x, cfg: ArchConfig, state=None):
+    """relu² channel-mix.  x [B,S,D] -> (y, state)."""
+    if state is None:
+        state = {"x_prev": jnp.zeros((x.shape[0], 1, x.shape[2]), x.dtype)}
+    xprev = _token_shift(x, state["x_prev"])
+
+    def mix(m):
+        return x * p[m].astype(x.dtype) + xprev * (1.0 - p[m].astype(x.dtype))
+
+    kx = jnp.einsum("bsd,df->bsf", mix("mix_k"), p["w_k"].astype(x.dtype))
+    kx = jnp.square(jax.nn.relu(kx))
+    vx = jnp.einsum("bsf,fd->bsd", kx, p["w_v"].astype(x.dtype))
+    rx = jnp.einsum("bsd,de->bse", mix("mix_r"), p["w_r"].astype(x.dtype))
+    return jax.nn.sigmoid(rx) * vx, {"x_prev": x[:, -1:]}
+
+
+def init_rwkv_time_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    H, N = _dims(cfg)
+    return {
+        "S": jnp.zeros((batch, H, N, N), jnp.float32),
+        "x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }
+
+
+def rwkv_time_state_specs(cfg: ArchConfig, batch: int, dtype) -> dict:
+    H, N = _dims(cfg)
+    return {
+        "S": jax.ShapeDtypeStruct((batch, H, N, N), jnp.float32),
+        "x_prev": jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                       jnp.dtype(dtype)),
+    }
+
+
+def rwkv_time_state_axes(cfg: ArchConfig) -> dict:
+    return {"S": ("batch", "tp", None, None), "x_prev": ("batch", None, None)}
+
+
+def rwkv_channel_state_specs(cfg: ArchConfig, batch: int, dtype) -> dict:
+    return {"x_prev": jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                           jnp.dtype(dtype))}
+
+
+def rwkv_channel_state_axes(cfg: ArchConfig) -> dict:
+    return {"x_prev": ("batch", None, None)}

@@ -1,0 +1,522 @@
+"""Unified decoder machinery for all six assigned families.
+
+An architecture is a sequence of *stages*; a stage is a repeating *pattern*
+of heterogeneous layers (``LayerSpec``).  Parameters (and KV/state caches)
+are stacked over the repeat dimension and the stage body is a single
+``lax.scan`` — one compiled layer body per pattern position regardless of
+depth, with the remat policy applied to the scanned body.  Examples:
+
+  dense (starcoder2):   [(attn, dense)] × 32
+  deepseek-v3:          [(mla, dense)] × 3  then  [(mla, moe)] × 58
+  jamba:                [m,m,m,attn,m,m,m,m  × (dense|moe alternating)] × 9
+  rwkv6:                [(rwkv, channelmix)] × 32
+  llama-3.2-vision:     [(attn,dense)×4, (xattn,dense)] × 20
+  seamless decoder:     [(attn+cross, dense)] × 24   (encoder: non-causal)
+
+Three modes share one code path:
+  train    — full sequence, causal flash attention, no caches, remat on
+  prefill  — full sequence, returns caches (KV / latent / SSM state)
+  decode   — one token against caches at position ``pos``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (NEG_INF, PDef, apply_rope, attention_decode,
+                     cache_update, flash_attention, rms_norm, rope_angles,
+                     swiglu)
+from . import mamba as _mamba
+from . import moe as _moe
+from . import rwkv as _rwkv
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                 # "attn" | "mla" | "xattn" | "mamba" | "rwkv"
+    cross: bool = False       # extra cross-attn sublayer (enc-dec decoder)
+    ffn: str = "dense"        # "dense" | "moe" | "channelmix" | "none"
+    causal: bool = True       # False for encoder self-attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    pattern: tuple[LayerSpec, ...]
+    repeats: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+def decoder_stages(cfg: ArchConfig) -> tuple[Stage, ...]:
+    """The stage structure of the (decoder side of the) architecture."""
+    f = cfg.family
+    if f == "dense":
+        return (Stage((LayerSpec("attn"),), cfg.num_layers),)
+    if f == "moe":
+        m = cfg.moe
+        attn = "mla" if cfg.mla is not None else "attn"
+        stages = []
+        if m.first_dense:
+            stages.append(Stage((LayerSpec(attn, ffn="dense"),), m.first_dense))
+        stages.append(Stage((LayerSpec(attn, ffn="moe"),),
+                            cfg.num_layers - m.first_dense))
+        return tuple(stages)
+    if f == "hybrid":
+        # attn:mamba 1:7 interleave; MoE every `cfg.moe.every` layers.
+        P = cfg.attn_every            # pattern length (8 for jamba)
+        attn_at = P // 2              # attention in the middle of the block
+        pat = []
+        for j in range(P):
+            kind = "attn" if j == attn_at else "mamba"
+            ffn = "moe" if (j % cfg.moe.every == cfg.moe.every - 1) else "dense"
+            pat.append(LayerSpec(kind, ffn=ffn))
+        assert cfg.num_layers % P == 0
+        return (Stage(tuple(pat), cfg.num_layers // P),)
+    if f == "ssm":
+        return (Stage((LayerSpec("rwkv", ffn="channelmix"),), cfg.num_layers),)
+    if f == "vlm":
+        E = cfg.cross_attn_every
+        pat = tuple(LayerSpec("attn") for _ in range(E - 1)) + \
+            (LayerSpec("xattn"),)
+        assert cfg.num_layers % E == 0
+        return (Stage(pat, cfg.num_layers // E),)
+    if f == "encdec":
+        return (Stage((LayerSpec("attn", cross=True),), cfg.num_layers),)
+    raise ValueError(f"unknown family {f!r}")
+
+
+def encoder_stages(cfg: ArchConfig) -> tuple[Stage, ...]:
+    assert cfg.family == "encdec"
+    return (Stage((LayerSpec("attn", causal=False),), cfg.enc_layers),)
+
+
+# --------------------------------------------------------------------------
+# Attention variants — parameter defs
+# --------------------------------------------------------------------------
+
+
+def gqa_param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    d, H, Kh, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": PDef((d, H, Dh), ("fsdp", "heads", None), "scaled"),
+        "wk": PDef((d, Kh, Dh), ("fsdp", "kv_heads", None), "scaled"),
+        "wv": PDef((d, Kh, Dh), ("fsdp", "kv_heads", None), "scaled"),
+        "wo": PDef((H, Dh, d), ("heads", None, "fsdp"), "scaled"),
+    }
+
+
+def xattn_param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    defs = gqa_param_defs(cfg)
+    if cfg.family == "vlm":
+        defs["gate"] = PDef((), (), "zeros")   # tanh-gated cross-attn
+    return defs
+
+
+def mla_param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    m, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qd = m.nope_dim + m.rope_dim
+    return {
+        "w_dq": PDef((d, m.q_lora_rank), ("fsdp", None), "scaled"),
+        "q_norm": PDef((m.q_lora_rank,), (None,), "ones"),
+        "w_uq": PDef((m.q_lora_rank, H, qd), (None, "heads", None), "scaled"),
+        "w_dkv": PDef((d, m.kv_lora_rank + m.rope_dim), ("fsdp", None),
+                      "scaled"),
+        "kv_norm": PDef((m.kv_lora_rank,), (None,), "ones"),
+        "w_uk": PDef((m.kv_lora_rank, H, m.nope_dim), (None, "heads", None),
+                     "scaled"),
+        "w_uv": PDef((m.kv_lora_rank, H, m.v_head_dim), (None, "heads", None),
+                     "scaled"),
+        "wo": PDef((H, m.v_head_dim, d), ("heads", None, "fsdp"), "scaled"),
+    }
+
+
+def dense_ffn_param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": PDef((d, f), ("fsdp", "tp"), "scaled"),
+        "w_up": PDef((d, f), ("fsdp", "tp"), "scaled"),
+        "w_down": PDef((f, d), ("tp", "fsdp"), "scaled"),
+    }
+
+
+def layer_param_defs(cfg: ArchConfig, spec: LayerSpec) -> dict[str, Any]:
+    d = cfg.d_model
+    defs: dict[str, Any] = {"norm_attn": PDef((d,), (None,), "ones")}
+    if spec.kind == "attn":
+        defs["attn"] = gqa_param_defs(cfg)
+    elif spec.kind == "xattn":
+        defs["attn"] = xattn_param_defs(cfg)
+    elif spec.kind == "mla":
+        defs["attn"] = mla_param_defs(cfg)
+    elif spec.kind == "mamba":
+        defs["attn"] = _mamba.mamba_param_defs(cfg)
+    elif spec.kind == "rwkv":
+        defs["attn"] = _rwkv.rwkv_time_param_defs(cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.cross:
+        defs["norm_cross"] = PDef((d,), (None,), "ones")
+        defs["cross"] = xattn_param_defs(cfg)
+    if spec.ffn != "none":
+        defs["norm_ffn"] = PDef((d,), (None,), "ones")
+        if spec.ffn == "dense":
+            defs["ffn"] = dense_ffn_param_defs(cfg)
+        elif spec.ffn == "moe":
+            defs["ffn"] = _moe.moe_param_defs(cfg)
+        elif spec.ffn == "channelmix":
+            defs["ffn"] = _rwkv.rwkv_channel_param_defs(cfg)
+        else:
+            raise ValueError(spec.ffn)
+    return defs
+
+
+def stage_param_defs(cfg: ArchConfig, stage: Stage) -> dict[str, Any]:
+    from .layers import stack_defs
+    return {f"l{j}": stack_defs(layer_param_defs(cfg, spec), stage.repeats)
+            for j, spec in enumerate(stage.pattern)}
+
+
+# --------------------------------------------------------------------------
+# Attention variants — apply
+# --------------------------------------------------------------------------
+
+
+def _proj_qkv(p, x, src=None):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    kv_in = x if src is None else src.astype(x.dtype)
+    k = jnp.einsum("bsd,dhe->bshe", kv_in, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", kv_in, p["wv"].astype(x.dtype))
+    return q, k, v
+
+
+def gqa_apply(cfg: ArchConfig, p, x, ctx, cache, spec: LayerSpec):
+    """Self-attention (GQA + RoPE).  Returns (out, new_cache)."""
+    mode = ctx["mode"]
+    from .layers import _act
+    q, k, v = _proj_qkv(p, x)
+    sin, cos = ctx["rope"]
+    if mode == "decode":
+        q = apply_rope(q, sin, cos)               # rope at position `pos`
+        k = apply_rope(k, sin, cos)
+        pos = ctx["pos"]
+        ck = _act(cache_update(cache["k"], k, pos),
+                  ("batch", "kv_seq", None, None))
+        cv = _act(cache_update(cache["v"], v, pos),
+                  ("batch", "kv_seq", None, None))
+        o = attention_decode(q, ck, cv, pos)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        o = flash_attention(q, k, v, causal=spec.causal,
+                            chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk)
+        new_cache = {"k": k.astype(jnp.dtype(cfg.compute_dtype)),
+                     "v": v.astype(jnp.dtype(cfg.compute_dtype))} \
+            if mode == "prefill" else None
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def xattn_apply(cfg: ArchConfig, p, x, ctx, cache, spec: LayerSpec):
+    """Cross-attention to ctx['src'] (image / encoder tokens).  No RoPE."""
+    mode = ctx["mode"]
+    if mode == "decode":
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+        S_src = cache["k"].shape[1]
+        o = attention_decode(q, cache["k"], cache["v"], S_src - 1)
+        new_cache = cache                          # static across decode
+    else:
+        q, k, v = _proj_qkv(p, x, src=ctx["src"])
+        o = flash_attention(q, k, v, causal=False,
+                            chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk)
+        new_cache = {"k": k.astype(jnp.dtype(cfg.compute_dtype)),
+                     "v": v.astype(jnp.dtype(cfg.compute_dtype))} \
+            if mode == "prefill" else None
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    if "gate" in p:
+        out = jnp.tanh(p["gate"].astype(out.dtype)) * out
+    return out, new_cache
+
+
+def _mla_q(cfg: ArchConfig, p, x, sin, cos):
+    m = cfg.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(x.dtype))
+    cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def mla_apply(cfg: ArchConfig, p, x, ctx, cache, spec: LayerSpec):
+    """Multi-head Latent Attention (deepseek-v3).
+
+    Train/prefill: expand the latent to per-head K/V and run flash.
+    Decode: *absorbed* form — attention runs in the kv_lora latent space
+    against the cached latent; the cache is [B, S, kv_lora + rope] (the MLA
+    memory saving that motivates the architecture).
+    """
+    m = cfg.mla
+    mode = ctx["mode"]
+    sin, cos = ctx["rope"]
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    q_nope, q_rope = _mla_q(cfg, p, x, sin, cos)
+
+    if mode == "decode":
+        pos = ctx["pos"]
+        ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+        c_kv = rms_norm(ckv_full[..., :m.kv_lora_rank], p["kv_norm"],
+                        cfg.norm_eps)
+        k_rope = apply_rope(ckv_full[..., None, m.kv_lora_rank:], sin, cos)
+        c_cache = cache_update(cache["c_kv"], c_kv, pos)
+        r_cache = cache_update(cache["k_rope"], k_rope[:, :, 0], pos)
+        # absorbed scores:  q_lat = q_nope · W_uk
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope,
+                           p["w_uk"].astype(x.dtype))
+        s = jnp.einsum("bshr,bkr->bhsk", q_lat, c_cache,
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bshr,bkr->bhsk", q_rope, r_cache,
+                           preferred_element_type=jnp.float32)
+        s = s * scale
+        valid = jnp.arange(c_cache.shape[1]) <= pos
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhsk,bkr->bshr", pr,
+                           c_cache.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhv->bshv", o_lat.astype(x.dtype),
+                       p["w_uv"].astype(x.dtype))
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+    else:
+        ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+        c_kv = rms_norm(ckv_full[..., :m.kv_lora_rank], p["kv_norm"],
+                        cfg.norm_eps)
+        k_rope = apply_rope(ckv_full[..., None, m.kv_lora_rank:], sin, cos)
+        k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, p["w_uv"].astype(x.dtype))
+        H = cfg.num_heads
+        k_rope_b = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (H, m.rope_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        o = flash_attention(q, k, v, causal=spec.causal,
+                            chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk)
+        dt = jnp.dtype(cfg.compute_dtype)
+        new_cache = {"c_kv": c_kv.astype(dt),
+                     "k_rope": k_rope[:, :, 0].astype(dt)} \
+            if mode == "prefill" else None
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# Layer + stage application
+# --------------------------------------------------------------------------
+
+
+_ZERO = lambda: jnp.zeros((), jnp.float32)  # noqa: E731
+
+
+def apply_layer(cfg: ArchConfig, spec: LayerSpec, p, x, ctx, cache):
+    """One layer.  Returns (x, new_cache_or_None, aux_loss)."""
+    from .layers import _act
+    mode = ctx["mode"]
+    aux = _ZERO()
+    new_cache: dict[str, Any] = {}
+    cache = cache or {}
+
+    x = _act(x, ("batch", None, None))
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    if spec.kind in ("attn",):
+        o, c = gqa_apply(cfg, p["attn"], h, ctx, cache.get("attn"), spec)
+    elif spec.kind == "xattn":
+        o, c = xattn_apply(cfg, p["attn"], h, ctx, cache.get("attn"), spec)
+    elif spec.kind == "mla":
+        o, c = mla_apply(cfg, p["attn"], h, ctx, cache.get("attn"), spec)
+    elif spec.kind == "mamba":
+        if mode == "decode":
+            o, c = _mamba.mamba_decode(p["attn"], h, cfg, cache.get("attn"))
+        else:
+            o, c = _mamba.mamba_apply(p["attn"], h, cfg,
+                                      state=cache.get("attn"))
+            c = c if mode == "prefill" else None
+    elif spec.kind == "rwkv":
+        if mode == "decode":
+            o, c = _rwkv.rwkv_time_step(p["attn"], h, cfg, cache.get("attn"))
+        else:
+            o, c = _rwkv.rwkv_time_mix(p["attn"], h, cfg,
+                                       state=cache.get("attn"))
+            c = c if mode == "prefill" else None
+    else:
+        raise ValueError(spec.kind)
+    x = x + o
+    new_cache["attn"] = c
+
+    if spec.cross:
+        h = rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        o, c = xattn_apply(cfg, p["cross"], h, ctx, cache.get("cross"), spec)
+        x = x + o
+        new_cache["cross"] = c
+
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            x = x + swiglu(h, p["ffn"]["w_gate"], p["ffn"]["w_up"],
+                           p["ffn"]["w_down"])
+        elif spec.ffn == "moe":
+            y, a = _moe.moe_ffn(h, p["ffn"], cfg)
+            x = x + y
+            aux = aux + a
+        elif spec.ffn == "channelmix":
+            y, c = _rwkv.rwkv_channel_mix(p["ffn"], h, cfg,
+                                          state=cache.get("ffn"))
+            x = x + y
+            if mode == "decode":
+                c = {"x_prev": h}
+            new_cache["ffn"] = c if mode in ("prefill", "decode") else None
+    return x, new_cache, aux
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save only layer boundaries
+
+
+def run_stage(cfg: ArchConfig, stage: Stage, sparams, x, ctx, scache):
+    """Scan the stage body over its repeat dimension."""
+    mode = ctx["mode"]
+
+    def body(carry, xs):
+        xb = carry
+        p_r, c_r = xs
+        aux_r = _ZERO()
+        out_c = {}
+        for j, spec in enumerate(stage.pattern):
+            key = f"l{j}"
+            xb, cj, a = apply_layer(cfg, spec, p_r[key], xb, ctx,
+                                    (c_r or {}).get(key))
+            out_c[key] = cj
+            aux_r = aux_r + a
+        return xb, (out_c, aux_r)
+
+    if mode == "train":
+        body = _remat(body, cfg)
+    x, (new_caches, auxs) = jax.lax.scan(body, x, (sparams, scache))
+    return x, new_caches, jnp.sum(auxs)
+
+
+def run_stages(cfg: ArchConfig, stages, params, x, ctx, caches=None):
+    """params/caches: tuple (one entry per stage).  Returns (x, caches, aux)."""
+    aux = _ZERO()
+    new_caches = []
+    for si, stage in enumerate(stages):
+        sc = caches[si] if caches is not None else None
+        x, nc, a = run_stage(cfg, stage, params[si], x, ctx, sc)
+        new_caches.append(nc)
+        aux = aux + a
+    return x, tuple(new_caches), aux
+
+
+# --------------------------------------------------------------------------
+# Caches: specs / init / sharding axes (mirrors run_stage's pytree layout)
+# --------------------------------------------------------------------------
+
+
+def _layer_cache_template(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                          seq: int, src_len: int, what: str):
+    """what: 'spec' -> ShapeDtypeStruct; 'axes' -> logical axes; 'init' ->
+    zero arrays."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    Kh, Dh = cfg.num_kv_heads, cfg.head_dim
+
+    def leaf(shape, axes, dtype=dt):
+        if what == "spec":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if what == "axes":
+            return axes
+        return jnp.zeros(shape, dtype)
+
+    out: dict[str, Any] = {}
+    if spec.kind == "attn":
+        out["attn"] = {
+            "k": leaf((batch, seq, Kh, Dh), ("batch", "kv_seq", None, None)),
+            "v": leaf((batch, seq, Kh, Dh), ("batch", "kv_seq", None, None)),
+        }
+    elif spec.kind == "xattn":
+        out["attn"] = {
+            "k": leaf((batch, src_len, Kh, Dh),
+                      ("batch", "kv_seq", None, None)),
+            "v": leaf((batch, src_len, Kh, Dh),
+                      ("batch", "kv_seq", None, None)),
+        }
+    elif spec.kind == "mla":
+        m = cfg.mla
+        out["attn"] = {
+            "c_kv": leaf((batch, seq, m.kv_lora_rank),
+                         ("batch", "kv_seq", None)),
+            "k_rope": leaf((batch, seq, m.rope_dim),
+                           ("batch", "kv_seq", None)),
+        }
+    elif spec.kind == "mamba":
+        if what == "spec":
+            out["attn"] = _mamba.mamba_state_specs(cfg, batch, dt)
+        elif what == "axes":
+            out["attn"] = _mamba.mamba_state_axes(cfg)
+        else:
+            out["attn"] = _mamba.init_mamba_state(cfg, batch, dt)
+    elif spec.kind == "rwkv":
+        if what == "spec":
+            out["attn"] = _rwkv.rwkv_time_state_specs(cfg, batch, dt)
+        elif what == "axes":
+            out["attn"] = _rwkv.rwkv_time_state_axes(cfg)
+        else:
+            out["attn"] = _rwkv.init_rwkv_time_state(cfg, batch, dt)
+    if spec.cross:
+        out["cross"] = {
+            "k": leaf((batch, src_len, Kh, Dh),
+                      ("batch", "kv_seq", None, None)),
+            "v": leaf((batch, src_len, Kh, Dh),
+                      ("batch", "kv_seq", None, None)),
+        }
+    if spec.ffn == "channelmix":
+        if what == "spec":
+            out["ffn"] = _rwkv.rwkv_channel_state_specs(cfg, batch, dt)
+        elif what == "axes":
+            out["ffn"] = _rwkv.rwkv_channel_state_axes(cfg)
+        else:
+            out["ffn"] = {"x_prev": jnp.zeros((batch, 1, cfg.d_model), dt)}
+    return out
+
+
+def _stack_cache(tree, repeats: int, what: str):
+    def f(leaf):
+        if what == "spec":
+            return jax.ShapeDtypeStruct((repeats,) + leaf.shape, leaf.dtype)
+        if what == "axes":
+            return (None,) + leaf
+        return jnp.broadcast_to(leaf, (repeats,) + leaf.shape)
+    is_leaf = (lambda x: isinstance(x, tuple)) if what == "axes" else None
+    return jax.tree.map(f, tree, is_leaf=is_leaf)
+
+
+def cache_template(cfg: ArchConfig, stages, batch: int, seq: int,
+                   src_len: int, what: str):
+    """Full cache pytree matching run_stages: tuple-of-stage dicts."""
+    out = []
+    for stage in stages:
+        sc = {}
+        for j, spec in enumerate(stage.pattern):
+            tpl = _layer_cache_template(cfg, spec, batch, seq, src_len, what)
+            sc[f"l{j}"] = _stack_cache(tpl, stage.repeats, what)
+        out.append(sc)
+    return tuple(out)

@@ -1,0 +1,103 @@
+"""Gradient compression with error feedback (a collective-term lever).
+
+Two schemes, both with per-tensor error-feedback residuals so compression
+noise is unbiased over steps (Karimireddy et al. style):
+
+* int8 quantization — 4x wire reduction on f32 grads: transmit
+  (int8 values, f32 per-tensor scale); the residual carries the
+  quantization error to the next step.
+* top-k sparsification — transmit the k largest-|g| entries per tensor
+  (values + indices).
+
+These wrap the *gradient tree before the optimizer*, compressing the
+cross-replica reduction payload.  Off by default; §Perf measures the
+collective-bytes delta when enabled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """Error-feedback int8: compress(g + residual) -> (payload, residual')."""
+
+    def init(self, params) -> Any:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, residual):
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            q, s = _quantize_int8(x)
+            deq = _dequantize_int8(q, s)
+            return (q, s), x - deq
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        payload = treedef.unflatten([o[0] for o in out])
+        new_res = treedef.unflatten([o[1] for o in out])
+        return payload, new_res
+
+    def decompress(self, payload):
+        return jax.tree.map(lambda qs: _dequantize_int8(*qs), payload,
+                            is_leaf=lambda x: isinstance(x, tuple) and
+                            len(x) == 2 and hasattr(x[0], "dtype"))
+
+    def wire_bytes(self, params) -> int:
+        """Payload bytes per step (vs 4 bytes/param uncompressed)."""
+        return sum(int(p.size) + 4 for p in jax.tree.leaves(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Error-feedback top-k: keep the k largest-magnitude entries."""
+
+    fraction: float = 0.01
+
+    def init(self, params) -> Any:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, residual):
+        def one(g, r):
+            x = (g.astype(jnp.float32) + r).reshape(-1)
+            k = max(1, int(x.size * self.fraction))
+            vals, idx = jax.lax.top_k(jnp.abs(x), k)
+            kept = x[idx]
+            dense = jnp.zeros_like(x).at[idx].set(kept)
+            return (kept, idx, g.shape), (x - dense).reshape(g.shape)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        payload = treedef.unflatten([o[0] for o in out])
+        new_res = treedef.unflatten([o[1] for o in out])
+        return payload, new_res
+
+    def decompress(self, payload):
+        def one(p):
+            kept, idx, shape = p
+            size = 1
+            for d in shape:
+                size *= d
+            return jnp.zeros((size,), jnp.float32).at[idx].set(
+                kept).reshape(shape)
+        return jax.tree.map(one, payload, is_leaf=lambda x:
+                            isinstance(x, tuple) and len(x) == 3)
+
+    def wire_bytes(self, params) -> int:
+        return sum(int(p.size * self.fraction) * 8
+                   for p in jax.tree.leaves(params))

@@ -1,0 +1,9 @@
+from .sharding import (
+    AxisRules, DEFAULT_RULES, logical_to_mesh, make_named_sharding,
+    shard_constraint, tree_shardings, tree_specs,
+)
+
+__all__ = [
+    "AxisRules", "DEFAULT_RULES", "logical_to_mesh", "make_named_sharding",
+    "shard_constraint", "tree_shardings", "tree_specs",
+]

@@ -1,0 +1,4 @@
+from .fault_tolerance import FleetMonitor, NodeFailure
+from .straggler import StragglerMitigator
+
+__all__ = ["FleetMonitor", "NodeFailure", "StragglerMitigator"]

@@ -1,0 +1,6 @@
+from .cluster import BalancedMeshPartition, MeshSlice
+from .gang import GangJob, GangScheduler
+from .elastic import elastic_repartition
+
+__all__ = ["BalancedMeshPartition", "MeshSlice", "GangJob", "GangScheduler",
+           "elastic_repartition"]

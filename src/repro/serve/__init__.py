@@ -1,0 +1,4 @@
+from .engine import Request, ServingEngine
+from .kv_cache import cache_bytes
+
+__all__ = ["Request", "ServingEngine", "cache_bytes"]

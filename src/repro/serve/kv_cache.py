@@ -1,0 +1,43 @@
+"""KV/state cache accounting and layouts.
+
+The cache *structure* lives with the models (``repro.models.model
+.cache_specs`` mirrors the stage tree exactly); this module adds the
+serving-side views: byte accounting per request class (drives the gang
+scheduler's chip-need estimates) and context-bucket helpers.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..models.config import ArchConfig
+from ..models.model import cache_specs
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, seq: int) -> int:
+    """Total cache bytes for (batch, context length)."""
+    specs = cache_specs(cfg, batch, seq)
+    return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+               for s in jax.tree.leaves(specs))
+
+
+def chips_needed(cfg: ArchConfig, batch: int, seq: int, *,
+                 hbm_per_chip: float = 16e9, param_bytes: int = 2,
+                 headroom: float = 0.8) -> int:
+    """Minimum chips so params (bf16) + cache fit — the serving job class's
+    server need in the multiserver-job sense.  Rounded up to a power of two
+    (ICI-slice friendly)."""
+    from ..models.model import num_params
+    total = num_params(cfg) * param_bytes + cache_bytes(cfg, batch, seq)
+    chips = max(1, int(np.ceil(total / (hbm_per_chip * headroom))))
+    return 1 << (chips - 1).bit_length()
+
+
+def context_bucket(seq: int, buckets=(2048, 8192, 32768, 131072, 524288)
+                   ) -> int:
+    """Smallest bucket holding ``seq`` (request classes = arch x bucket)."""
+    for b in buckets:
+        if seq <= b:
+            return b
+    return buckets[-1]

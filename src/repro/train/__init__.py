@@ -1,0 +1,3 @@
+from .step import make_train_step, train_state_axes, train_state_specs
+
+__all__ = ["make_train_step", "train_state_axes", "train_state_specs"]

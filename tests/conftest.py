@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device;
+# only launch/dryrun.py forces 512 host devices (before any jax import).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

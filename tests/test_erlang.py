@@ -1,0 +1,93 @@
+"""Erlang-B machinery: formula, recursion, Lemma-1 asymptotics, properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.erlang import (erlang_b, erlang_b_array, erlang_b_jnp,
+                               erlang_b_log, halfin_whitt_limit,
+                               mean_response)
+
+
+def erlang_direct(s, a):
+    """Eq. (3) evaluated directly (small s only)."""
+    terms = [a ** j / math.factorial(j) for j in range(s + 1)]
+    return terms[-1] / sum(terms)
+
+
+@pytest.mark.parametrize("s,a", [(1, 0.5), (4, 2.0), (10, 9.0), (20, 25.0)])
+def test_recursion_matches_formula(s, a):
+    assert erlang_b(s, a) == pytest.approx(erlang_direct(s, a), rel=1e-12)
+
+
+def test_array_consistent():
+    arr = erlang_b_array(50, 30.0)
+    assert arr[0] == 1.0
+    for s in (1, 10, 50):
+        assert arr[s] == pytest.approx(erlang_b(s, 30.0), rel=1e-12)
+
+
+def test_log_version():
+    # subcritical large-s: E underflows but log stays finite
+    lg = erlang_b_log(2000, 1000.0)
+    assert -2000 < lg < -50
+    assert erlang_b_log(10, 5.0) == pytest.approx(
+        math.log(erlang_b(10, 5.0)), rel=1e-9)
+
+
+def test_jnp_matches_numpy():
+    v = float(erlang_b_jnp(64, 50.0))
+    assert v == pytest.approx(erlang_b(64, 50.0), rel=1e-5)
+
+
+def test_mean_response_eq4():
+    # R_s = d (1 - E_s(λd))
+    lam, d, s = 5.0, 2.0, 12
+    assert mean_response(s, lam, d) == pytest.approx(
+        d * (1 - erlang_b(s, lam * d)), rel=1e-12)
+
+
+def test_lemma1_halfin_whitt_convergence():
+    """√s·E_s(λd) -> φ(θ)/Φ(θ) under (1-ρ)√s -> θ."""
+    theta = 0.7
+    limit = halfin_whitt_limit(theta)
+    errs = []
+    for s in (100, 1000, 10000):
+        a = s * (1 - theta / math.sqrt(s))
+        errs.append(abs(math.sqrt(s) * erlang_b(s, a) - limit))
+    assert errs[-1] < errs[0]
+    assert errs[-1] < 0.02 * limit
+
+
+@settings(max_examples=60, deadline=None)
+@given(s=st.integers(1, 200), a=st.floats(0.01, 300.0))
+def test_blocking_probability_in_unit_interval(s, a):
+    e = erlang_b(s, a)
+    assert 0.0 <= e <= 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=st.integers(1, 100), a=st.floats(0.1, 120.0))
+def test_monotone_decreasing_in_servers(s, a):
+    assert erlang_b(s + 1, a) <= erlang_b(s, a) + 1e-15
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=st.integers(1, 100), a=st.floats(0.1, 100.0),
+       da=st.floats(0.01, 10.0))
+def test_monotone_increasing_in_load(s, a, da):
+    assert erlang_b(s, a + da) >= erlang_b(s, a) - 1e-15
+
+
+def test_erlang_vs_loss_queue_simulation():
+    """Property 1 building block: M/M/s/s sample path vs Erlang-B."""
+    from repro.core.sim_jax import loss_queue_sim
+    lam, d, s, n = 8.0, 1.0, 10, 200_000
+    rng = np.random.default_rng(3)
+    arrival = np.cumsum(rng.exponential(1 / lam, n))
+    service = rng.exponential(d, n)
+    res = loss_queue_sim(arrival, service, s)
+    assert res.blocked.mean() == pytest.approx(
+        erlang_b(s, lam * d), abs=0.01)

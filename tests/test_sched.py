@@ -1,0 +1,106 @@
+"""Gang scheduler (BS-π on a fleet): invariants, cross-validation with the
+queueing simulator, elastic repartition, straggler mitigation."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import BalancedSplitting
+from repro.core.simulator import simulate_trace
+from repro.core.workload import Exp, JobClass, Workload, figure1_workload
+from repro.sched.cluster import BalancedMeshPartition
+from repro.sched.elastic import elastic_repartition
+from repro.sched.gang import GangJob, GangScheduler, simulate_gangs
+from repro.runtime.straggler import StragglerMitigator
+
+
+def jobs_from_trace(trace):
+    return [GangJob(jid=i, cls=int(trace.cls[i]), need=int(trace.need[i]),
+                    arrival=float(trace.arrival[i]),
+                    service=float(trace.service[i]))
+            for i in range(trace.num_jobs)]
+
+
+def test_partition_matches_core():
+    wl = figure1_workload(512, theta=0.7)
+    mp = BalancedMeshPartition.build(wl.k, wl.classes)
+    mp.validate()
+    core = mp.as_core_partition()
+    core.validate()
+    from repro.core.partition import balanced_partition
+    ref = balanced_partition(wl)
+    assert core.a == ref.a and core.psi == pytest.approx(ref.psi)
+
+
+def test_gang_scheduler_matches_bs_policy():
+    """Event-for-event: GangScheduler response times == BS-π policy in the
+    reference simulator on the same trace (helper = contiguous first-fit,
+    matched by using single-chip-need jobs where fragmentation can't
+    differ)."""
+    classes = (JobClass("a", 1, Exp(1.0), 0.6),
+               JobClass("b", 1, Exp(3.0), 0.4))
+    wl = Workload(k=16, lam=1.0, classes=classes).with_load(0.85)
+    trace = wl.sample_trace(4000, seed=3)
+    ref = simulate_trace(trace, BalancedSplitting.for_workload(wl))
+    mp = BalancedMeshPartition.build(wl.k, wl.classes)
+    sched = simulate_gangs(mp, jobs_from_trace(trace))
+    resp = np.array([j.finish - j.arrival for j in sched.completed])
+    assert resp.mean() == pytest.approx(ref.mean_response, rel=1e-9)
+    assert sched.p_helper == pytest.approx(ref.p_helper, abs=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), load=st.floats(0.4, 0.9))
+def test_gang_scheduler_invariants(seed, load):
+    classes = (JobClass("s", 2, Exp(1.0), 0.7), JobClass("l", 8, Exp(4.0),
+                                                         0.3))
+    wl = Workload(k=64, lam=1.0, classes=classes).with_load(load)
+    trace = wl.sample_trace(800, seed=seed)
+    mp = BalancedMeshPartition.build(wl.k, wl.classes)
+    sched = simulate_gangs(mp, jobs_from_trace(trace))
+    assert len(sched.completed) == trace.num_jobs
+    assert sched.helper_free == mp.helper.size          # all released
+    assert all(len(f) == s.slots
+               for f, s in zip(sched.free_slots, mp.slices))
+    for j in sched.completed:
+        assert j.finish >= j.start >= j.arrival
+
+
+def test_elastic_repartition_chip_loss():
+    wl = figure1_workload(512, theta=0.7)
+    mp = BalancedMeshPartition.build(wl.k, wl.classes)
+    sched = GangScheduler(mp)
+    # occupy one slot of class 0
+    j = GangJob(jid=0, cls=0, need=mp.slices[0].need, arrival=0.0,
+                service=10.0)
+    sched.arrive(j, 0.0)
+    new_sched, report = elastic_repartition(sched, 384)
+    assert report.new_k == 384
+    new_sched.partition.validate()
+    # the running gang survived (slot 0 exists in the smaller partition)
+    assert 0 in new_sched.running
+    # new partition is exactly what eq. (2) gives for 384 chips
+    ref = BalancedMeshPartition.build(384, wl.classes)
+    assert ref.slices == new_sched.partition.slices
+
+
+def test_straggler_promotion():
+    classes = (JobClass("a", 4, Exp(1.0), 0.5), JobClass("b", 4, Exp(1.0),
+                                                         0.5))
+    mp = BalancedMeshPartition.build(16, classes)
+    sched = GangScheduler(mp)
+    # fill everything so new arrivals queue
+    jid = 0
+    for _ in range(mp.slices[0].slots + mp.slices[1].slots +
+                   mp.helper.size // 4):
+        sched.arrive(GangJob(jid, jid % 2, 4, 0.0, 100.0), 0.0)
+        jid += 1
+    old = GangJob(jid, 0, 4, 0.0, 1.0)
+    sched.arrive(old, 0.0)
+    fresh = GangJob(jid + 1, 1, 4, 9.5, 1.0)
+    sched.arrive(fresh, 9.5)
+    assert list(sched.helper_wait)[0] is old
+    mit = StragglerMitigator(sched, deadline_multiple=2.0)
+    promoted = mit.tick(now=10.0)       # old blew its 2x1.0s deadline
+    assert promoted >= 1
+    assert list(sched.helper_wait)[0].jid == old.jid
