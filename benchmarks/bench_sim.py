@@ -1,0 +1,132 @@
+"""Simulation-substrate benchmark — tracks the hot-path perf trajectory.
+
+Times three engines on the Fig. 1 critical-regime workload:
+
+* ``python``    — the exact event-driven engine (the correctness oracle)
+* ``jax``       — per-trace ``lax.scan`` (``repro.core.sim_jax``)
+* ``jax-batch`` — vmap-over-replications (``repro.core.sim_batch``)
+
+and writes ``BENCH_sim.json`` rows with jobs/sec, compile time and the
+speedup over the Python engine, so every PR from here on can be compared
+against the last committed numbers.  ``--smoke`` shrinks the config to
+finish in well under a minute on CPU (used by the tier-1 test).
+
+JAX engines are timed on a steady-state call (after one compile call,
+whose cost is reported separately as ``compile_s``); jobs/sec for the
+batched engine counts all replications.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core.policies import make_policy
+from repro.core.sim_batch import fcfs_sim_batch, modified_bs_sim_batch
+from repro.core.sim_jax import fcfs_sim, modified_bs_sim
+from repro.core.simulator import simulate_trace
+from repro.core.workload import figure1_workload
+
+SCHEMA = "bench_sim/v1"
+
+#: required keys of every row — the tier-1 smoke test checks these
+ROW_KEYS = ("bench", "engine", "policy", "k", "jobs", "reps", "wall_s",
+            "jobs_per_sec", "compile_s", "speedup_vs_python")
+
+
+def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
+         python_jps=None):
+    jps = jobs * reps / wall_s
+    return {
+        "bench": "fig1-critical", "engine": engine, "policy": policy,
+        "k": k, "jobs": jobs, "reps": reps,
+        "wall_s": round(wall_s, 4),
+        "jobs_per_sec": round(jps, 1),
+        "compile_s": None if compile_s is None else round(compile_s, 3),
+        "speedup_vs_python": None if python_jps is None
+        else round(jps / python_jps, 2),
+    }
+
+
+def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
+                seed: int = 0, theta: float = 0.7) -> list[dict]:
+    """All engines at one k; python runs ``python_jobs`` arrivals, 1 rep."""
+    wl = figure1_workload(k, theta=theta)
+    rows = []
+    python_jps = {}
+
+    trace_py = wl.sample_trace(python_jobs, seed=seed)
+    for pol in ("fcfs", "modbs"):
+        t0 = time.time()
+        simulate_trace(trace_py, make_policy(pol, wl=wl))
+        wall = time.time() - t0
+        name = make_policy(pol, wl=wl).name
+        python_jps[name] = python_jobs / wall
+        rows.append(_row("python", name, k, python_jobs, 1, wall))
+
+    trace = wl.sample_trace(jobs, seed=seed)
+    for name, fn in (("fcfs", lambda: fcfs_sim(trace)),
+                     ("modbs-fcfs", lambda: modified_bs_sim(trace, wl=wl))):
+        t0 = time.time(); fn(); first = time.time() - t0
+        t0 = time.time(); fn(); wall = time.time() - t0
+        rows.append(_row("jax", name, k, jobs, 1, wall,
+                         compile_s=max(0.0, first - wall),
+                         python_jps=python_jps[name]))
+
+    batch = wl.sample_traces(jobs, reps, seed=seed)
+    for name, fn in (("fcfs", lambda: fcfs_sim_batch(batch)),
+                     ("modbs-fcfs",
+                      lambda: modified_bs_sim_batch(batch, wl=wl))):
+        t0 = time.time(); fn(); first = time.time() - t0
+        t0 = time.time(); fn(); wall = time.time() - t0
+        rows.append(_row("jax-batch", name, k, jobs, reps, wall,
+                         compile_s=max(0.0, first - wall),
+                         python_jps=python_jps[name]))
+    return rows
+
+
+def run(ks, jobs, reps, python_jobs, seed=0):
+    rows = []
+    for k in ks:
+        rows += bench_point(k, jobs, reps, python_jobs, seed=seed)
+    return {"schema": SCHEMA,
+            "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
+                       "python_jobs": python_jobs, "seed": seed},
+            "rows": rows}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, < 60 s on CPU")
+    ap.add_argument("--ks", type=int, nargs="+", default=None)
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--python-jobs", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_sim.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        ks, jobs, reps, pj = (64,), 20_000, 4, 2_000
+    else:
+        ks, jobs, reps, pj = (256, 1024), 100_000, 8, 100_000
+    ks = tuple(args.ks) if args.ks else ks
+    jobs = args.jobs or jobs
+    reps = args.reps or reps
+    pj = args.python_jobs or pj
+    report = run(ks, jobs, reps, pj)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    for r in report["rows"]:
+        print(f"{r['engine']:>9} {r['policy']:<10} k={r['k']:<5} "
+              f"{r['jobs_per_sec']:>12,.0f} jobs/s"
+              + (f"  ({r['speedup_vs_python']}x python)"
+                 if r["speedup_vs_python"] else ""), file=sys.stderr)
+    print(f"wrote {args.out}", file=sys.stderr)
+    return report
+
+
+if __name__ == "__main__":
+    main()

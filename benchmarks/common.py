@@ -12,6 +12,26 @@ from repro.core.workload import Workload
 #: the policy set the paper benchmarks against (Figures 1-3)
 PAPER_POLICIES = ("bs", "fcfs", "serverfilling", "sf-srpt", "ff-srpt", "msf")
 
+#: policies with a batched lax.scan simulator (``repro.core.sim_batch``);
+#: modbs-fcfs doubles as the Cor.-1 upper bound on BS-π's P_H.
+JAX_POLICIES = ("fcfs", "modbs-fcfs")
+
+
+def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
+                     reps: int, seed: int = 0, policies=JAX_POLICIES,
+                     extra_cols=None, per_point_cols=None) -> list[dict]:
+    """Batched-substrate counterpart of :func:`run_policies`.
+
+    One ``sweep_many_server`` call over ``wl_factory(point)``; returns CSV
+    rows with mean/CI columns.  ``per_point_cols`` is an optional sequence
+    (parallel to ``points``) of extra per-point column dicts.
+    """
+    from repro.core.sim_batch import sweep_many_server
+    sweep = sweep_many_server(wl_factory, points, num_jobs=num_jobs,
+                              reps=reps, seed=seed, policies=policies)
+    return sweep.rows(point_col, extra_cols=extra_cols,
+                      per_point_cols=per_point_cols)
+
 
 def run_policies(wl: Workload, num_jobs: int, seed: int,
                  policies=PAPER_POLICIES, extra_cols=None) -> list[dict]:

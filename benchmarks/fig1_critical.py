@@ -3,6 +3,14 @@
 k sweeps with f_k = floor((k/32)^(2/3)), (1-ρ)√(k/f_k) -> θ = 0.7;
 small jobs (f_k, 1) w.p. 0.95; large (2f_k,40)/(4f_k,20)/(8f_k,10) w.p.
 0.05/3 each; exponential services, Poisson arrivals (paper Fig. 1 setup).
+
+Two engines:
+
+* ``--engine jax`` (default) — the batched vmap substrate
+  (``repro.core.sim_batch``): FCFS + ModifiedBS-FCFS, ``--reps``
+  independent Philox replications per k, mean/CI columns.
+* ``--engine python`` — the exact event-driven engine over the full paper
+  policy set (slow; use for the policies the scan substrate cannot cover).
 """
 
 from __future__ import annotations
@@ -12,35 +20,59 @@ import argparse
 from repro.core.theory import analyze
 from repro.core.workload import figure1_workload
 
-from .common import PAPER_POLICIES, emit, run_policies
+from .common import PAPER_POLICIES, emit, run_policies, run_policies_jax
 
-COLS = ["k", "policy", "mean_response", "mean_wait", "p_wait", "p_helper",
-        "p95_response", "utilization", "ph_bound", "zero_wait_R", "sim_s"]
+COLS = ["k", "policy", "mean_response", "ci95_response", "reps", "mean_wait",
+        "p_wait", "ci95_p_wait", "p_helper", "p95_response", "utilization",
+        "ph_bound", "zero_wait_R", "sim_s"]
+
+
+def _theory_cols(k: int, theta: float) -> dict:
+    wl = figure1_workload(k, theta=theta)
+    rep = analyze(wl)
+    return {"ph_bound": rep.p_helper_modified,
+            "zero_wait_R": wl.zero_wait_response_time()}
 
 
 def run(ks=(256, 512, 1024, 2048), num_jobs=30_000, seed=0,
         policies=PAPER_POLICIES, theta=0.7):
+    """Python-engine sweep (the full paper policy set)."""
     rows = []
     for k in ks:
         wl = figure1_workload(k, theta=theta)
-        rep = analyze(wl)
         rows += run_policies(
             wl, num_jobs, seed, policies,
-            extra_cols={"k": k, "ph_bound": rep.p_helper_modified,
-                        "zero_wait_R": wl.zero_wait_response_time()})
+            extra_cols={"k": k, **_theory_cols(k, theta)})
     return rows
+
+
+def run_jax(ks=(256, 512, 1024, 2048), num_jobs=100_000, reps=8, seed=0,
+            theta=0.7):
+    """Batched-substrate sweep (FCFS + ModifiedBS-FCFS with CIs)."""
+    return run_policies_jax(
+        lambda k: figure1_workload(k, theta=theta), ks, "k",
+        num_jobs=num_jobs, reps=reps, seed=seed,
+        per_point_cols=[_theory_cols(k, theta) for k in ks])
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--jobs", type=int, default=30_000)
+    ap.add_argument("--engine", choices=("jax", "python"), default="jax")
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=8)
     ap.add_argument("--ks", type=int, nargs="+",
                     default=[256, 512, 1024, 2048])
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 10^6 arrivals")
     args = ap.parse_args(argv)
-    jobs = 1_000_000 if args.full else args.jobs
-    emit(run(ks=tuple(args.ks), num_jobs=jobs), COLS)
+    default = 100_000 if args.engine == "jax" else 30_000
+    jobs = args.jobs if args.jobs is not None \
+        else (1_000_000 if args.full else default)
+    if args.engine == "jax":
+        rows = run_jax(ks=tuple(args.ks), num_jobs=jobs, reps=args.reps)
+    else:
+        rows = run(ks=tuple(args.ks), num_jobs=jobs)
+    emit(rows, COLS)
 
 
 if __name__ == "__main__":

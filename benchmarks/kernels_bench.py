@@ -22,8 +22,7 @@ COLS = ["kernel", "shape", "us_per_call", "flops", "hbm_bytes",
 
 
 def _time(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))   # one warmup call, whole result pytree
     t0 = time.time()
     for _ in range(iters):
         jax.block_until_ready(f(*args))

@@ -37,9 +37,21 @@ def main(argv=None):
                            (256, 512, 1024, 2048, 4096),
                            num_jobs=jobs1), fig1_critical.COLS)
 
+    _section("Figure 1 (batched jax substrate): FCFS + ModifiedBS with CIs")
+    jjobs = args.jobs or (1_000_000 if args.full else 50_000)
+    jreps = 8 if args.full else 4
+    emit(fig1_critical.run_jax(
+        ks=(256, 512, 1024) if not args.full else (256, 512, 1024, 2048, 4096),
+        num_jobs=jjobs, reps=jreps), fig1_critical.COLS)
+
     _section("Figure 2: heavy-traffic + subcritical regimes")
     emit(fig2_regimes.run_heavy(num_jobs=jobs2) +
          fig2_regimes.run_subcritical(num_jobs=jobs2), fig2_regimes.COLS)
+
+    _section("Figure 2 (batched jax substrate)")
+    emit(fig2_regimes.run_heavy_jax(num_jobs=jjobs, reps=jreps) +
+         fig2_regimes.run_subcritical_jax(num_jobs=jjobs, reps=jreps),
+         fig2_regimes.COLS)
 
     _section("Figure 3: SDSC-SP2 / KIT-FH2 HPC trace workloads")
     emit(fig3_traces.run(num_jobs=jobs2,

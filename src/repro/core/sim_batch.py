@@ -1,0 +1,291 @@
+"""Batched (vmap-over-replications) simulation substrate — the sweep fast path.
+
+The Thm-1/2 validations sweep k -> infinity with many arrivals and many
+independent replications per point.  Running those replications one
+``lax.scan`` at a time leaves the machine idle between traces and pays the
+Python dispatch per replication.  This module vmaps the un-jitted scan cores
+of :mod:`repro.core.sim_jax` over a leading replications axis:
+
+* ``loss_queue_sim_batch`` / ``fcfs_sim_batch`` / ``modified_bs_sim_batch``
+  consume a :class:`~repro.core.workload.BatchTrace` ([R, J] arrays sampled
+  with per-replication Philox streams) and return per-replication metrics.
+  Each is compiled once per (k, R, J) shape with donated input buffers, so a
+  whole k-sweep at fixed (R, J) pays one compile per k and zero per-trace
+  Python overhead.
+* ``sweep_many_server`` drives the Fig. 1/2-style sweeps: one workload per
+  swept point, ``reps`` replications each, returning mean/CI arrays ready
+  for the benchmark CSVs.
+
+Replication r of a batch is bit-identical to the single-trace path on
+``sample_trace(J, seed=replication_stream(seed, r))`` — cross-validated in
+``tests/test_sim_batch.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from functools import partial
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from .partition import BalancedPartition, balanced_partition
+from .sim_jax import _fcfs_core, _loss_core, _modbs_core
+from .workload import BatchTrace, Workload
+
+#: waiting-time epsilon for P[wait > 0] — matches ``Simulation.wait_eps``
+WAIT_EPS = 1e-9
+
+
+def _call(fn, *args):
+    """Run a jitted call to completion, silencing the donation no-op warning
+    XLA emits on backends (CPU) that cannot alias the donated buffers."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return jax.block_until_ready(fn(*args))
+
+
+# --------------------------------------------------------------------------
+# Batched scans: vmap the sim_jax cores over the replications axis.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("s",), donate_argnums=(0, 1))
+def _loss_scan_batch(arrival, service, s: int):
+    return jax.vmap(lambda a, v: _loss_core(a, v, s))(arrival, service)
+
+
+@partial(jax.jit, static_argnames=("k",), donate_argnums=(0, 1, 2))
+def _fcfs_scan_batch(arrival, need, service, k: int):
+    return jax.vmap(lambda a, n, v: _fcfs_core(a, n, v, k))(
+        arrival, need, service)
+
+
+@partial(jax.jit, static_argnames=("s_max", "h"),
+         donate_argnums=(0, 1, 2, 3))
+def _modbs_scan_batch(arrival, cls, need, service, slots, s_max: int, h: int):
+    return jax.vmap(
+        lambda a, c, n, v: _modbs_core(a, c, n, v, slots, s_max, h))(
+        arrival, cls, need, service)
+
+
+# --------------------------------------------------------------------------
+# Host wrappers.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSimResult:
+    """Per-replication sample-path metrics of a batched simulation."""
+
+    response: np.ndarray        # [R, J] response time per job
+    wait: np.ndarray            # [R, J] waiting time per job
+    p_helper: np.ndarray | None # [R] fraction served on helpers (BSF only)
+    blocked: np.ndarray | None  # [R, J] bool (loss queue / BSF routing)
+
+    @property
+    def reps(self) -> int:
+        return self.response.shape[0]
+
+    @property
+    def mean_response(self) -> np.ndarray:
+        """[R] mean response time of each replication."""
+        return self.response.mean(axis=1)
+
+    @property
+    def mean_wait(self) -> np.ndarray:
+        return self.wait.mean(axis=1)
+
+    @property
+    def p_wait(self) -> np.ndarray:
+        """[R] queueing probability P[wait > 0] of each replication."""
+        return (self.wait > WAIT_EPS).mean(axis=1)
+
+    def rep(self, r: int):
+        """Replication ``r`` as a single-trace :class:`JaxSimResult`."""
+        from .sim_jax import JaxSimResult
+        return JaxSimResult(
+            response=self.response[r],
+            p_helper=None if self.p_helper is None else float(self.p_helper[r]),
+            blocked=None if self.blocked is None else self.blocked[r])
+
+
+def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
+                         s: int) -> BatchSimResult:
+    """Batched M/GI/s/s: [R, J] arrival/service arrays, R independent paths."""
+    with enable_x64():
+        blocked = np.asarray(_call(
+            _loss_scan_batch,
+            jnp.asarray(arrival, jnp.float64),
+            jnp.asarray(service, jnp.float64), s))
+    resp = np.where(blocked, 0.0, service)
+    return BatchSimResult(response=resp, wait=np.zeros_like(resp),
+                          p_helper=None, blocked=blocked)
+
+
+def fcfs_sim_batch(batch: BatchTrace) -> BatchSimResult:
+    """Batched multiserver-job FCFS over all replications at once."""
+    with enable_x64():
+        starts = np.asarray(_call(
+            _fcfs_scan_batch,
+            jnp.asarray(batch.arrival, jnp.float64),
+            jnp.asarray(batch.need, jnp.int32),
+            jnp.asarray(batch.service, jnp.float64), batch.k))
+    # same op order as fcfs_sim so replications are bit-identical to it
+    return BatchSimResult(response=starts + batch.service - batch.arrival,
+                          wait=starts - batch.arrival,
+                          p_helper=None, blocked=None)
+
+
+def modified_bs_sim_batch(batch: BatchTrace,
+                          partition: BalancedPartition | None = None,
+                          wl: Workload | None = None) -> BatchSimResult:
+    """Batched ModifiedBS-FCFS (Definition 2) over all replications."""
+    if partition is None:
+        if wl is None:
+            raise ValueError("need a partition or a workload")
+        partition = balanced_partition(wl)
+    slots = np.asarray(partition.slots, dtype=np.int32)
+    s_max = int(slots.max())
+    h = int(partition.helpers)
+    if h < int(batch.need.max()):
+        raise ValueError("helper set smaller than the largest server need")
+    with enable_x64():
+        blocked, starts = _call(
+            _modbs_scan_batch,
+            jnp.asarray(batch.arrival, jnp.float64),
+            jnp.asarray(batch.cls, jnp.int32),
+            jnp.asarray(batch.need, jnp.int32),
+            jnp.asarray(batch.service, jnp.float64),
+            jnp.asarray(slots), s_max, h)
+    blocked = np.asarray(blocked)
+    starts = np.asarray(starts)
+    return BatchSimResult(response=starts + batch.service - batch.arrival,
+                          wait=starts - batch.arrival,
+                          p_helper=blocked.mean(axis=1), blocked=blocked)
+
+
+#: policy name -> batched simulator over (batch, wl); names match the
+#: Python engine's ``Policy.name`` so CSV rows line up across engines.
+BATCHED_SIMS: dict[str, Callable[[BatchTrace, Workload], BatchSimResult]] = {
+    "fcfs": lambda batch, wl: fcfs_sim_batch(batch),
+    "modbs-fcfs": lambda batch, wl: modified_bs_sim_batch(batch, wl=wl),
+}
+
+
+# --------------------------------------------------------------------------
+# k-sweeps.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Mean/CI arrays of a batched sweep, shaped [policies, points].
+
+    ``ci95_*`` is the half-width of the normal 95% confidence interval over
+    the per-replication means (0 when ``reps == 1``).
+    """
+
+    points: tuple                  # the swept values (k, or load, ...)
+    policies: tuple[str, ...]
+    num_jobs: int
+    reps: int
+    mean_response: np.ndarray      # [P, N]
+    ci95_response: np.ndarray      # [P, N]
+    mean_wait: np.ndarray          # [P, N]
+    p_wait: np.ndarray             # [P, N]
+    ci95_p_wait: np.ndarray        # [P, N]
+    p_helper: np.ndarray           # [P, N], nan where not a BSF policy
+    p95_response: np.ndarray       # [P, N] (mean of per-rep 95th pctiles)
+    utilization: np.ndarray        # [P, N] busy server-time / (k * horizon)
+    sim_s: np.ndarray              # [P, N] simulator wall time incl. compile
+
+    def rows(self, point_col: str, extra_cols: dict | None = None,
+             per_point_cols: Sequence[dict] | None = None) -> list[dict]:
+        """Benchmark CSV rows, one per (point, policy)."""
+        out = []
+        for j, pt in enumerate(self.points):
+            for i, pol in enumerate(self.policies):
+                ph = self.p_helper[i, j]
+                row = {
+                    point_col: pt, "policy": pol,
+                    "jobs": self.num_jobs, "reps": self.reps,
+                    "mean_response": self.mean_response[i, j],
+                    "ci95_response": self.ci95_response[i, j],
+                    "mean_wait": self.mean_wait[i, j],
+                    "p_wait": self.p_wait[i, j],
+                    "ci95_p_wait": self.ci95_p_wait[i, j],
+                    "p_helper": None if np.isnan(ph) else ph,
+                    "p95_response": self.p95_response[i, j],
+                    "utilization": self.utilization[i, j],
+                    "sim_s": round(float(self.sim_s[i, j]), 2),
+                }
+                if extra_cols:
+                    row.update(extra_cols)
+                if per_point_cols:
+                    row.update(per_point_cols[j])
+                out.append(row)
+        return out
+
+
+def _ci95(per_rep: np.ndarray) -> float:
+    if per_rep.size < 2:
+        return 0.0
+    return float(1.96 * per_rep.std(ddof=1) / np.sqrt(per_rep.size))
+
+
+def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
+                      *, num_jobs: int = 100_000, reps: int = 8,
+                      seed: int = 0,
+                      policies: Sequence[str] = ("fcfs", "modbs-fcfs"),
+                      ) -> SweepResult:
+    """Run the batched simulators over ``wl_factory(point)`` for each point.
+
+    One batch of ``reps`` Philox replications x ``num_jobs`` arrivals is
+    sampled per point; each policy's batched scan is jit-compiled once per
+    (k, reps, num_jobs) shape, so sweeps that hold k fixed (Fig. 2a's load
+    sweep) compile exactly once.  Returns mean/CI arrays [policies, points].
+    """
+    unknown = set(policies) - set(BATCHED_SIMS)
+    if unknown:
+        raise KeyError(f"no batched simulator for {sorted(unknown)}; "
+                       f"available: {sorted(BATCHED_SIMS)}")
+    P, N = len(policies), len(points)
+    shape = (P, N)
+    mean_r = np.zeros(shape); ci_r = np.zeros(shape)
+    mean_w = np.zeros(shape); p_wait = np.zeros(shape)
+    ci_pw = np.zeros(shape)
+    p_help = np.full(shape, np.nan)
+    p95 = np.zeros(shape); util = np.zeros(shape); sim_s = np.zeros(shape)
+    for j, pt in enumerate(points):
+        wl = wl_factory(pt)
+        batch = wl.sample_traces(num_jobs, reps, seed=seed)
+        busy = (batch.need * batch.service).sum(axis=1)        # [R]
+        for i, pol in enumerate(policies):
+            t0 = time.time()
+            res = BATCHED_SIMS[pol](batch, wl)
+            sim_s[i, j] = time.time() - t0
+            mean_r[i, j] = res.mean_response.mean()
+            ci_r[i, j] = _ci95(res.mean_response)
+            mean_w[i, j] = res.mean_wait.mean()
+            p_wait[i, j] = res.p_wait.mean()
+            ci_pw[i, j] = _ci95(res.p_wait)
+            if res.p_helper is not None:
+                p_help[i, j] = res.p_helper.mean()
+            p95[i, j] = np.percentile(res.response, 95, axis=1).mean()
+            completion = batch.arrival + res.response
+            horizon = completion.max(axis=1)                   # [R]
+            util[i, j] = (busy / (wl.k * horizon)).mean()
+    return SweepResult(points=tuple(points), policies=tuple(policies),
+                       num_jobs=num_jobs, reps=reps,
+                       mean_response=mean_r, ci95_response=ci_r,
+                       mean_wait=mean_w, p_wait=p_wait, ci95_p_wait=ci_pw,
+                       p_helper=p_help, p95_response=p95,
+                       utilization=util, sim_s=sim_s)

@@ -1,4 +1,4 @@
-"""JAX (lax.scan) vectorized simulators for the BSF fast path.
+"""JAX (``lax.scan``) vectorized simulators — the per-trace fast path.
 
 The event-driven reference simulator is exact but Python-speed.  For the
 policies whose dynamics are *arrival-indexed* — loss queues and FCFS — the
@@ -24,6 +24,20 @@ server free-times.  Job j with need n starts at
 (the clamp T_{j-1} enforces in-order starts = head-of-line blocking), then
 the n smallest entries of W are set to T_j + S_j.  Idle servers are
 interchangeable, so this multiset recursion is exact.
+
+O(k) sorted-invariant step.  W is kept sorted ascending as a scan invariant
+instead of re-sorted every arrival (O(k log k) per job).  Each of the n
+retired entries satisfies W[i] <= W[n-1] <= T_j <= T_j + S_j, so removing
+the n smallest and inserting n copies of comp = T_j + S_j is a roll-and-
+insert:  with p = searchsorted(W, comp, 'right') - n, the new sorted vector
+is  [W[n:n+p], comp * n, W[n+p:]] — a single O(k) gather.  The pre-fix
+full-sort step is retained as ``_fcfs_scan_reference`` and the two paths
+are cross-validated bit-for-bit in ``tests/test_sim_cross.py``.
+
+Batch layer.  :mod:`repro.core.sim_batch` vmaps the ``*_core`` functions in
+this module over a replications axis (``Workload.sample_traces``) — that is
+the benchmark fast path for the Fig. 1/2 k-sweeps; the wrappers here remain
+the single-trace entry points and the cross-validation anchors.
 """
 
 from __future__ import annotations
@@ -59,8 +73,8 @@ class JaxSimResult:
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("s",))
-def _loss_scan(arrival, service, s: int):
+def _loss_core(arrival, service, s: int):
+    """Blocked mask of one M/GI/s/s sample path (un-jitted scan core)."""
     def step(comp, inp):
         t, svc = inp
         busy = jnp.sum(comp > t)
@@ -72,6 +86,9 @@ def _loss_scan(arrival, service, s: int):
     comp0 = jnp.zeros(s, dtype=arrival.dtype)
     _, blocked = jax.lax.scan(step, comp0, (arrival, service))
     return blocked
+
+
+_loss_scan = partial(jax.jit, static_argnames=("s",))(_loss_core)
 
 
 def loss_queue_sim(arrival: np.ndarray, service: np.ndarray, s: int) -> JaxSimResult:
@@ -88,8 +105,44 @@ def loss_queue_sim(arrival: np.ndarray, service: np.ndarray, s: int) -> JaxSimRe
 # --------------------------------------------------------------------------
 
 
+def _fcfs_sorted_step(W, t_prev, t, n, svc):
+    """One Kiefer–Wolfowitz arrival on a sorted free-time vector, O(k).
+
+    Requires W sorted ascending; returns (W', start) with W' sorted.
+    """
+    k = W.shape[0]
+    nth = W[jnp.maximum(n - 1, 0)]
+    start = jnp.maximum(jnp.maximum(t, t_prev), nth)
+    comp = start + svc
+    # All n retired entries are <= comp, so the remainder W[n:] shifted left
+    # with n copies of comp inserted at offset p stays sorted.
+    p = jnp.searchsorted(W, comp, side="right") - n
+    i = jnp.arange(k)
+    W_new = jnp.where((i >= p) & (i < p + n), comp,
+                      W[jnp.where(i < p, i + n, i)])
+    return W_new, start
+
+
+def _fcfs_core(arrival, need, service, k: int):
+    """Start times of one FCFS sample path (un-jitted scan core)."""
+    def step(carry, inp):
+        W, t_prev = carry
+        t, n, svc = inp
+        W_new, start = _fcfs_sorted_step(W, t_prev, t, n, svc)
+        return (W_new, start), start
+
+    W0 = jnp.zeros(k, dtype=arrival.dtype)
+    (_, _), starts = jax.lax.scan(step, (W0, jnp.zeros((), arrival.dtype)),
+                                  (arrival, need, service))
+    return starts
+
+
+_fcfs_scan = partial(jax.jit, static_argnames=("k",))(_fcfs_core)
+
+
 @partial(jax.jit, static_argnames=("k",))
-def _fcfs_scan(arrival, need, service, k: int):
+def _fcfs_scan_reference(arrival, need, service, k: int):
+    """Pre-optimization full-sort step — kept as the bit-for-bit oracle."""
     def step(carry, inp):
         W, t_prev = carry
         t, n, svc = inp
@@ -123,13 +176,11 @@ def fcfs_sim(trace: Trace) -> JaxSimResult:
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("s_max", "h"))
-def _modbs_scan(arrival, cls, need, service, slots, s_max: int, h: int):
+def _modbs_core(arrival, cls, need, service, slots, s_max: int, h: int):
     """Per-class loss queues (padded to s_max) + helper FCFS on h servers."""
-    C = slots.shape[0]
 
     def step(carry, inp):
-        comp, W, t_prev = carry           # comp: [C, s_max], W: [h]
+        comp, W, t_prev = carry           # comp: [C, s_max], W: [h] sorted
         t, c, n, svc = inp
         row = comp[c]
         busy = jnp.sum(row > t)           # padding counts as busy
@@ -138,12 +189,9 @@ def _modbs_scan(arrival, cls, need, service, slots, s_max: int, h: int):
         idx = jnp.argmin(row)
         new_row = row.at[idx].set(jnp.where(blocked, row[idx], t + svc))
         comp = comp.at[c].set(new_row)
-        # --- helper path: FCFS on h servers
-        Ws = jnp.sort(W)
-        nth = Ws[jnp.maximum(n - 1, 0)]
-        start_h = jnp.maximum(jnp.maximum(t, t_prev), nth)
-        mask = (jnp.arange(h) < n) & blocked
-        W_new = jnp.where(mask, start_h + svc, Ws)
+        # --- helper path: FCFS on h servers, engaged only when blocked
+        W_upd, start_h = _fcfs_sorted_step(W, t_prev, t, n, svc)
+        W_new = jnp.where(blocked, W_upd, W)
         t_prev_new = jnp.where(blocked, start_h, t_prev)
         start = jnp.where(blocked, start_h, t)
         return (comp, W_new, t_prev_new), (blocked, start)
@@ -156,6 +204,9 @@ def _modbs_scan(arrival, cls, need, service, slots, s_max: int, h: int):
         step, (comp0, W0, jnp.zeros((), arrival.dtype)),
         (arrival, cls, need, service))
     return blocked, starts
+
+
+_modbs_scan = partial(jax.jit, static_argnames=("s_max", "h"))(_modbs_core)
 
 
 def modified_bs_sim(trace: Trace, partition: BalancedPartition | None = None,
@@ -185,7 +236,13 @@ def modified_bs_sim(trace: Trace, partition: BalancedPartition | None = None,
 
 
 def estimate_p_helper(wl: Workload, num_jobs: int = 200_000,
-                      seed: int = 0) -> float:
-    """Fast Monte-Carlo P_H^{ModifiedBS-π} (the Cor.-1 upper bound), jit'd."""
-    trace = wl.sample_trace(num_jobs, seed=seed)
-    return modified_bs_sim(trace, wl=wl).p_helper
+                      seed: int = 0, reps: int = 1) -> float:
+    """Fast Monte-Carlo P_H^{ModifiedBS-π} (the Cor.-1 upper bound).
+
+    Runs on the batched vmap substrate: ``reps`` independent Philox
+    replications of ``num_jobs`` arrivals each, averaged.
+    """
+    from .sim_batch import modified_bs_sim_batch  # local: avoid import cycle
+    batch = wl.sample_traces(num_jobs, reps, seed=seed)
+    res = modified_bs_sim_batch(batch, wl=wl)
+    return float(res.p_helper.mean())

@@ -187,8 +187,13 @@ class Workload:
 
     # -- trace sampling -----------------------------------------------------
 
-    def sample_trace(self, num_jobs: int, seed: int = 0) -> "Trace":
-        """Sample ``num_jobs`` Poisson arrivals with i.i.d. classes/services."""
+    def sample_trace(self, num_jobs: int, seed=0) -> "Trace":
+        """Sample ``num_jobs`` Poisson arrivals with i.i.d. classes/services.
+
+        ``seed`` is anything :func:`numpy.random.default_rng` accepts — an
+        int, a ``SeedSequence``, or a ``BitGenerator`` such as the Philox
+        stream returned by :func:`replication_stream`.
+        """
         rng = np.random.default_rng(seed)
         inter = rng.exponential(1.0 / self.lam, size=num_jobs)
         arrival = np.cumsum(inter)
@@ -200,6 +205,72 @@ class Workload:
         needs = self.needs[cls]
         return Trace(arrival=arrival, cls=cls.astype(np.int64), service=service,
                      need=needs, k=self.k)
+
+    def sample_traces(self, num_jobs: int, reps: int,
+                      seed: int = 0) -> "BatchTrace":
+        """Sample ``reps`` independent replications as stacked [R, J] arrays.
+
+        Replication ``r`` draws from the counter-based Philox stream
+        ``replication_stream(seed, r)``, so the batch is reproducible
+        replication-by-replication against the single-trace path:
+
+            sample_traces(J, R, seed).rep(r)
+              == sample_trace(J, seed=replication_stream(seed, r))
+
+        This is the sampling side of the batched vmap fast path
+        (:mod:`repro.core.sim_batch`).
+        """
+        if reps < 1:
+            raise ValueError("need at least one replication")
+        traces = [self.sample_trace(num_jobs, seed=replication_stream(seed, r))
+                  for r in range(reps)]
+        return BatchTrace(
+            arrival=np.stack([t.arrival for t in traces]),
+            cls=np.stack([t.cls for t in traces]),
+            service=np.stack([t.service for t in traces]),
+            need=np.stack([t.need for t in traces]),
+            k=self.k)
+
+
+def replication_stream(seed: int, rep: int) -> np.random.Philox:
+    """The Philox stream of replication ``rep`` under master seed ``seed``.
+
+    Philox is counter-based: distinct (seed, rep) keys give independent
+    streams with no sequential seeding artifacts, and the mapping is pure
+    arithmetic — no SeedSequence state to thread through checkpoints.
+    """
+    if seed < 0 or rep < 0:
+        raise ValueError("seed and rep must be nonnegative")
+    return np.random.Philox(key=np.array([seed, rep], dtype=np.uint64))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchTrace:
+    """``reps`` stacked replications of a job trace ([R, J] arrays)."""
+
+    arrival: np.ndarray   # float64 [R, J], nondecreasing along axis 1
+    cls: np.ndarray       # int64   [R, J]
+    service: np.ndarray   # float64 [R, J]
+    need: np.ndarray      # int64   [R, J]
+    k: int
+
+    def __post_init__(self):
+        if not (self.arrival.shape == self.cls.shape == self.service.shape
+                == self.need.shape) or self.arrival.ndim != 2:
+            raise ValueError("batch arrays must share one [R, J] shape")
+
+    @property
+    def reps(self) -> int:
+        return self.arrival.shape[0]
+
+    @property
+    def num_jobs(self) -> int:
+        return self.arrival.shape[1]
+
+    def rep(self, r: int) -> "Trace":
+        """Replication ``r`` as a plain single :class:`Trace`."""
+        return Trace(arrival=self.arrival[r], cls=self.cls[r],
+                     service=self.service[r], need=self.need[r], k=self.k)
 
 
 @dataclasses.dataclass(frozen=True)

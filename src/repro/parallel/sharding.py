@@ -47,12 +47,15 @@ class AxisRules:
         phys = self.rules[logical]
         if phys is None:
             return None
-        if isinstance(phys, str):
+        scalar = isinstance(phys, str)
+        if scalar:
             phys = (phys,)
         present = tuple(a for a in phys if a in mesh.axis_names)
         if not present:
             return None
-        return present if len(present) > 1 else present[0]
+        # A composite rule stays a tuple even when pruned to one axis, so
+        # spec equality is stable across meshes; a plain rule stays a string.
+        return present[0] if scalar else present
 
     def spec(self, axes: Sequence[str | None], mesh: Mesh) -> P:
         """PartitionSpec for a tensor with the given logical axes."""

@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.erlang import (erlang_b, erlang_b_array, erlang_b_jnp,
                                erlang_b_log, halfin_whitt_limit,

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+from _hypothesis_compat import assume, given, settings, st
 
 from repro.core.partition import balanced_partition, compute_psi
 from repro.core.workload import Exp, JobClass, Workload

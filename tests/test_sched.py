@@ -3,7 +3,7 @@ queueing simulator, elastic repartition, straggler mitigation."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.policies import BalancedSplitting
 from repro.core.simulator import simulate_trace

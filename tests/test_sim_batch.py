@@ -1,0 +1,125 @@
+"""Batched substrate: sampling determinism, sweep API, bench harness."""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sim_batch import sweep_many_server
+from repro.core.workload import (Exp, JobClass, Workload, figure1_workload,
+                                 replication_stream)
+
+
+def small_workload(k=32, load=0.7):
+    classes = (
+        JobClass("s", 1, Exp(1.0), 0.7),
+        JobClass("m", 4, Exp(4.0), 0.2),
+        JobClass("l", 8, Exp(8.0), 0.1),
+    )
+    return Workload(k=k, lam=1.0, classes=classes).with_load(load)
+
+
+# -- sampling determinism -----------------------------------------------------
+
+
+def test_sample_traces_reps_match_derived_single_traces():
+    """Replication r of a batch must be bit-identical to the single-trace
+    path seeded with the derived Philox stream — so single- and
+    multi-replication experiments reproduce each other."""
+    wl = small_workload()
+    batch = wl.sample_traces(1500, reps=4, seed=42)
+    assert batch.reps == 4 and batch.num_jobs == 1500
+    for r in range(4):
+        single = wl.sample_trace(1500, seed=replication_stream(42, r))
+        rep = batch.rep(r)
+        assert np.array_equal(rep.arrival, single.arrival)
+        assert np.array_equal(rep.cls, single.cls)
+        assert np.array_equal(rep.service, single.service)
+        assert np.array_equal(rep.need, single.need)
+
+
+def test_sample_traces_is_reproducible_and_streams_independent():
+    wl = small_workload()
+    a = wl.sample_traces(800, reps=3, seed=7)
+    b = wl.sample_traces(800, reps=3, seed=7)
+    assert np.array_equal(a.arrival, b.arrival)
+    assert np.array_equal(a.service, b.service)
+    # distinct replications and distinct seeds give distinct streams
+    assert not np.array_equal(a.arrival[0], a.arrival[1])
+    c = wl.sample_traces(800, reps=3, seed=8)
+    assert not np.array_equal(a.arrival, c.arrival)
+
+
+def test_replication_stream_rejects_negative():
+    with pytest.raises(ValueError):
+        replication_stream(-1, 0)
+    with pytest.raises(ValueError):
+        replication_stream(0, -2)
+
+
+# -- sweep API ----------------------------------------------------------------
+
+
+def test_sweep_many_server_shapes_and_sanity():
+    ks = (32, 64)
+    sweep = sweep_many_server(lambda k: figure1_workload(k), ks,
+                              num_jobs=2000, reps=3, seed=1)
+    assert sweep.points == ks
+    assert sweep.policies == ("fcfs", "modbs-fcfs")
+    for arr in (sweep.mean_response, sweep.ci95_response, sweep.p_wait,
+                sweep.p_helper, sweep.utilization, sweep.sim_s):
+        assert arr.shape == (2, len(ks))
+    assert (sweep.mean_response > 0).all()
+    assert ((0 <= sweep.p_wait) & (sweep.p_wait <= 1)).all()
+    assert (sweep.ci95_response >= 0).all()
+    # p_helper defined exactly for the BSF policy
+    assert np.isnan(sweep.p_helper[0]).all()        # fcfs
+    assert not np.isnan(sweep.p_helper[1]).any()    # modbs-fcfs
+    rows = sweep.rows("k", extra_cols={"regime": "critical"})
+    assert len(rows) == 2 * len(ks)
+    assert rows[0]["k"] == 32 and rows[0]["regime"] == "critical"
+    assert rows[0]["reps"] == 3
+
+
+def test_sweep_rejects_unknown_policy():
+    with pytest.raises(KeyError):
+        sweep_many_server(lambda k: figure1_workload(k), (32,),
+                          num_jobs=100, reps=1, policies=("bs",))
+
+
+def test_sweep_single_rep_has_zero_ci():
+    sweep = sweep_many_server(lambda k: figure1_workload(k), (32,),
+                              num_jobs=500, reps=1)
+    assert (sweep.ci95_response == 0).all()
+
+
+# -- bench harness ------------------------------------------------------------
+
+
+def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
+    bench_sim = pytest.importorskip(
+        "benchmarks.bench_sim",
+        reason="benchmarks package needs repo root on sys.path")
+    out = tmp_path / "BENCH_sim.json"
+    t0 = time.time()
+    report = bench_sim.main(["--smoke", "--out", str(out)])
+    wall = time.time() - t0
+    assert wall < 60, f"--smoke took {wall:.1f}s, budget is 60s"
+    on_disk = json.loads(out.read_text())
+    assert on_disk == report
+    assert on_disk["schema"] == bench_sim.SCHEMA
+    rows = on_disk["rows"]
+    # 3 engines x 2 policies per k
+    assert len(rows) == 6 * len(on_disk["config"]["ks"])
+    for r in rows:
+        assert set(bench_sim.ROW_KEYS) <= set(r)
+        assert r["engine"] in ("python", "jax", "jax-batch")
+        assert r["jobs_per_sec"] > 0 and r["wall_s"] > 0
+        if r["engine"] == "python":
+            assert r["speedup_vs_python"] is None
+        else:
+            assert r["speedup_vs_python"] > 0
+    # the point of the substrate: batched beats the event engine
+    batched = [r for r in rows if r["engine"] == "jax-batch"]
+    assert all(r["speedup_vs_python"] > 1 for r in batched)

@@ -1,0 +1,156 @@
+"""Event-for-event cross-validation of the lax.scan simulators.
+
+The contract promised by the ``sim_jax`` module docstring: every scan
+simulator (and its batched vmap variant) reproduces the Python
+event-driven engine's sample path exactly — same start times, same
+responses, same blocking decisions — on the traces both can run.  Also
+pins the O(k) sorted-invariant FCFS step bit-for-bit to the retained
+full-sort reference step.
+"""
+
+import heapq
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import sim_jax
+from repro.core.policies import make_policy
+from repro.core.sim_batch import (fcfs_sim_batch, loss_queue_sim_batch,
+                                  modified_bs_sim_batch)
+from repro.core.sim_jax import fcfs_sim, loss_queue_sim, modified_bs_sim
+from repro.core.simulator import Simulation
+from repro.core.workload import Exp, JobClass, Workload, figure1_workload
+
+
+def small_workload(k=24, load=0.85):
+    classes = (
+        JobClass("s", 1, Exp(1.0), 0.7),
+        JobClass("m", 4, Exp(4.0), 0.2),
+        JobClass("l", 8, Exp(8.0), 0.1),
+    )
+    return Workload(k=k, lam=1.0, classes=classes).with_load(load)
+
+
+# -- loss queue ---------------------------------------------------------------
+
+
+def loss_queue_reference(arrival, service, s):
+    """Tiny event-driven M/GI/s/s oracle: heap of completion times."""
+    comp: list[float] = []
+    blocked = np.zeros(len(arrival), dtype=bool)
+    for j, (t, svc) in enumerate(zip(arrival, service)):
+        while comp and comp[0] <= t:
+            heapq.heappop(comp)
+        if len(comp) >= s:
+            blocked[j] = True
+        else:
+            heapq.heappush(comp, t + svc)
+    return blocked
+
+
+def test_loss_queue_event_for_event(rng):
+    n, s, lam = 5000, 6, 5.0
+    arrival = np.cumsum(rng.exponential(1 / lam, n))
+    service = rng.exponential(1.0, n)
+    res = loss_queue_sim(arrival, service, s)
+    ref = loss_queue_reference(arrival, service, s)
+    assert np.array_equal(res.blocked, ref)
+
+
+def test_loss_queue_batched_matches_single(rng):
+    R, n, s = 3, 2000, 5
+    arrival = np.cumsum(rng.exponential(0.25, (R, n)), axis=1)
+    service = rng.exponential(1.0, (R, n))
+    batch = loss_queue_sim_batch(arrival, service, s)
+    for r in range(R):
+        single = loss_queue_sim(arrival[r], service[r], s)
+        assert np.array_equal(batch.blocked[r], single.blocked)
+        assert np.array_equal(batch.response[r], single.response)
+
+
+# -- FCFS ---------------------------------------------------------------------
+
+
+def test_fcfs_event_for_event_vs_python_engine():
+    wl = small_workload()
+    trace = wl.sample_trace(4000, seed=3)
+    sim = Simulation(trace, make_policy("fcfs"))
+    sim.run()
+    jx = fcfs_sim(trace)
+    starts = jx.response + trace.arrival - trace.service
+    np.testing.assert_allclose(starts, sim.start_time, rtol=1e-12, atol=1e-9)
+    np.testing.assert_allclose(jx.response, sim.completion - trace.arrival,
+                               rtol=1e-12, atol=1e-9)
+
+
+def test_fcfs_batched_matches_single():
+    wl = small_workload()
+    batch = wl.sample_traces(2000, 3, seed=11)
+    b = fcfs_sim_batch(batch)
+    for r in range(batch.reps):
+        single = fcfs_sim(batch.rep(r))
+        assert np.array_equal(b.response[r], single.response)
+
+
+def test_fcfs_sorted_step_bitexact_vs_sort_reference():
+    """The O(k) roll-and-insert must equal the O(k log k) sort step
+    bit-for-bit, including tied arrivals and zero service times."""
+    rng = np.random.default_rng(12)
+    for k, n_jobs in ((8, 500), (64, 2000), (256, 2000)):
+        arrival = np.cumsum(rng.exponential(0.05, n_jobs))
+        arrival[1::7] = arrival[0::7][: len(arrival[1::7])]  # inject ties
+        arrival = np.sort(arrival)
+        need = rng.integers(1, max(2, k // 4), size=n_jobs)
+        service = np.where(rng.random(n_jobs) < 0.2, 0.0,
+                           rng.exponential(1.0, n_jobs))
+        with enable_x64():
+            args = (jnp.asarray(arrival, jnp.float64),
+                    jnp.asarray(need, jnp.int32),
+                    jnp.asarray(service, jnp.float64), k)
+            fast = np.asarray(sim_jax._fcfs_scan(*args))
+            ref = np.asarray(sim_jax._fcfs_scan_reference(*args))
+        assert np.array_equal(fast, ref), f"k={k}"
+
+
+def test_fcfs_full_need_jobs():
+    """Jobs needing all k servers exercise the p == 0 insertion edge."""
+    k = 8
+    arrival = np.arange(20, dtype=np.float64) * 0.1
+    need = np.full(20, k, dtype=np.int64)
+    service = np.full(20, 1.0)
+    with enable_x64():
+        args = (jnp.asarray(arrival), jnp.asarray(need, jnp.int32),
+                jnp.asarray(service), k)
+        fast = np.asarray(sim_jax._fcfs_scan(*args))
+        ref = np.asarray(sim_jax._fcfs_scan_reference(*args))
+    assert np.array_equal(fast, ref)
+    # serial system: job j starts when job j-1 completes
+    np.testing.assert_allclose(fast, np.arange(20) * 1.0 + arrival[0])
+
+
+# -- ModifiedBS-FCFS ----------------------------------------------------------
+
+
+def test_modbs_event_for_event_vs_python_engine():
+    wl = figure1_workload(256, theta=0.7)
+    trace = wl.sample_trace(4000, seed=4)
+    sim = Simulation(trace, make_policy("modbs", wl=wl))
+    py = sim.run()
+    jx = modified_bs_sim(trace, wl=wl)
+    np.testing.assert_allclose(jx.response, sim.completion - trace.arrival,
+                               rtol=1e-12, atol=1e-9)
+    assert py.p_helper == pytest.approx(jx.p_helper, abs=1e-12)
+
+
+def test_modbs_batched_matches_single():
+    wl = figure1_workload(256, theta=0.7)
+    batch = wl.sample_traces(2000, 3, seed=13)
+    b = modified_bs_sim_batch(batch, wl=wl)
+    for r in range(batch.reps):
+        single = modified_bs_sim(batch.rep(r), wl=wl)
+        assert np.array_equal(b.response[r], single.response)
+        assert float(b.p_helper[r]) == single.p_helper
+        assert np.array_equal(b.blocked[r], single.blocked)

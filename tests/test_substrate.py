@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import SyntheticTokens
 from repro.data.swf import (kit_fh2_trace, sdsc_sp2_trace, synthesize_swf,
