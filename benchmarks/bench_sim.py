@@ -24,8 +24,9 @@ import sys
 import time
 
 from repro.core.policies import make_policy
-from repro.core.sim_batch import fcfs_sim_batch, modified_bs_sim_batch
-from repro.core.sim_jax import fcfs_sim, modified_bs_sim
+from repro.core.sim_batch import (bs_sim_batch, fcfs_sim_batch,
+                                  modified_bs_sim_batch)
+from repro.core.sim_jax import bs_sim, fcfs_sim, modified_bs_sim
 from repro.core.simulator import simulate_trace
 from repro.core.workload import figure1_workload
 
@@ -58,7 +59,7 @@ def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
     python_jps = {}
 
     trace_py = wl.sample_trace(python_jobs, seed=seed)
-    for pol in ("fcfs", "modbs"):
+    for pol in ("fcfs", "modbs", "bs"):
         t0 = time.time()
         simulate_trace(trace_py, make_policy(pol, wl=wl))
         wall = time.time() - t0
@@ -68,7 +69,8 @@ def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
 
     trace = wl.sample_trace(jobs, seed=seed)
     for name, fn in (("fcfs", lambda: fcfs_sim(trace)),
-                     ("modbs-fcfs", lambda: modified_bs_sim(trace, wl=wl))):
+                     ("modbs-fcfs", lambda: modified_bs_sim(trace, wl=wl)),
+                     ("bs-fcfs", lambda: bs_sim(trace, wl=wl))):
         t0 = time.time(); fn(); first = time.time() - t0
         t0 = time.time(); fn(); wall = time.time() - t0
         rows.append(_row("jax", name, k, jobs, 1, wall,
@@ -78,7 +80,8 @@ def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
     batch = wl.sample_traces(jobs, reps, seed=seed)
     for name, fn in (("fcfs", lambda: fcfs_sim_batch(batch)),
                      ("modbs-fcfs",
-                      lambda: modified_bs_sim_batch(batch, wl=wl))):
+                      lambda: modified_bs_sim_batch(batch, wl=wl)),
+                     ("bs-fcfs", lambda: bs_sim_batch(batch, wl=wl))):
         t0 = time.time(); fn(); first = time.time() - t0
         t0 = time.time(); fn(); wall = time.time() - t0
         rows.append(_row("jax-batch", name, k, jobs, reps, wall,
@@ -98,6 +101,8 @@ def run(ks, jobs, reps, python_jobs, seed=0):
 
 
 def main(argv=None):
+    from .common import pin_scan_runtime
+    pin_scan_runtime()            # sequential scans: 1-thread XLA pool
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, < 60 s on CPU")
@@ -110,7 +115,9 @@ def main(argv=None):
     if args.smoke:
         ks, jobs, reps, pj = (64,), 20_000, 4, 2_000
     else:
-        ks, jobs, reps, pj = (256, 1024), 100_000, 8, 100_000
+        # 16 replications: the batched engines amortize the scan's fixed
+        # per-step dispatch across lanes, and the CIs tighten for free
+        ks, jobs, reps, pj = (256, 1024), 100_000, 16, 100_000
     ks = tuple(args.ks) if args.ks else ks
     jobs = args.jobs or jobs
     reps = args.reps or reps

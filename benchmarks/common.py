@@ -13,8 +13,22 @@ from repro.core.workload import Workload
 PAPER_POLICIES = ("bs", "fcfs", "serverfilling", "sf-srpt", "ff-srpt", "msf")
 
 #: policies with a batched lax.scan simulator (``repro.core.sim_batch``);
+#: bs-fcfs is BS-π proper (Def. 1 pull-backs) on the event-indexed scan,
 #: modbs-fcfs doubles as the Cor.-1 upper bound on BS-π's P_H.
-JAX_POLICIES = ("fcfs", "modbs-fcfs")
+JAX_POLICIES = ("fcfs", "modbs-fcfs", "bs-fcfs")
+
+
+def pin_scan_runtime() -> bool:
+    """One-thread XLA pool for the sequential scan cores.
+
+    No-op if JAX is already initialized; see
+    :func:`repro.core.sim_batch.pin_single_thread_runtime`.  Every
+    jax-engine benchmark entry point goes through this (directly or via
+    :func:`run_policies_jax`) so none silently loses the 3-4x scan
+    throughput.
+    """
+    from repro.core.sim_batch import pin_single_thread_runtime
+    return pin_single_thread_runtime()
 
 
 def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
@@ -27,6 +41,7 @@ def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
     (parallel to ``points``) of extra per-point column dicts.
     """
     from repro.core.sim_batch import sweep_many_server
+    pin_scan_runtime()
     sweep = sweep_many_server(wl_factory, points, num_jobs=num_jobs,
                               reps=reps, seed=seed, policies=policies)
     return sweep.rows(point_col, extra_cols=extra_cols,

@@ -7,7 +7,8 @@ small jobs (f_k, 1) w.p. 0.95; large (2f_k,40)/(4f_k,20)/(8f_k,10) w.p.
 Two engines:
 
 * ``--engine jax`` (default) — the batched vmap substrate
-  (``repro.core.sim_batch``): FCFS + ModifiedBS-FCFS, ``--reps``
+  (``repro.core.sim_batch``): FCFS + ModifiedBS-FCFS + BS-FCFS proper
+  (Definition 1, rule-3 pull-backs, on the event-indexed scan), ``--reps``
   independent Philox replications per k, mean/CI columns.
 * ``--engine python`` — the exact event-driven engine over the full paper
   policy set (slow; use for the policies the scan substrate cannot cover).
@@ -20,7 +21,8 @@ import argparse
 from repro.core.theory import analyze
 from repro.core.workload import figure1_workload
 
-from .common import PAPER_POLICIES, emit, run_policies, run_policies_jax
+from .common import JAX_POLICIES, PAPER_POLICIES, emit, run_policies, \
+    run_policies_jax
 
 COLS = ["k", "policy", "mean_response", "ci95_response", "reps", "mean_wait",
         "p_wait", "ci95_p_wait", "p_helper", "p95_response", "utilization",
@@ -47,11 +49,11 @@ def run(ks=(256, 512, 1024, 2048), num_jobs=30_000, seed=0,
 
 
 def run_jax(ks=(256, 512, 1024, 2048), num_jobs=100_000, reps=8, seed=0,
-            theta=0.7):
-    """Batched-substrate sweep (FCFS + ModifiedBS-FCFS with CIs)."""
+            theta=0.7, policies=JAX_POLICIES):
+    """Batched-substrate sweep (FCFS + ModifiedBS-FCFS + BS-FCFS, CIs)."""
     return run_policies_jax(
         lambda k: figure1_workload(k, theta=theta), ks, "k",
-        num_jobs=num_jobs, reps=reps, seed=seed,
+        num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
         per_point_cols=[_theory_cols(k, theta) for k in ks])
 
 
@@ -62,6 +64,8 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=8)
     ap.add_argument("--ks", type=int, nargs="+",
                     default=[256, 512, 1024, 2048])
+    ap.add_argument("--policies", nargs="+", default=None,
+                    help="subset of the engine's policy set")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 10^6 arrivals")
     args = ap.parse_args(argv)
@@ -69,9 +73,11 @@ def main(argv=None):
     jobs = args.jobs if args.jobs is not None \
         else (1_000_000 if args.full else default)
     if args.engine == "jax":
-        rows = run_jax(ks=tuple(args.ks), num_jobs=jobs, reps=args.reps)
+        rows = run_jax(ks=tuple(args.ks), num_jobs=jobs, reps=args.reps,
+                       policies=tuple(args.policies or JAX_POLICIES))
     else:
-        rows = run(ks=tuple(args.ks), num_jobs=jobs)
+        rows = run(ks=tuple(args.ks), num_jobs=jobs,
+                   policies=tuple(args.policies or PAPER_POLICIES))
     emit(rows, COLS)
 
 

@@ -3,10 +3,11 @@
 Same job classes and server needs as Figure 1 (k = 512, f_k = 6).
 
 ``--engine jax`` (default) runs both sweeps on the batched vmap substrate
-(FCFS + ModifiedBS-FCFS, ``--reps`` replications, mean/CI columns); the
-heavy-traffic sweep holds k fixed, so every load point reuses one compiled
-(k, R, J) executable.  ``--engine python`` runs the event-driven engine
-over the full paper policy set.
+(FCFS + ModifiedBS-FCFS + BS-FCFS proper with Def.-1 pull-backs, ``--reps``
+replications, mean/CI columns); the heavy-traffic sweep holds k fixed, so
+every load point reuses one compiled (k, R, J) executable.
+``--engine python`` runs the event-driven engine over the full paper
+policy set.
 """
 
 from __future__ import annotations
@@ -16,7 +17,8 @@ import argparse
 from repro.core.workload import figure2_workload, figure1_base_classes, \
     subcritical_scaling
 
-from .common import PAPER_POLICIES, emit, run_policies, run_policies_jax
+from .common import JAX_POLICIES, PAPER_POLICIES, emit, run_policies, \
+    run_policies_jax
 
 COLS = ["regime", "k", "load", "policy", "mean_response", "ci95_response",
         "reps", "mean_wait", "p_wait", "ci95_p_wait", "p_helper",
@@ -53,19 +55,20 @@ def run_subcritical(load=0.85, ks=(256, 512, 1024, 2048), num_jobs=20_000,
 
 
 def run_heavy_jax(k=512, loads=(0.5, 0.7, 0.8, 0.9, 0.95),
-                  num_jobs=100_000, reps=8, seed=0):
+                  num_jobs=100_000, reps=8, seed=0, policies=JAX_POLICIES):
     return run_policies_jax(
         lambda load: figure2_workload(k, load), loads, "load",
-        num_jobs=num_jobs, reps=reps, seed=seed,
+        num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
         extra_cols={"regime": "heavy", "k": k})
 
 
 def run_subcritical_jax(load=0.85, ks=(256, 512, 1024, 2048),
-                        num_jobs=100_000, reps=8, seed=0):
+                        num_jobs=100_000, reps=8, seed=0,
+                        policies=JAX_POLICIES):
     factory = _subcritical_factory(load)
     return run_policies_jax(
         factory, ks, "k", num_jobs=num_jobs, reps=reps, seed=seed,
-        extra_cols={"regime": "subcritical"},
+        policies=policies, extra_cols={"regime": "subcritical"},
         per_point_cols=[{"load": round(factory(k).load, 4)} for k in ks])
 
 
@@ -74,16 +77,22 @@ def main(argv=None):
     ap.add_argument("--engine", choices=("jax", "python"), default="jax")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--reps", type=int, default=8)
+    ap.add_argument("--policies", nargs="+", default=None,
+                    help="subset of the engine's policy set")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
     default = 100_000 if args.engine == "jax" else 20_000
     jobs = args.jobs if args.jobs is not None \
         else (1_000_000 if args.full else default)
     if args.engine == "jax":
-        rows = (run_heavy_jax(num_jobs=jobs, reps=args.reps)
-                + run_subcritical_jax(num_jobs=jobs, reps=args.reps))
+        pols = tuple(args.policies or JAX_POLICIES)
+        rows = (run_heavy_jax(num_jobs=jobs, reps=args.reps, policies=pols)
+                + run_subcritical_jax(num_jobs=jobs, reps=args.reps,
+                                      policies=pols))
     else:
-        rows = run_heavy(num_jobs=jobs) + run_subcritical(num_jobs=jobs)
+        pols = tuple(args.policies or PAPER_POLICIES)
+        rows = (run_heavy(num_jobs=jobs, policies=pols)
+                + run_subcritical(num_jobs=jobs, policies=pols))
     emit(rows, COLS)
 
 

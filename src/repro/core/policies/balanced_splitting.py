@@ -111,6 +111,10 @@ class BalancedSplitting(Policy):
                         self.h_wait.pop(idx)
                         self.free_slots[i] -= 1
                         self.a_running.add(h)
+                        # The pull-back may have removed the head-of-line job
+                        # that was blocking π = FCFS: queued jobs that now fit
+                        # must start NOW, not at the next arrival/departure.
+                        self._helper_schedule(view)
                         break
         elif j in self.h_running:
             self.h_running.discard(j)

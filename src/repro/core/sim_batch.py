@@ -7,11 +7,16 @@ Python dispatch per replication.  This module vmaps the un-jitted scan cores
 of :mod:`repro.core.sim_jax` over a leading replications axis:
 
 * ``loss_queue_sim_batch`` / ``fcfs_sim_batch`` / ``modified_bs_sim_batch``
-  consume a :class:`~repro.core.workload.BatchTrace` ([R, J] arrays sampled
-  with per-replication Philox streams) and return per-replication metrics.
-  Each is compiled once per (k, R, J) shape with donated input buffers, so a
-  whole k-sweep at fixed (R, J) pays one compile per k and zero per-trace
-  Python overhead.
+  / ``bs_sim_batch`` consume a :class:`~repro.core.workload.BatchTrace`
+  ([R, J] arrays sampled with per-replication Philox streams) and return
+  per-replication metrics.  Each is compiled once per (k, R, J) shape with
+  donated input buffers, so a whole k-sweep at fixed (R, J) pays one
+  compile per k and zero per-trace Python overhead.  ``bs_sim_batch`` is
+  BS-π proper (Definition 1 rule-3 pull-backs) on the event-indexed 2J-step
+  scan of :func:`repro.core.sim_jax._bs_core` — per-class ring buffers and
+  the sorted helper free-time vector ride in the scan carry, so the Thm-1/2
+  zero-wait validations now cover the paper's headline policy at full
+  k-sweep scale.
 * ``sweep_many_server`` drives the Fig. 1/2-style sweeps: one workload per
   swept point, ``reps`` replications each, returning mean/CI arrays ready
   for the benchmark CSVs.
@@ -24,6 +29,7 @@ Replication r of a batch is bit-identical to the single-trace path on
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import warnings
 from functools import partial
@@ -36,7 +42,8 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from .partition import BalancedPartition, balanced_partition
-from .sim_jax import _fcfs_core, _loss_core, _modbs_core
+from .sim_jax import (_bs_args, _bs_core, _bs_scatter_events, _fcfs_core,
+                      _loss_core, _modbs_core)
 from .workload import BatchTrace, Workload
 
 #: waiting-time epsilon for P[wait > 0] — matches ``Simulation.wait_eps``
@@ -50,6 +57,42 @@ def _call(fn, *args):
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
         return jax.block_until_ready(fn(*args))
+
+
+def pin_single_thread_runtime() -> bool:
+    """Init the XLA:CPU backend with a single-thread intra-op pool.
+
+    The scan cores are inherently sequential: every op in a scan body is
+    microseconds of work, and XLA's thunk executor pays a cross-core
+    handoff per op when its intra-op pool has more than one thread — on a
+    2-core host that synchronization is 3-4x the entire runtime of the
+    BS-FCFS event scan (measured: 101k -> 339k jobs/s at k=256, R=8), and
+    the FCFS/ModBS scans get mildly faster too.  PJRT sizes the pool from
+    the CPUs visible when the backend initializes, so this must run before
+    the first JAX computation: it briefly restricts the process affinity
+    to one CPU, forces backend init, then restores the affinity.
+
+    Returns True if the pool was pinned; False (no-op) where affinity is
+    unsupported or the backend is already initialized — callers may
+    proceed either way, the result is purely a perf hint.  Benchmark
+    entry points call this; library code never does.
+    """
+    try:
+        already = bool(jax._src.xla_bridge._backends)
+    except AttributeError:  # private API moved — don't guess, don't pin
+        already = True
+    if already:
+        return False
+    try:
+        cpus = os.sched_getaffinity(0)
+        os.sched_setaffinity(0, {min(cpus)})
+        try:
+            jax.devices()  # forces backend init with the reduced affinity
+        finally:
+            os.sched_setaffinity(0, cpus)
+        return True
+    except (AttributeError, OSError):  # non-Linux or restricted
+        return False
 
 
 # --------------------------------------------------------------------------
@@ -76,6 +119,15 @@ def _modbs_scan_batch(arrival, cls, need, service, slots, s_max: int, h: int):
         arrival, cls, need, service)
 
 
+@partial(jax.jit, static_argnames=("s_max", "h", "q_cap"),
+         donate_argnums=(0, 1, 2, 3))
+def _bs_scan_batch(arrival, cls, need, service, slots, s_max: int, h: int,
+                   q_cap: int):
+    # _bs_core carries the replications axis natively (hand-vectorized
+    # scatters with per-lane indices) — no vmap; see its docstring.
+    return _bs_core(arrival, cls, need, service, slots, s_max, h, q_cap)
+
+
 # --------------------------------------------------------------------------
 # Host wrappers.
 # --------------------------------------------------------------------------
@@ -89,6 +141,8 @@ class BatchSimResult:
     wait: np.ndarray            # [R, J] waiting time per job
     p_helper: np.ndarray | None # [R] fraction served on helpers (BSF only)
     blocked: np.ndarray | None  # [R, J] bool (loss queue / BSF routing)
+    p_routed: np.ndarray | None = None  # [R] fraction routed to H on arrival
+                                        # (> p_helper under Def.-1 pull-backs)
 
     @property
     def reps(self) -> int:
@@ -114,7 +168,9 @@ class BatchSimResult:
         return JaxSimResult(
             response=self.response[r],
             p_helper=None if self.p_helper is None else float(self.p_helper[r]),
-            blocked=None if self.blocked is None else self.blocked[r])
+            blocked=None if self.blocked is None else self.blocked[r],
+            p_routed=None if self.p_routed is None
+            else float(self.p_routed[r]))
 
 
 def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
@@ -169,7 +225,50 @@ def modified_bs_sim_batch(batch: BatchTrace,
     starts = np.asarray(starts)
     return BatchSimResult(response=starts + batch.service - batch.arrival,
                           wait=starts - batch.arrival,
-                          p_helper=blocked.mean(axis=1), blocked=blocked)
+                          p_helper=blocked.mean(axis=1), blocked=blocked,
+                          p_routed=blocked.mean(axis=1))
+
+
+def bs_sim_batch(batch: BatchTrace,
+                 partition: BalancedPartition | None = None,
+                 wl: Workload | None = None,
+                 queue_cap: int | None = None) -> BatchSimResult:
+    """Batched BS-FCFS (Definition 1, rule-3 pull-backs) over all reps.
+
+    Runs the event-indexed 2J-step scan of ``sim_jax._bs_core`` vmapped
+    over the replications axis; replication ``r`` is bit-identical to
+    ``bs_sim(batch.rep(r))``.  Raises if any replication overflowed the
+    per-class helper-wait ring buffers (``queue_cap``, default
+    ``min(J, 8192)``) — an overflow means the workload is unstable at this
+    load, not that the result is approximate.
+    """
+    slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
+    with enable_x64():
+        tagged, rec_t, ovf = _call(
+            _bs_scan_batch,
+            jnp.asarray(batch.arrival, jnp.float64),
+            jnp.asarray(batch.cls, jnp.int32),
+            jnp.asarray(batch.need, jnp.int32),
+            jnp.asarray(batch.service, jnp.float64),
+            jnp.asarray(slots), s_max, h, q_cap)
+    ovf = np.asarray(ovf)
+    if ovf.any():
+        raise RuntimeError(
+            f"helper-wait ring buffer overflow (queue_cap={q_cap}) in "
+            f"replication(s) {np.flatnonzero(ovf).tolist()} — workload "
+            f"unstable at this load, or raise queue_cap")
+    tagged, rec_t = np.asarray(tagged), np.asarray(rec_t)
+    J = batch.num_jobs
+    starts = np.zeros((batch.reps, J))
+    served = np.zeros((batch.reps, J), bool)
+    routed = np.zeros((batch.reps, J), bool)
+    for r in range(batch.reps):
+        starts[r], served[r], routed[r] = _bs_scatter_events(
+            J, tagged[r], rec_t[r])
+    return BatchSimResult(response=starts + batch.service - batch.arrival,
+                          wait=starts - batch.arrival,
+                          p_helper=served.mean(axis=1), blocked=None,
+                          p_routed=routed.mean(axis=1))
 
 
 #: policy name -> batched simulator over (batch, wl); names match the
@@ -177,6 +276,7 @@ def modified_bs_sim_batch(batch: BatchTrace,
 BATCHED_SIMS: dict[str, Callable[[BatchTrace, Workload], BatchSimResult]] = {
     "fcfs": lambda batch, wl: fcfs_sim_batch(batch),
     "modbs-fcfs": lambda batch, wl: modified_bs_sim_batch(batch, wl=wl),
+    "bs-fcfs": lambda batch, wl: bs_sim_batch(batch, wl=wl),
 }
 
 
@@ -244,7 +344,8 @@ def _ci95(per_rep: np.ndarray) -> float:
 def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
                       *, num_jobs: int = 100_000, reps: int = 8,
                       seed: int = 0,
-                      policies: Sequence[str] = ("fcfs", "modbs-fcfs"),
+                      policies: Sequence[str] = ("fcfs", "modbs-fcfs",
+                                                 "bs-fcfs"),
                       ) -> SweepResult:
     """Run the batched simulators over ``wl_factory(point)`` for each point.
 

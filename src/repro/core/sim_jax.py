@@ -12,9 +12,24 @@ in ``tests/test_sim_cross.py``):
 * ``loss_queue_sim``      — M/GI/s/s (the Property-1 building block)
 * ``fcfs_sim``            — multiserver-job FCFS with head-of-line blocking
 * ``modified_bs_sim``     — ModifiedBS-π with π = FCFS (Definition 2)
+* ``bs_sim``              — BS-π proper with π = FCFS (Definition 1)
 
 BS-π proper (Definition 1) pulls helper jobs back at A-system *completion*
-times, which breaks arrival indexing; it stays on the Python engine.
+times, which breaks arrival indexing.  ``_bs_core`` therefore scans an
+*event-indexed* merged stream instead: every sample path has exactly 2J
+events — J arrivals plus, per job, either its A-system completion (jobs
+that run in an A_i, whether routed there on arrival or pulled back by
+rule 3) or its helper start ("commit", jobs that run in H).  The scan
+carries per-class free-slot counts, the matrix of outstanding A-completion
+times, fixed-capacity per-class helper-wait ring buffers (rule 3 pops the
+class head, π = FCFS pops the global head = smallest waiting job index),
+the sorted helper free-time vector W, the last helper start (in-order
+clamp), and the time of the last head-of-line pull-back (a job promoted to
+the head by a rule-3 pull cannot start before the pull).  Each step
+processes the chronologically next event; rule 3 executes inside
+A-completion events, and helper starts are evaluated lazily via the same
+Kiefer–Wolfowitz W-vector recursion as the FCFS core, so helper
+completions never need events of their own.
 
 FCFS recursion (multiserver-need Kiefer–Wolfowitz):  keep the multiset W of
 server free-times.  Job j with need n starts at
@@ -60,8 +75,11 @@ _BIG = 1e30
 @dataclasses.dataclass(frozen=True)
 class JaxSimResult:
     response: np.ndarray       # [J] response time per job
-    p_helper: float | None     # fraction routed to helpers (BSF only)
+    p_helper: float | None     # fraction SERVED on helpers (BSF only)
     blocked: np.ndarray | None # [J] bool, loss-queue only
+    p_routed: float | None = None  # fraction routed to H on arrival (BSF);
+                                   # > p_helper under Def.-1 pull-backs
+    start: np.ndarray | None = None  # [J] raw start times (BS-FCFS only)
 
     @property
     def mean_response(self) -> float:
@@ -232,7 +250,290 @@ def modified_bs_sim(trace: Trace, partition: BalancedPartition | None = None,
     starts = np.asarray(starts)
     resp = starts + trace.service - trace.arrival
     return JaxSimResult(response=resp, p_helper=float(blocked.mean()),
-                        blocked=blocked)
+                        blocked=blocked, p_routed=float(blocked.mean()))
+
+
+# --------------------------------------------------------------------------
+# BS-π proper (Definition 1, rule-3 pull-backs) with π = FCFS
+# --------------------------------------------------------------------------
+
+
+def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
+             q_cap: int):
+    """BS-FCFS (Definition 1) sample paths as a 2J-step event scan, batched.
+
+    All inputs carry an explicit leading replications axis ([R, J] arrays);
+    the R lanes advance in lockstep through one ``lax.scan``.  The axis is
+    hand-vectorized rather than ``jax.vmap``-ed, and the step is written to
+    MINIMIZE THE NUMBER OF GATHER/SCATTER OPS, not FLOPs: beyond a small
+    body size XLA:CPU stops fusing the while body and pays fixed per-op
+    dispatch every event, so job attributes are packed into one [J, 4]
+    record (arrival, service, class, need — one gather instead of four),
+    the per-class free/head/tail counters live in one [3C] vector updated
+    by a single 3-entry scatter-add, and related single-element writes are
+    merged into multi-entry scatters with disjoint (or dropped
+    out-of-bounds) indices.
+
+    Exactly 2J events exist per lane: each job contributes its arrival
+    plus either its A-system completion (it ran in an A_i — routed on
+    arrival or pulled back by rule 3) or its helper start ("commit", it
+    ran in H), so a fixed-length scan of 2*J steps processes every event
+    with none to spare.  Per step and lane the three candidate next events
+    are
+
+    * the next arrival,                       time  Ta = arrival[ai]
+    * the earliest outstanding A completion,  time  Tc = min(comp)
+    * the helper-queue head's FCFS start,     time  Th = max(A_head, t_prev,
+                                                             t_hol, W[n-1])
+
+    and the earliest wins (commit on ties: at equal times the engine's
+    helper start belongs to an event that already happened; arrivals
+    precede A completions, matching the engine's heap order).  Rule 3 runs
+    inside the A-completion event: the freed class's ring-buffer head (its
+    oldest waiting job) starts in A_i at Tc — reusing the freed comp slot —
+    and if it was the *global* queue head, t_hol := Tc: the job promoted
+    to the head cannot start in H before the pull that promoted it (the
+    fixed Python engine re-runs the helper scheduler at exactly that
+    instant).  Helper starts use the same sorted Kiefer-Wolfowitz
+    free-time vector W as the FCFS core, so helper completions never need
+    events of their own.
+
+    Returns the raw per-event streams ``(tagged, rec_t)`` (each [R, 2J];
+    tagged encodes j = A start, j + J = routed to H, j + 2J = helper
+    commit, -1 = no record) and a per-lane ring-overflow flag; the host
+    wrappers (`_bs_scatter_events`) scatter the events to per-job arrays.
+    """
+    R, J = arrival.shape
+    C = slots.shape[0]
+    dt = arrival.dtype
+    INF = jnp.asarray(jnp.inf, dt)
+    lanes = jnp.arange(R)
+    lanes1 = lanes[:, None]
+    ar = jnp.arange(h)[None, :]
+    # packed per-job record: one gather fetches all four attributes
+    # (class/need are exact in f64 for any realistic J, k)
+    jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
+                       axis=2)                            # [R, J, 4]
+
+    def taa(a, idx):
+        """a[lane, idx[lane]] for every lane (single gather)."""
+        return jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+
+    def rec(idx):
+        """One job's packed attributes per lane: [R, 4]."""
+        return jnp.take_along_axis(jobrec, idx[:, None, None], axis=1)[:, 0]
+
+    def step(carry, _):
+        (ai, st, comp, ring, heads, W, t_prev, t_hol, ovf) = carry
+        # st packs the per-class int32 counters: [0:C] free A slots,
+        # [C:2C] ring heads, [2C:3C] ring tails.
+
+        j_arr = jnp.minimum(ai, J - 1)
+        rec_a = rec(j_arr)
+        Ta = jnp.where(ai < J, rec_a[:, 0], INF)
+        cm = jnp.argmin(comp, axis=1).astype(jnp.int32)
+        Tc = taa(comp, cm)
+        gh_job = jnp.min(heads, axis=1)       # global FIFO head (= min index)
+        has_head = gh_job < J
+        jh = jnp.minimum(gh_job, J - 1)
+        rec_h = rec(jh)
+        nh = rec_h[:, 3].astype(jnp.int32)
+        Wn = taa(W, nh - 1)                   # n-th smallest free time
+        Th = jnp.where(has_head,
+                       jnp.maximum(jnp.maximum(rec_h[:, 0], t_hol),
+                                   jnp.maximum(t_prev, Wn)),
+                       INF)
+
+        is_commit = (Th <= Tc) & (Th <= Ta)
+        # arrivals precede departures at equal times (engine heap order)
+        is_comp = (~is_commit) & (Tc < Ta)
+        is_arr = (~is_commit) & (~is_comp)
+
+        # --- arrival (rule 1): free A_i slot -> start in A, else enqueue.
+        # Disabled updates scatter to a dropped out-of-bounds index.
+        c_arr = rec_a[:, 2].astype(jnp.int32)
+        g = jnp.take_along_axis(
+            st, jnp.stack([c_arr, C + c_arr, 2 * C + c_arr], 1), axis=1)
+        free_c, head_c, tail_c = g[:, 0], g[:, 1], g[:, 2]
+        has_slot = is_arr & (free_c > 0)
+        enq = is_arr & ~has_slot
+        ring = ring.at[lanes,
+                       jnp.where(enq, c_arr * q_cap + tail_c % q_cap,
+                                 C * q_cap)].set(j_arr, mode="drop")
+        ovf = ovf | (enq & (tail_c + 1 - head_c > q_cap))
+        ai = ai + jnp.where(is_arr, 1, 0)
+
+        # --- A-completion: rule-3 pull the class head into the freed slot
+        c_comp = cm // s_max
+        pull = taa(heads, c_comp)
+        can_pull = is_comp & (pull < J)
+        jp = jnp.minimum(pull, J - 1)
+        # head-of-line pull-back: the new head cannot start in H before Tc
+        t_hol = jnp.where(can_pull & (pull == gh_job),
+                          jnp.maximum(t_hol, Tc), t_hol)
+
+        # --- comp update, one 2-entry scatter with disjoint indices:
+        # clear the completed slot (completion without pull), insert the
+        # next A start (arrival with a free slot, at an empty-_BIG slot of
+        # its class row, or pull-back, reusing the freed slot cm).
+        ins = has_slot | can_pull
+        j_ins = jnp.where(is_arr, j_arr, jp)
+        t_ins = jnp.where(is_arr, Ta, Tc)
+        svc_ins = rec(j_ins)[:, 1]
+        row = jnp.take_along_axis(
+            comp, c_arr[:, None] * s_max + jnp.arange(s_max)[None, :],
+            axis=1)
+        pos = jnp.argmax(row, axis=1).astype(jnp.int32)
+        OOBC = C * s_max
+        idx2 = jnp.stack(
+            [jnp.where(is_comp & ~can_pull, cm, OOBC),
+             jnp.where(has_slot, c_arr * s_max + pos,
+                       jnp.where(can_pull, cm, OOBC))], 1)
+        val2 = jnp.stack([jnp.full(R, _BIG, dt), t_ins + svc_ins], 1)
+        comp = comp.at[lanes1, idx2].set(val2, mode="drop")
+
+        # --- helper commit: global head starts on H at Th (π = FCFS).
+        # Batched O(h) sorted Kiefer-Wolfowitz step (_fcfs_sorted_step):
+        # retire the nh smallest entries of W, roll-and-insert nh copies
+        # of comp_h at p = searchsorted(W, comp_h, "right") - nh.
+        comp_h = Th + rec_h[:, 1]
+        p = (jnp.sum(W <= comp_h[:, None], axis=1).astype(jnp.int32)
+             - nh)[:, None]
+        nh_ = nh[:, None]
+        W_roll = jnp.take_along_axis(
+            W, jnp.minimum(jnp.where(ar < p, ar + nh_, ar), h - 1), axis=1)
+        W2 = jnp.where((ar >= p) & (ar < p + nh_), comp_h[:, None], W_roll)
+        W = jnp.where(is_commit[:, None], W2, W)
+        t_prev = jnp.where(is_commit, Th, t_prev)
+
+        # --- counter updates, one 3-entry scatter-add (duplicates add):
+        # free A slots at the touched class, ring tail on enqueue, ring
+        # head on pop (rule-3 pull xor commit).
+        did_pop = can_pull | is_commit
+        pop_c = jnp.where(can_pull, c_comp, rec_h[:, 2].astype(jnp.int32))
+        OOBS = 3 * C
+        idx3 = jnp.stack(
+            [jnp.where(is_arr, c_arr, jnp.where(is_comp, c_comp, OOBS)),
+             jnp.where(enq, 2 * C + c_arr, OOBS),
+             jnp.where(did_pop, C + pop_c, OOBS)], 1)
+        val3 = jnp.stack(
+            [jnp.where(has_slot, -1, 0) +
+             jnp.where(is_comp & ~can_pull, 1, 0),
+             jnp.ones(R, jnp.int32), jnp.ones(R, jnp.int32)], 1)
+        st = st.at[lanes1, idx3].add(val3, mode="drop")
+
+        # --- refresh the materialized per-class head jobs, one 2-entry
+        # scatter: an enqueue into an empty queue sets the head, a pop
+        # promotes the next ring entry (J sentinel when empty).
+        gp = jnp.take_along_axis(
+            st, jnp.stack([C + pop_c, 2 * C + pop_c], 1), axis=1)
+        nxt = jnp.where(gp[:, 0] < gp[:, 1],
+                        taa(ring, pop_c * q_cap + gp[:, 0] % q_cap), J)
+        hidx = jnp.stack([jnp.where(enq & (head_c == tail_c), c_arr, C),
+                          jnp.where(did_pop, pop_c, C)], 1)
+        hval = jnp.stack([j_arr, nxt], 1)
+        heads = heads.at[lanes1, hidx].set(hval, mode="drop")
+
+        # one tagged int per event (fewer scan outputs = fewer per-step
+        # ops): j = A start, j + J = routed to H, j + 2J = helper commit
+        tagged = jnp.where(is_commit, jh + 2 * J,
+                           jnp.where(ins, j_ins,
+                                     jnp.where(enq, j_arr + J, -1)))
+        rec_t = jnp.where(is_commit, Th, t_ins)
+        out = (tagged, rec_t)
+        return (ai, st, comp, ring, heads, W, t_prev, t_hol, ovf), out
+
+    st0 = jnp.concatenate([
+        jnp.broadcast_to(slots.astype(jnp.int32), (R, C)),  # free slots
+        jnp.zeros((R, 2 * C), jnp.int32)], axis=1)          # head/tail = 0
+    carry0 = (jnp.zeros(R, jnp.int32),                    # ai
+              st0,                                        # free/head/tail
+              jnp.full((R, C * s_max), _BIG, dt),         # A completion times
+              jnp.zeros((R, C * q_cap), jnp.int32),       # helper-wait rings
+              jnp.full((R, C), J, jnp.int32),             # per-class heads
+              jnp.zeros((R, h), dt),                      # W, sorted asc.
+              jnp.zeros(R, dt),                           # t_prev
+              jnp.zeros(R, dt),                           # t_hol
+              jnp.zeros(R, bool))                         # ring overflow
+    (_, _, _, _, _, _, _, _, ovf), (tagged, rec_t) \
+        = jax.lax.scan(step, carry0, None, length=2 * J)
+
+    # ys are stacked [2J, R]; hand back [R, 2J] event streams.  The host
+    # wrappers scatter them to per-job arrays with numpy — an in-graph
+    # .at[job].set scatter looks natural here but XLA:CPU lowers the
+    # unsorted scatter to a serial per-element loop that dwarfs the scan.
+    return tagged.T, rec_t.T, ovf
+
+
+_bs_scan = partial(jax.jit, static_argnames=("s_max", "h", "q_cap"))(_bs_core)
+
+
+def _bs_scatter_events(J: int, tagged, rec_t):
+    """Scatter one replication's [2J] event records to per-job arrays.
+
+    ``tagged`` encodes the event: j = job j started in its A_i (the record
+    time is its start), j + J = job j was routed to H on arrival, j + 2J =
+    job j started on a helper server.  Each job yields exactly one start
+    record and at most one routing record; -1 = non-recording event.
+    """
+    start = np.zeros(J)
+    served = np.zeros(J, bool)
+    routed = np.zeros(J, bool)
+    m_a = (tagged >= 0) & (tagged < J)
+    m_r = (tagged >= J) & (tagged < 2 * J)
+    m_h = tagged >= 2 * J
+    start[tagged[m_a]] = rec_t[m_a]
+    routed[tagged[m_r] - J] = True
+    start[tagged[m_h] - 2 * J] = rec_t[m_h]
+    served[tagged[m_h] - 2 * J] = True
+    return start, served, routed
+
+
+def _bs_args(trace_or_batch, partition, wl, queue_cap):
+    """Shared argument validation for ``bs_sim`` / ``bs_sim_batch``."""
+    if partition is None:
+        if wl is None:
+            raise ValueError("need a partition or a workload")
+        partition = balanced_partition(wl)
+    slots = np.asarray(partition.slots, dtype=np.int32)
+    h = int(partition.helpers)
+    if h < int(trace_or_batch.need.max()):
+        raise ValueError("helper set smaller than the largest server need")
+    s_max = max(1, int(slots.max()))
+    if queue_cap is None:
+        queue_cap = max(1, min(trace_or_batch.num_jobs, 8192))
+    elif queue_cap < 1:
+        raise ValueError(f"queue_cap must be >= 1, got {queue_cap}")
+    return slots, s_max, h, queue_cap
+
+
+def bs_sim(trace: Trace, partition: BalancedPartition | None = None,
+           wl: Workload | None = None, queue_cap: int | None = None
+           ) -> JaxSimResult:
+    """BS-FCFS (Definition 1, rule-3 pull-backs) — exact sample path, jit'd.
+
+    ``queue_cap`` bounds the per-class helper-wait ring buffers (default
+    ``min(J, 8192)``); a stable workload never comes close, and an overflow
+    raises rather than returning a silently wrong path.
+    """
+    slots, s_max, h, q_cap = _bs_args(trace, partition, wl, queue_cap)
+    with enable_x64():
+        tagged, rec_t, ovf = _bs_scan(
+            jnp.asarray(trace.arrival, jnp.float64)[None],
+            jnp.asarray(trace.cls, jnp.int32)[None],
+            jnp.asarray(trace.need, jnp.int32)[None],
+            jnp.asarray(trace.service, jnp.float64)[None],
+            jnp.asarray(slots), s_max, h, q_cap)
+    if bool(ovf[0]):
+        raise RuntimeError(
+            f"helper-wait ring buffer overflow (queue_cap={q_cap}) — "
+            f"workload unstable at this load, or raise queue_cap")
+    start, served, routed = _bs_scatter_events(
+        trace.num_jobs, np.asarray(tagged[0]), np.asarray(rec_t[0]))
+    resp = start + trace.service - trace.arrival
+    return JaxSimResult(response=resp, p_helper=float(served.mean()),
+                        blocked=None, p_routed=float(routed.mean()),
+                        start=start)
 
 
 def estimate_p_helper(wl: Workload, num_jobs: int = 200_000,

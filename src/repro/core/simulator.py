@@ -65,7 +65,9 @@ class _View:
         return self.sim.remaining_now(j)
 
     def num_classes(self) -> int:
-        return int(self.sim.trace.cls.max()) + 1 if len(self.sim.trace.cls) else 0
+        # the workload's C when the trace carries it — a short trace that
+        # never samples the last class must not shrink the class space
+        return self.sim.trace.num_classes
 
 
 @dataclasses.dataclass
@@ -219,7 +221,7 @@ class Simulation:
         resp = self.completion - tr.arrival
         assert not np.isnan(resp).any(), "some jobs never completed"
         wait = self.start_time - tr.arrival
-        C = int(tr.cls.max()) + 1
+        C = tr.num_classes
         by_class = np.array([
             resp[tr.cls == c].mean() if (tr.cls == c).any() else np.nan
             for c in range(C)

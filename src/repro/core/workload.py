@@ -204,7 +204,7 @@ class Workload:
             service[mask] = c.service.sample(rng, size=int(mask.sum()))
         needs = self.needs[cls]
         return Trace(arrival=arrival, cls=cls.astype(np.int64), service=service,
-                     need=needs, k=self.k)
+                     need=needs, k=self.k, C=self.C)
 
     def sample_traces(self, num_jobs: int, reps: int,
                       seed: int = 0) -> "BatchTrace":
@@ -229,7 +229,7 @@ class Workload:
             cls=np.stack([t.cls for t in traces]),
             service=np.stack([t.service for t in traces]),
             need=np.stack([t.need for t in traces]),
-            k=self.k)
+            k=self.k, C=self.C)
 
 
 def replication_stream(seed: int, rep: int) -> np.random.Philox:
@@ -246,13 +246,19 @@ def replication_stream(seed: int, rep: int) -> np.random.Philox:
 
 @dataclasses.dataclass(frozen=True)
 class BatchTrace:
-    """``reps`` stacked replications of a job trace ([R, J] arrays)."""
+    """``reps`` stacked replications of a job trace ([R, J] arrays).
+
+    ``C`` is the class count of the generating workload; a short trace may
+    never sample the last class, so deriving it from ``cls.max()+1`` would
+    under-report.  Hand-built batches may leave it ``None`` (observed max).
+    """
 
     arrival: np.ndarray   # float64 [R, J], nondecreasing along axis 1
     cls: np.ndarray       # int64   [R, J]
     service: np.ndarray   # float64 [R, J]
     need: np.ndarray      # int64   [R, J]
     k: int
+    C: int | None = None  # workload class count (None: derive from cls)
 
     def __post_init__(self):
         if not (self.arrival.shape == self.cls.shape == self.service.shape
@@ -267,21 +273,36 @@ class BatchTrace:
     def num_jobs(self) -> int:
         return self.arrival.shape[1]
 
+    @property
+    def num_classes(self) -> int:
+        """Workload C when known, else the observed class count."""
+        if self.C is not None:
+            return self.C
+        return int(self.cls.max()) + 1 if self.cls.size else 0
+
     def rep(self, r: int) -> "Trace":
         """Replication ``r`` as a plain single :class:`Trace`."""
         return Trace(arrival=self.arrival[r], cls=self.cls[r],
-                     service=self.service[r], need=self.need[r], k=self.k)
+                     service=self.service[r], need=self.need[r], k=self.k,
+                     C=self.C)
 
 
 @dataclasses.dataclass(frozen=True)
 class Trace:
-    """A concrete job trace (arrival times, classes, service times, needs)."""
+    """A concrete job trace (arrival times, classes, service times, needs).
+
+    ``C`` carries the generating workload's class count so per-class metrics
+    and partition-backed policies agree on C even when a short trace never
+    samples the last class; ``None`` (hand-built traces) falls back to the
+    observed maximum.
+    """
 
     arrival: np.ndarray   # float64 [J], nondecreasing
     cls: np.ndarray       # int64   [J]
     service: np.ndarray   # float64 [J]
     need: np.ndarray      # int64   [J]
     k: int
+    C: int | None = None  # workload class count (None: derive from cls)
 
     def __post_init__(self):
         J = len(self.arrival)
@@ -291,6 +312,13 @@ class Trace:
     @property
     def num_jobs(self) -> int:
         return len(self.arrival)
+
+    @property
+    def num_classes(self) -> int:
+        """Workload C when known, else the observed class count."""
+        if self.C is not None:
+            return self.C
+        return int(self.cls.max()) + 1 if len(self.cls) else 0
 
 
 # --------------------------------------------------------------------------

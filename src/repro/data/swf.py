@@ -46,8 +46,11 @@ def parse_swf(path: str, *, k: int, max_need: int = 64,
     order = np.argsort(arrival, kind="stable")
     need = np.asarray(needs, dtype=np.int64)[order]
     cls = np.log2(need).astype(np.int64)
+    # classes are log2(need) bins up to max_need, independent of which bins
+    # this particular log happens to populate
+    C = int(math.log2(max_need)) + 1 if powers_of_two_only else None
     return Trace(arrival=arrival[order], cls=cls,
-                 service=np.asarray(services)[order], need=need, k=k)
+                 service=np.asarray(services)[order], need=need, k=k, C=C)
 
 
 def trace_to_workload(trace: Trace, k: int, load: float) -> Workload:

@@ -82,6 +82,7 @@ def test_elastic_restore_different_mesh(tmp_path, tree):
     assert restored["w"].sharding == sh["w"]
 
 
+@pytest.mark.slow
 def test_restart_resumes_bit_exact(tmp_path):
     """Straight 10-step run == run that fails at 6 and restarts from the
     step-5 checkpoint (deterministic pipeline + checkpointed cursor)."""

@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.policies import make_policy
+from repro.core.partition import BalancedPartition
+from repro.core.policies import BalancedSplitting, make_policy
 from repro.core.simulator import Simulation, simulate_trace
 from repro.core.sim_jax import fcfs_sim, modified_bs_sim
 from repro.core.workload import Exp, JobClass, Trace, Workload, \
@@ -70,6 +71,59 @@ def test_srpt_beats_fcfs_on_mean_response():
     f = simulate_trace(trace, make_policy("fcfs"))
     s = simulate_trace(trace, make_policy("ff-srpt"))
     assert s.mean_response < f.mean_response
+
+
+def test_bs_rule3_pullback_reschedules_helpers():
+    """Regression (3 jobs): a rule-3 pull-back that removes the head-of-line
+    helper job must re-run π immediately.
+
+    J0 (class 0, need 3) fills A_0 on [0, 10).  J1 (class 0) waits in H,
+    where its need 3 exceeds the single helper server — permanent HOL block
+    for J2 (class 1, need 1, no A_1 slots).  J0's completion pulls J1 back
+    into A_0 (rule 3); that unblocks J2, which must start on the helper at
+    t=10.  Before the fix the helper scheduler never re-ran: J2 never
+    started and the engine asserted on an incomplete job.
+    """
+    part = BalancedPartition(k=4, needs=(3, 1), a=(3, 0), psi=1.0)
+    pol = BalancedSplitting(part, aux="fcfs")
+    trace = Trace(arrival=np.array([0.0, 1.0, 2.0]),
+                  cls=np.array([0, 0, 1]),
+                  service=np.array([10.0, 1.0, 1.0]),
+                  need=np.array([3, 3, 1]), k=4)
+    sim = Simulation(trace, pol)
+    sim.run()
+    assert sim.start_time.tolist() == [0.0, 10.0, 10.0]
+    assert sim.completion.tolist() == [10.0, 11.0, 11.0]
+    # J1 was pulled back before ever using a helper server; J2 was served on
+    # one: served != routed under Def.-1 pull-backs.
+    assert pol.p_routed_estimate == pytest.approx(2 / 3)
+    assert pol.p_helper_estimate == pytest.approx(1 / 3)
+
+
+def test_bs_pullback_observables_served_vs_routed():
+    """P_H counts jobs that USE helper servers: pull-backs make it strictly
+    smaller than the routed fraction for BS-π, equal for ModifiedBS-π."""
+    wl = figure1_workload(64, theta=0.7)
+    trace = wl.sample_trace(4000, seed=8)
+    bs = make_policy("bs", wl=wl)
+    simulate_trace(trace, bs)
+    mod = make_policy("modbs", wl=wl)
+    simulate_trace(trace, mod)
+    assert bs.p_routed_estimate > bs.p_helper_estimate   # pull-backs occurred
+    assert mod.p_routed_estimate == mod.p_helper_estimate
+    assert bs.p_helper_estimate <= mod.p_helper_estimate + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), load=st.floats(0.3, 0.9))
+def test_bs_mean_wait_below_modbs_property(seed, load):
+    """Rule-3 pull-backs only help: BS-FCFS mean wait <= ModifiedBS-FCFS
+    mean wait on shared traces (property over random seeds/loads)."""
+    wl = small_workload(k=64, load=load)
+    trace = wl.sample_trace(1500, seed=seed)
+    bs = simulate_trace(trace, make_policy("bs", wl=wl))
+    mod = simulate_trace(trace, make_policy("modbs", wl=wl))
+    assert bs.mean_wait <= mod.mean_wait + 1e-9
 
 
 @settings(max_examples=15, deadline=None)

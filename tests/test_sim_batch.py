@@ -1,14 +1,17 @@
 """Batched substrate: sampling determinism, sweep API, bench harness."""
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 import pytest
 
 from repro.core.sim_batch import sweep_many_server
-from repro.core.workload import (Exp, JobClass, Workload, figure1_workload,
-                                 replication_stream)
+from repro.core.workload import (Exp, JobClass, Trace, Workload,
+                                 figure1_workload, replication_stream)
 
 
 def small_workload(k=32, load=0.7):
@@ -51,6 +54,22 @@ def test_sample_traces_is_reproducible_and_streams_independent():
     assert not np.array_equal(a.arrival, c.arrival)
 
 
+def test_traces_thread_workload_num_classes():
+    """A short trace that never samples the last class must still report the
+    workload's C — per-class metrics and partition-backed policies rely on
+    it.  Hand-built traces fall back to the observed maximum."""
+    wl = small_workload()                      # C = 3, class "l" has p = 0.1
+    trace = wl.sample_trace(3, seed=0)         # 3 jobs: classes undersampled
+    assert trace.C == wl.C == 3
+    assert trace.num_classes == 3
+    batch = wl.sample_traces(3, 2, seed=0)
+    assert batch.num_classes == 3
+    assert batch.rep(0).num_classes == 3
+    hand = Trace(arrival=np.array([0.0]), cls=np.array([0]),
+                 service=np.array([1.0]), need=np.array([1]), k=2)
+    assert hand.C is None and hand.num_classes == 1
+
+
 def test_replication_stream_rejects_negative():
     with pytest.raises(ValueError):
         replication_stream(-1, 0)
@@ -66,18 +85,21 @@ def test_sweep_many_server_shapes_and_sanity():
     sweep = sweep_many_server(lambda k: figure1_workload(k), ks,
                               num_jobs=2000, reps=3, seed=1)
     assert sweep.points == ks
-    assert sweep.policies == ("fcfs", "modbs-fcfs")
+    assert sweep.policies == ("fcfs", "modbs-fcfs", "bs-fcfs")
     for arr in (sweep.mean_response, sweep.ci95_response, sweep.p_wait,
                 sweep.p_helper, sweep.utilization, sweep.sim_s):
-        assert arr.shape == (2, len(ks))
+        assert arr.shape == (3, len(ks))
     assert (sweep.mean_response > 0).all()
     assert ((0 <= sweep.p_wait) & (sweep.p_wait <= 1)).all()
     assert (sweep.ci95_response >= 0).all()
-    # p_helper defined exactly for the BSF policy
+    # p_helper defined exactly for the BSF policies
     assert np.isnan(sweep.p_helper[0]).all()        # fcfs
     assert not np.isnan(sweep.p_helper[1]).any()    # modbs-fcfs
+    assert not np.isnan(sweep.p_helper[2]).any()    # bs-fcfs
+    # Cor. 1: BS-π's served fraction is bounded by ModifiedBS-π's
+    assert (sweep.p_helper[2] <= sweep.p_helper[1] + 0.02).all()
     rows = sweep.rows("k", extra_cols={"regime": "critical"})
-    assert len(rows) == 2 * len(ks)
+    assert len(rows) == 3 * len(ks)
     assert rows[0]["k"] == 32 and rows[0]["regime"] == "critical"
     assert rows[0]["reps"] == 3
 
@@ -97,21 +119,31 @@ def test_sweep_single_rep_has_zero_ci():
 # -- bench harness ------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     bench_sim = pytest.importorskip(
         "benchmarks.bench_sim",
         reason="benchmarks package needs repo root on sys.path")
     out = tmp_path / "BENCH_sim.json"
+    # subprocess, not in-process: pin_single_thread_runtime() must run
+    # before the first JAX computation to take effect, and pytest has
+    # already initialized the backend by now
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo_root, "src"), env.get("PYTHONPATH", "")])
     t0 = time.time()
-    report = bench_sim.main(["--smoke", "--out", str(out)])
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sim", "--smoke",
+         "--out", str(out)],
+        check=True, cwd=repo_root, env=env, capture_output=True)
     wall = time.time() - t0
     assert wall < 60, f"--smoke took {wall:.1f}s, budget is 60s"
     on_disk = json.loads(out.read_text())
-    assert on_disk == report
     assert on_disk["schema"] == bench_sim.SCHEMA
     rows = on_disk["rows"]
-    # 3 engines x 2 policies per k
-    assert len(rows) == 6 * len(on_disk["config"]["ks"])
+    # 3 engines x 3 policies per k
+    assert len(rows) == 9 * len(on_disk["config"]["ks"])
     for r in rows:
         assert set(bench_sim.ROW_KEYS) <= set(r)
         assert r["engine"] in ("python", "jax", "jax-batch")

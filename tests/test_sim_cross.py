@@ -18,9 +18,10 @@ from jax.experimental import enable_x64
 
 from repro.core import sim_jax
 from repro.core.policies import make_policy
-from repro.core.sim_batch import (fcfs_sim_batch, loss_queue_sim_batch,
-                                  modified_bs_sim_batch)
-from repro.core.sim_jax import fcfs_sim, loss_queue_sim, modified_bs_sim
+from repro.core.sim_batch import (bs_sim_batch, fcfs_sim_batch,
+                                  loss_queue_sim_batch, modified_bs_sim_batch)
+from repro.core.sim_jax import bs_sim, fcfs_sim, loss_queue_sim, \
+    modified_bs_sim
 from repro.core.simulator import Simulation
 from repro.core.workload import Exp, JobClass, Workload, figure1_workload
 
@@ -154,3 +155,60 @@ def test_modbs_batched_matches_single():
         assert np.array_equal(b.response[r], single.response)
         assert float(b.p_helper[r]) == single.p_helper
         assert np.array_equal(b.blocked[r], single.blocked)
+
+
+# -- BS-FCFS proper (Definition 1, rule-3 pull-backs) -------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("k", [32, 256])
+def test_bs_event_for_event_vs_python_engine(k):
+    """The event-indexed 2J-step scan must reproduce the (fixed) Python
+    engine's BS-π sample path bit-for-bit — starts, responses, and both
+    helper observables — on the Fig.-1 critical workload."""
+    wl = figure1_workload(k, theta=0.7)
+    trace = wl.sample_trace(4000, seed=3)
+    pol = make_policy("bs", wl=wl)
+    sim = Simulation(trace, pol)
+    sim.run()
+    jx = bs_sim(trace, wl=wl)
+    # rtol=0: every scan start time is a max/selection over the same event
+    # times the engine computes (never a new rounding), and both sides
+    # derive response via the identical (start + service) - arrival float
+    # ops — starts and responses match bit-for-bit
+    assert np.array_equal(jx.start, sim.start_time)
+    assert np.array_equal(jx.response, sim.completion - trace.arrival)
+    assert jx.p_helper == pol.p_helper_estimate
+    assert jx.p_routed == pol.p_routed_estimate
+
+
+def test_bs_pullbacks_happen_and_differ_from_modbs():
+    """Sanity that the cross-validation above exercises rule 3: pull-backs
+    occur (served < routed) and the BS path differs from ModifiedBS."""
+    wl = figure1_workload(64, theta=0.7)
+    trace = wl.sample_trace(3000, seed=5)
+    bs = bs_sim(trace, wl=wl)
+    mod = modified_bs_sim(trace, wl=wl)
+    assert bs.p_helper < bs.p_routed            # some jobs were pulled back
+    assert not np.array_equal(bs.response, mod.response)
+    assert bs.response.mean() <= mod.response.mean()
+
+
+@pytest.mark.slow
+def test_bs_batched_matches_single():
+    wl = figure1_workload(256, theta=0.7)
+    batch = wl.sample_traces(2000, 3, seed=13)
+    b = bs_sim_batch(batch, wl=wl)
+    for r in range(batch.reps):
+        single = bs_sim(batch.rep(r), wl=wl)
+        assert np.array_equal(b.response[r], single.response)
+        assert float(b.p_helper[r]) == single.p_helper
+        assert float(b.p_routed[r]) == single.p_routed
+
+
+def test_bs_queue_cap_overflow_raises():
+    """A too-small ring buffer must raise, never silently corrupt."""
+    wl = figure1_workload(64, theta=0.7)
+    trace = wl.sample_trace(3000, seed=7)
+    with pytest.raises(RuntimeError, match="overflow"):
+        bs_sim(trace, wl=wl, queue_cap=4)

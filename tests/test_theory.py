@@ -87,6 +87,7 @@ def test_proposition1_stability_condition():
     assert loads[-1] == min(loads)
 
 
+@pytest.mark.slow
 def test_bs_beats_fcfs_at_scale():
     """The paper's headline: in the critical regime at large k, BS-π beats
     FCFS on mean response time (Figure 1 ordering)."""
