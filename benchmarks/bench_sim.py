@@ -1,19 +1,27 @@
 """Simulation-substrate benchmark — tracks the hot-path perf trajectory.
 
-Times three engines on the Fig. 1 critical-regime workload:
+Times four engines on the Fig. 1 critical-regime workload:
 
 * ``python``    — the exact event-driven engine (the correctness oracle)
 * ``jax``       — per-trace ``lax.scan`` (``repro.core.sim_jax``)
 * ``jax-batch`` — vmap-over-replications (``repro.core.sim_batch``)
+* ``pallas``    — fused step kernels (``repro.kernels.msj_scan``), one
+  kernel per replication on the Pallas grid.  Off-TPU this runs in
+  *interpret mode*: the grid is scanned one replication at a time with
+  the kernel body executed as ordinary XLA ops, so on CPU it fuses
+  nothing and trails ``jax-batch`` (which advances all replications per
+  dispatched op) — the rows exist to track the engine and to pin the
+  bit-exactness contract, not CPU speed; the fused win needs a TPU.
 
 and writes ``BENCH_sim.json`` rows with jobs/sec, compile time and the
 speedup over the Python engine, so every PR from here on can be compared
-against the last committed numbers.  ``--smoke`` shrinks the config to
+against the last committed numbers (``benchmarks.check_bench_regression``
+does this automatically in CI).  ``--smoke`` shrinks the config to
 finish in well under a minute on CPU (used by the tier-1 test).
 
 JAX engines are timed on a steady-state call (after one compile call,
 whose cost is reported separately as ``compile_s``); jobs/sec for the
-batched engine counts all replications.
+batched engines counts all replications.
 """
 
 from __future__ import annotations
@@ -78,15 +86,20 @@ def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
                          python_jps=python_jps[name]))
 
     batch = wl.sample_traces(jobs, reps, seed=seed)
-    for name, fn in (("fcfs", lambda: fcfs_sim_batch(batch)),
-                     ("modbs-fcfs",
-                      lambda: modified_bs_sim_batch(batch, wl=wl)),
-                     ("bs-fcfs", lambda: bs_sim_batch(batch, wl=wl))):
-        t0 = time.time(); fn(); first = time.time() - t0
-        t0 = time.time(); fn(); wall = time.time() - t0
-        rows.append(_row("jax-batch", name, k, jobs, reps, wall,
-                         compile_s=max(0.0, first - wall),
-                         python_jps=python_jps[name]))
+    for engine, label in (("jax", "jax-batch"), ("pallas", "pallas")):
+        for name, fn in (
+                ("fcfs",
+                 lambda e=engine: fcfs_sim_batch(batch, engine=e)),
+                ("modbs-fcfs",
+                 lambda e=engine: modified_bs_sim_batch(batch, wl=wl,
+                                                        engine=e)),
+                ("bs-fcfs",
+                 lambda e=engine: bs_sim_batch(batch, wl=wl, engine=e))):
+            t0 = time.time(); fn(); first = time.time() - t0
+            t0 = time.time(); fn(); wall = time.time() - t0
+            rows.append(_row(label, name, k, jobs, reps, wall,
+                             compile_s=max(0.0, first - wall),
+                             python_jps=python_jps[name]))
     return rows
 
 
@@ -103,7 +116,18 @@ def run(ks, jobs, reps, python_jobs, seed=0):
 def main(argv=None):
     from .common import pin_scan_runtime
     pin_scan_runtime()            # sequential scans: 1-thread XLA pool
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Benchmark the simulation engines "
+                    "(python | jax | jax-batch | pallas).",
+        epilog="Engines: 'python' is the exact event-driven oracle; 'jax' "
+               "is the per-trace lax.scan; 'jax-batch' is the vmapped "
+               "replication batch (the production sweep path); 'pallas' "
+               "is the fused step-kernel family of repro.kernels.msj_scan "
+               "— off-TPU it executes in Pallas interpret mode (one "
+               "replication at a time, unfused XLA ops), so its CPU rows "
+               "track correctness and trajectory, not the fused speed. "
+               "fig1_critical/fig2_regimes accept the same "
+               "--engine {python,jax,pallas} selection.")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, < 60 s on CPU")
     ap.add_argument("--ks", type=int, nargs="+", default=None)

@@ -1,0 +1,90 @@
+"""Guard against silent scan-substrate slowdowns in CI.
+
+Compares a freshly generated ``bench_sim`` report (typically ``--smoke``)
+against the committed ``BENCH_sim.json``: for every (engine, policy) pair
+present in both, the new ``jobs_per_sec`` must be at least ``1/factor`` of
+the *slowest* committed row for that pair (the committed file sweeps
+several k; the smoke config uses a smaller k and fewer reps, so the
+per-pair minimum is the conservative comparable baseline).
+
+The committed file was produced on a different machine than the CI
+runner, so raw jobs/sec would conflate hardware speed with code
+regressions.  The guard therefore normalizes by a machine-speed ratio
+estimated from the ``python``-engine rows (the pure event-driven engine:
+no jit, no XLA — its throughput moves with host speed, not with scan-core
+changes): the committed floor is scaled by ``median(new/base)`` over the
+shared python rows, capped at 1 so a faster runner never loosens the bar.
+A runner 2x slower than the baseline machine then still passes untouched
+code, while a real >factor regression in any jitted engine — a lost
+fusion, an accidental vmap of the BS scatter path, a dropped
+single-thread pin — still trips the guard.
+
+Exit status 0 = no regression, 1 = at least one pair regressed >factor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _min_jps_by_key(report: dict) -> dict[tuple[str, str], float]:
+    out: dict[tuple[str, str], float] = {}
+    for row in report["rows"]:
+        key = (row["engine"], row["policy"])
+        jps = float(row["jobs_per_sec"])
+        out[key] = min(out.get(key, float("inf")), jps)
+    return out
+
+
+def _machine_ratio(fresh: dict, base: dict) -> float:
+    """median(new/base) over shared python-engine rows, capped at 1."""
+    ratios = sorted(fresh[k] / base[k]
+                    for k in fresh if k in base and k[0] == "python")
+    if not ratios:
+        return 1.0
+    return min(1.0, ratios[len(ratios) // 2])
+
+
+def check(new: dict, baseline: dict, factor: float = 2.0) -> list[str]:
+    """Failure messages for every (engine, policy) regressed > factor."""
+    base = _min_jps_by_key(baseline)
+    fresh = _min_jps_by_key(new)
+    machine = _machine_ratio(fresh, base)
+    failures = []
+    for key, jps in sorted(fresh.items()):
+        if key not in base:
+            continue  # new engine/policy with no committed baseline yet
+        floor = base[key] * machine / factor
+        if jps < floor:
+            failures.append(
+                f"{key[0]}/{key[1]}: {jps:,.0f} jobs/s < "
+                f"{floor:,.0f} (committed min {base[key]:,.0f} x machine "
+                f"ratio {machine:.2f} / factor {factor})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="freshly generated bench_sim JSON")
+    ap.add_argument("--baseline", default="BENCH_sim.json",
+                    help="committed reference (default: BENCH_sim.json)")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max tolerated slowdown (default: 2x)")
+    args = ap.parse_args(argv)
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(new, baseline, factor=args.factor)
+    for msg in failures:
+        print(f"REGRESSION {msg}", file=sys.stderr)
+    if not failures:
+        print(f"ok: no (engine, policy) pair regressed more than "
+              f"{args.factor}x vs {args.baseline}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

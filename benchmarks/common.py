@@ -33,17 +33,21 @@ def pin_scan_runtime() -> bool:
 
 def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
                      reps: int, seed: int = 0, policies=JAX_POLICIES,
-                     extra_cols=None, per_point_cols=None) -> list[dict]:
+                     engine: str = "jax", extra_cols=None,
+                     per_point_cols=None) -> list[dict]:
     """Batched-substrate counterpart of :func:`run_policies`.
 
     One ``sweep_many_server`` call over ``wl_factory(point)``; returns CSV
     rows with mean/CI columns.  ``per_point_cols`` is an optional sequence
-    (parallel to ``points``) of extra per-point column dicts.
+    (parallel to ``points``) of extra per-point column dicts.  ``engine``
+    is ``"jax"`` (vmapped scans) or ``"pallas"`` (fused step kernels —
+    interpret mode off-TPU: bit-identical results, slower on CPU).
     """
     from repro.core.sim_batch import sweep_many_server
     pin_scan_runtime()
     sweep = sweep_many_server(wl_factory, points, num_jobs=num_jobs,
-                              reps=reps, seed=seed, policies=policies)
+                              reps=reps, seed=seed, policies=policies,
+                              engine=engine)
     return sweep.rows(point_col, extra_cols=extra_cols,
                       per_point_cols=per_point_cols)
 

@@ -4,12 +4,15 @@ k sweeps with f_k = floor((k/32)^(2/3)), (1-ρ)√(k/f_k) -> θ = 0.7;
 small jobs (f_k, 1) w.p. 0.95; large (2f_k,40)/(4f_k,20)/(8f_k,10) w.p.
 0.05/3 each; exponential services, Poisson arrivals (paper Fig. 1 setup).
 
-Two engines:
+Three engines:
 
 * ``--engine jax`` (default) — the batched vmap substrate
   (``repro.core.sim_batch``): FCFS + ModifiedBS-FCFS + BS-FCFS proper
   (Definition 1, rule-3 pull-backs, on the event-indexed scan), ``--reps``
   independent Philox replications per k, mean/CI columns.
+* ``--engine pallas`` — same sweeps on the fused step kernels
+  (``repro.kernels.msj_scan``); bit-identical to ``jax``, interpret mode
+  (slower) off-TPU.
 * ``--engine python`` — the exact event-driven engine over the full paper
   policy set (slow; use for the policies the scan substrate cannot cover).
 """
@@ -49,17 +52,22 @@ def run(ks=(256, 512, 1024, 2048), num_jobs=30_000, seed=0,
 
 
 def run_jax(ks=(256, 512, 1024, 2048), num_jobs=100_000, reps=8, seed=0,
-            theta=0.7, policies=JAX_POLICIES):
+            theta=0.7, policies=JAX_POLICIES, engine="jax"):
     """Batched-substrate sweep (FCFS + ModifiedBS-FCFS + BS-FCFS, CIs)."""
     return run_policies_jax(
         lambda k: figure1_workload(k, theta=theta), ks, "k",
         num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
-        per_point_cols=[_theory_cols(k, theta) for k in ks])
+        engine=engine, per_point_cols=[_theory_cols(k, theta) for k in ks])
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("jax", "python"), default="jax")
+    ap.add_argument("--engine", choices=("jax", "pallas", "python"),
+                    default="jax",
+                    help="jax = batched vmap scans (default); pallas = "
+                         "fused step kernels, bit-identical to jax but "
+                         "interpret-mode (slower) off-TPU; python = exact "
+                         "event engine, full paper policy set")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--reps", type=int, default=8)
     ap.add_argument("--ks", type=int, nargs="+",
@@ -69,12 +77,13 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 10^6 arrivals")
     args = ap.parse_args(argv)
-    default = 100_000 if args.engine == "jax" else 30_000
+    default = 30_000 if args.engine == "python" else 100_000
     jobs = args.jobs if args.jobs is not None \
         else (1_000_000 if args.full else default)
-    if args.engine == "jax":
+    if args.engine in ("jax", "pallas"):
         rows = run_jax(ks=tuple(args.ks), num_jobs=jobs, reps=args.reps,
-                       policies=tuple(args.policies or JAX_POLICIES))
+                       policies=tuple(args.policies or JAX_POLICIES),
+                       engine=args.engine)
     else:
         rows = run(ks=tuple(args.ks), num_jobs=jobs,
                    policies=tuple(args.policies or PAPER_POLICIES))

@@ -6,6 +6,8 @@ Same job classes and server needs as Figure 1 (k = 512, f_k = 6).
 (FCFS + ModifiedBS-FCFS + BS-FCFS proper with Def.-1 pull-backs, ``--reps``
 replications, mean/CI columns); the heavy-traffic sweep holds k fixed, so
 every load point reuses one compiled (k, R, J) executable.
+``--engine pallas`` runs the same sweeps on the fused step kernels
+(bit-identical; interpret mode — slower — off-TPU).
 ``--engine python`` runs the event-driven engine over the full paper
 policy set.
 """
@@ -55,40 +57,48 @@ def run_subcritical(load=0.85, ks=(256, 512, 1024, 2048), num_jobs=20_000,
 
 
 def run_heavy_jax(k=512, loads=(0.5, 0.7, 0.8, 0.9, 0.95),
-                  num_jobs=100_000, reps=8, seed=0, policies=JAX_POLICIES):
+                  num_jobs=100_000, reps=8, seed=0, policies=JAX_POLICIES,
+                  engine="jax"):
     return run_policies_jax(
         lambda load: figure2_workload(k, load), loads, "load",
         num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
-        extra_cols={"regime": "heavy", "k": k})
+        engine=engine, extra_cols={"regime": "heavy", "k": k})
 
 
 def run_subcritical_jax(load=0.85, ks=(256, 512, 1024, 2048),
                         num_jobs=100_000, reps=8, seed=0,
-                        policies=JAX_POLICIES):
+                        policies=JAX_POLICIES, engine="jax"):
     factory = _subcritical_factory(load)
     return run_policies_jax(
         factory, ks, "k", num_jobs=num_jobs, reps=reps, seed=seed,
-        policies=policies, extra_cols={"regime": "subcritical"},
+        policies=policies, engine=engine,
+        extra_cols={"regime": "subcritical"},
         per_point_cols=[{"load": round(factory(k).load, 4)} for k in ks])
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("jax", "python"), default="jax")
+    ap.add_argument("--engine", choices=("jax", "pallas", "python"),
+                    default="jax",
+                    help="jax = batched vmap scans (default); pallas = "
+                         "fused step kernels, bit-identical to jax but "
+                         "interpret-mode (slower) off-TPU; python = exact "
+                         "event engine, full paper policy set")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--reps", type=int, default=8)
     ap.add_argument("--policies", nargs="+", default=None,
                     help="subset of the engine's policy set")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
-    default = 100_000 if args.engine == "jax" else 20_000
+    default = 20_000 if args.engine == "python" else 100_000
     jobs = args.jobs if args.jobs is not None \
         else (1_000_000 if args.full else default)
-    if args.engine == "jax":
+    if args.engine in ("jax", "pallas"):
         pols = tuple(args.policies or JAX_POLICIES)
-        rows = (run_heavy_jax(num_jobs=jobs, reps=args.reps, policies=pols)
+        rows = (run_heavy_jax(num_jobs=jobs, reps=args.reps, policies=pols,
+                              engine=args.engine)
                 + run_subcritical_jax(num_jobs=jobs, reps=args.reps,
-                                      policies=pols))
+                                      policies=pols, engine=args.engine))
     else:
         pols = tuple(args.policies or PAPER_POLICIES)
         rows = (run_heavy(num_jobs=jobs, policies=pols)

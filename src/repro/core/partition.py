@@ -12,9 +12,17 @@ Property 1).  The leftover servers are the helpers,
     |H| = k − Σ_i a_i.                                           (2b)
 
 ψ ∈ [0, 1] shrinks the A system just enough that the helper set can host any
-single job:  ψ = 1 when (k/n_i)(ϱ_i/ϱ) is integral for every i, otherwise
+single job:
 
     ψ = max { x ∈ [0,1] : k − Σ_i floor(x·(k/n_i)(ϱ_i/ϱ))·n_i ≥ max_i n_i }.
+
+The helper constraint |H| ≥ max_i n_i applies *unconditionally* — including
+when every (k/n_i)(ϱ_i/ϱ) is integral.  In that case x = 1 packs the A
+blocks perfectly (|H| = 0), so ψ must still back off below 1: BS-π/ModBS-π
+are undefined without a helper set that can host the largest job (an
+earlier revision returned ψ = 1 there and the simulators raised on
+perfectly legitimate workloads).  x = 0 always satisfies the constraint
+(|H| = k ≥ max_i n_i), so the max exists.
 
 Because each floor term is a right-continuous step function of x, the max is
 attained and can be found exactly by scanning the finitely many breakpoints
@@ -46,9 +54,9 @@ def compute_psi(k: int, needs: Sequence[int], demands: Sequence[float]) -> float
     total = demands.sum()
     fracs = (k / needs) * (demands / total)          # (k/n_i)(ϱ_i/ϱ)
 
-    if np.allclose(fracs, np.round(fracs), atol=1e-9):
-        return 1.0
-
+    # The helper constraint binds even when every frac is integral (x = 1
+    # then gives |H| = 0 < max n_i and the breakpoint scan below must back
+    # off) — no integral-fracs shortcut here.
     n_max = int(needs.max())
     if _helpers_at(1.0, k, needs, fracs) >= n_max:
         return 1.0

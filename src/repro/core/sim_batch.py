@@ -20,6 +20,11 @@ of :mod:`repro.core.sim_jax` over a leading replications axis:
 * ``sweep_many_server`` drives the Fig. 1/2-style sweeps: one workload per
   swept point, ``reps`` replications each, returning mean/CI arrays ready
   for the benchmark CSVs.
+* every batched entry point takes ``engine={"jax","pallas"}``: ``"pallas"``
+  swaps the vmapped scan for the fused step kernels of
+  :mod:`repro.kernels.msj_scan` (one kernel per replication on the Pallas
+  grid; interpret mode off-TPU).  The engines are pinned bit-for-bit
+  against each other in ``tests/test_sim_cross.py``.
 
 Replication r of a batch is bit-identical to the single-trace path on
 ``sample_trace(J, seed=replication_stream(seed, r))`` — cross-validated in
@@ -42,8 +47,8 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from .partition import BalancedPartition, balanced_partition
-from .sim_jax import (_bs_args, _bs_core, _bs_scatter_events, _fcfs_core,
-                      _loss_core, _modbs_core)
+from .sim_jax import (_bs_args, _bs_core, _bs_scatter_events, _check_engine,
+                      _fcfs_core, _loss_core, _modbs_core)
 from .workload import BatchTrace, Workload
 
 #: waiting-time epsilon for P[wait > 0] — matches ``Simulation.wait_eps``
@@ -57,6 +62,34 @@ def _call(fn, *args):
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
         return jax.block_until_ready(fn(*args))
+
+
+def _backends_initialized() -> bool | None:
+    """Whether any XLA backend has already been created, without creating
+    one.
+
+    Tries, in order: the public predicate (``jax.extend.backend``, present
+    in newer jax releases), the semi-private ``xla_bridge`` predicate, and
+    the raw ``_backends`` registry dict.  Returns ``None`` when every
+    probe is gone (API moved again) — callers must then assume the worst.
+    """
+    def _public():
+        # public API first (jax >= 0.5 exposes the predicate here).
+        # jax.extend is a lazy submodule — import it, don't getattr it.
+        import jax.extend.backend as jexb
+        return jexb.backends_are_initialized()
+
+    probes = (
+        _public,
+        lambda: jax._src.xla_bridge.backends_are_initialized(),
+        lambda: bool(jax._src.xla_bridge._backends),
+    )
+    for probe in probes:
+        try:
+            return bool(probe())
+        except (AttributeError, ImportError):
+            continue
+    return None
 
 
 def pin_single_thread_runtime() -> bool:
@@ -73,15 +106,13 @@ def pin_single_thread_runtime() -> bool:
     to one CPU, forces backend init, then restores the affinity.
 
     Returns True if the pool was pinned; False (no-op) where affinity is
-    unsupported or the backend is already initialized — callers may
-    proceed either way, the result is purely a perf hint.  Benchmark
-    entry points call this; library code never does.
+    unsupported or the backend is already initialized (e.g. after any
+    ``jax.devices()`` call) — callers may proceed either way, the result
+    is purely a perf hint.  Benchmark entry points call this; library
+    code never does.
     """
-    try:
-        already = bool(jax._src.xla_bridge._backends)
-    except AttributeError:  # private API moved — don't guess, don't pin
-        already = True
-    if already:
+    already = _backends_initialized()
+    if already or already is None:  # unknown state: don't guess, don't pin
         return False
     try:
         cpus = os.sched_getaffinity(0)
@@ -186,14 +217,24 @@ def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
                           p_helper=None, blocked=blocked)
 
 
-def fcfs_sim_batch(batch: BatchTrace) -> BatchSimResult:
-    """Batched multiserver-job FCFS over all replications at once."""
+def fcfs_sim_batch(batch: BatchTrace, engine: str = "jax") -> BatchSimResult:
+    """Batched multiserver-job FCFS over all replications at once.
+
+    ``engine="pallas"`` runs the fused step kernel of
+    :mod:`repro.kernels.msj_scan` with the replications axis as the Pallas
+    grid (interpret mode off-TPU) — bit-identical to the vmapped scan.
+    """
+    _check_engine(engine)
     with enable_x64():
-        starts = np.asarray(_call(
-            _fcfs_scan_batch,
-            jnp.asarray(batch.arrival, jnp.float64),
-            jnp.asarray(batch.need, jnp.int32),
-            jnp.asarray(batch.service, jnp.float64), batch.k))
+        args = (jnp.asarray(batch.arrival, jnp.float64),
+                jnp.asarray(batch.need, jnp.int32),
+                jnp.asarray(batch.service, jnp.float64))
+        if engine == "pallas":
+            from repro.kernels.msj_scan import fcfs_scan  # lazy: no cycle
+            starts = np.asarray(_call(
+                lambda a, n, v: fcfs_scan(a, n, v, k=batch.k), *args))
+        else:
+            starts = np.asarray(_call(_fcfs_scan_batch, *args, batch.k))
     # same op order as fcfs_sim so replications are bit-identical to it
     return BatchSimResult(response=starts + batch.service - batch.arrival,
                           wait=starts - batch.arrival,
@@ -202,8 +243,13 @@ def fcfs_sim_batch(batch: BatchTrace) -> BatchSimResult:
 
 def modified_bs_sim_batch(batch: BatchTrace,
                           partition: BalancedPartition | None = None,
-                          wl: Workload | None = None) -> BatchSimResult:
-    """Batched ModifiedBS-FCFS (Definition 2) over all replications."""
+                          wl: Workload | None = None,
+                          engine: str = "jax") -> BatchSimResult:
+    """Batched ModifiedBS-FCFS (Definition 2) over all replications.
+
+    ``engine="pallas"`` = the fused step kernel, bit-identical to the scan.
+    """
+    _check_engine(engine)
     if partition is None:
         if wl is None:
             raise ValueError("need a partition or a workload")
@@ -214,13 +260,18 @@ def modified_bs_sim_batch(batch: BatchTrace,
     if h < int(batch.need.max()):
         raise ValueError("helper set smaller than the largest server need")
     with enable_x64():
-        blocked, starts = _call(
-            _modbs_scan_batch,
-            jnp.asarray(batch.arrival, jnp.float64),
-            jnp.asarray(batch.cls, jnp.int32),
-            jnp.asarray(batch.need, jnp.int32),
-            jnp.asarray(batch.service, jnp.float64),
-            jnp.asarray(slots), s_max, h)
+        args = (jnp.asarray(batch.arrival, jnp.float64),
+                jnp.asarray(batch.cls, jnp.int32),
+                jnp.asarray(batch.need, jnp.int32),
+                jnp.asarray(batch.service, jnp.float64))
+        if engine == "pallas":
+            from repro.kernels.msj_scan import modbs_scan  # lazy: no cycle
+            blocked, starts = _call(
+                lambda a, c, n, v: modbs_scan(a, c, n, v, slots=slots,
+                                              s_max=s_max, h=h), *args)
+        else:
+            blocked, starts = _call(_modbs_scan_batch, *args,
+                                    jnp.asarray(slots), s_max, h)
     blocked = np.asarray(blocked)
     starts = np.asarray(starts)
     return BatchSimResult(response=starts + batch.service - batch.arrival,
@@ -232,7 +283,8 @@ def modified_bs_sim_batch(batch: BatchTrace,
 def bs_sim_batch(batch: BatchTrace,
                  partition: BalancedPartition | None = None,
                  wl: Workload | None = None,
-                 queue_cap: int | None = None) -> BatchSimResult:
+                 queue_cap: int | None = None,
+                 engine: str = "jax") -> BatchSimResult:
     """Batched BS-FCFS (Definition 1, rule-3 pull-backs) over all reps.
 
     Runs the event-indexed 2J-step scan of ``sim_jax._bs_core`` vmapped
@@ -240,43 +292,50 @@ def bs_sim_batch(batch: BatchTrace,
     ``bs_sim(batch.rep(r))``.  Raises if any replication overflowed the
     per-class helper-wait ring buffers (``queue_cap``, default
     ``min(J, 8192)``) — an overflow means the workload is unstable at this
-    load, not that the result is approximate.
+    load, not that the result is approximate.  ``engine="pallas"`` = the
+    fused event-step kernel, bit-identical to the event scan.
     """
+    _check_engine(engine)
     slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
     with enable_x64():
-        tagged, rec_t, ovf = _call(
-            _bs_scan_batch,
-            jnp.asarray(batch.arrival, jnp.float64),
-            jnp.asarray(batch.cls, jnp.int32),
-            jnp.asarray(batch.need, jnp.int32),
-            jnp.asarray(batch.service, jnp.float64),
-            jnp.asarray(slots), s_max, h, q_cap)
+        args = (jnp.asarray(batch.arrival, jnp.float64),
+                jnp.asarray(batch.cls, jnp.int32),
+                jnp.asarray(batch.need, jnp.int32),
+                jnp.asarray(batch.service, jnp.float64))
+        if engine == "pallas":
+            from repro.kernels.msj_scan import bs_scan  # lazy: no cycle
+            tagged, rec_t, ovf = _call(
+                lambda a, c, n, v: bs_scan(a, c, n, v, slots=slots,
+                                           s_max=s_max, h=h, q_cap=q_cap),
+                *args)
+        else:
+            tagged, rec_t, ovf = _call(_bs_scan_batch, *args,
+                                       jnp.asarray(slots), s_max, h, q_cap)
     ovf = np.asarray(ovf)
     if ovf.any():
         raise RuntimeError(
             f"helper-wait ring buffer overflow (queue_cap={q_cap}) in "
             f"replication(s) {np.flatnonzero(ovf).tolist()} — workload "
             f"unstable at this load, or raise queue_cap")
-    tagged, rec_t = np.asarray(tagged), np.asarray(rec_t)
-    J = batch.num_jobs
-    starts = np.zeros((batch.reps, J))
-    served = np.zeros((batch.reps, J), bool)
-    routed = np.zeros((batch.reps, J), bool)
-    for r in range(batch.reps):
-        starts[r], served[r], routed[r] = _bs_scatter_events(
-            J, tagged[r], rec_t[r])
+    # one vectorized event->job scatter for the whole batch (no per-rep
+    # Python loop: host post-processing must not scale with R)
+    starts, served, routed = _bs_scatter_events(batch.num_jobs, tagged,
+                                                rec_t)
     return BatchSimResult(response=starts + batch.service - batch.arrival,
                           wait=starts - batch.arrival,
                           p_helper=served.mean(axis=1), blocked=None,
                           p_routed=routed.mean(axis=1))
 
 
-#: policy name -> batched simulator over (batch, wl); names match the
-#: Python engine's ``Policy.name`` so CSV rows line up across engines.
-BATCHED_SIMS: dict[str, Callable[[BatchTrace, Workload], BatchSimResult]] = {
-    "fcfs": lambda batch, wl: fcfs_sim_batch(batch),
-    "modbs-fcfs": lambda batch, wl: modified_bs_sim_batch(batch, wl=wl),
-    "bs-fcfs": lambda batch, wl: bs_sim_batch(batch, wl=wl),
+#: policy name -> batched simulator over (batch, wl, engine); names match
+#: the Python engine's ``Policy.name`` so CSV rows line up across engines.
+BATCHED_SIMS: dict[str, Callable[..., BatchSimResult]] = {
+    "fcfs": lambda batch, wl, engine="jax": fcfs_sim_batch(batch,
+                                                           engine=engine),
+    "modbs-fcfs": lambda batch, wl, engine="jax": modified_bs_sim_batch(
+        batch, wl=wl, engine=engine),
+    "bs-fcfs": lambda batch, wl, engine="jax": bs_sim_batch(batch, wl=wl,
+                                                            engine=engine),
 }
 
 
@@ -346,14 +405,19 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
                       seed: int = 0,
                       policies: Sequence[str] = ("fcfs", "modbs-fcfs",
                                                  "bs-fcfs"),
+                      engine: str = "jax",
                       ) -> SweepResult:
     """Run the batched simulators over ``wl_factory(point)`` for each point.
 
     One batch of ``reps`` Philox replications x ``num_jobs`` arrivals is
     sampled per point; each policy's batched scan is jit-compiled once per
     (k, reps, num_jobs) shape, so sweeps that hold k fixed (Fig. 2a's load
-    sweep) compile exactly once.  Returns mean/CI arrays [policies, points].
+    sweep) compile exactly once.  ``engine`` selects the scan substrate:
+    ``"jax"`` (vmapped lax.scan, the default) or ``"pallas"`` (fused step
+    kernels, interpret mode off-TPU — bit-identical, slower on CPU).
+    Returns mean/CI arrays [policies, points].
     """
+    _check_engine(engine)
     unknown = set(policies) - set(BATCHED_SIMS)
     if unknown:
         raise KeyError(f"no batched simulator for {sorted(unknown)}; "
@@ -371,7 +435,7 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
         busy = (batch.need * batch.service).sum(axis=1)        # [R]
         for i, pol in enumerate(policies):
             t0 = time.time()
-            res = BATCHED_SIMS[pol](batch, wl)
+            res = BATCHED_SIMS[pol](batch, wl, engine=engine)
             sim_s[i, j] = time.time() - t0
             mean_r[i, j] = res.mean_response.mean()
             ci_r[i, j] = _ci95(res.mean_response)

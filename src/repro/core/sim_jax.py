@@ -53,6 +53,14 @@ Batch layer.  :mod:`repro.core.sim_batch` vmaps the ``*_core`` functions in
 this module over a replications axis (``Workload.sample_traces``) — that is
 the benchmark fast path for the Fig. 1/2 k-sweeps; the wrappers here remain
 the single-trace entry points and the cross-validation anchors.
+
+Fused-kernel layer.  The per-event step bodies (``_fcfs_sorted_step``,
+``_modbs_step``, ``_bs_make_step``) are module-level functions rather than
+scan closures so that :mod:`repro.kernels.msj_scan` can run the *identical*
+step inside a fused Pallas kernel (one kernel launch per replication instead
+of ~19 dispatched XLA ops per event).  Every wrapper here and in
+``sim_batch`` takes ``engine={"jax","pallas"}``; the two engines are pinned
+bit-for-bit against each other in ``tests/test_sim_cross.py``.
 """
 
 from __future__ import annotations
@@ -178,13 +186,32 @@ def _fcfs_scan_reference(arrival, need, service, k: int):
     return starts
 
 
-def fcfs_sim(trace: Trace) -> JaxSimResult:
-    """Multiserver-job FCFS (head-of-line blocking), exact sample path."""
+def _check_engine(engine: str) -> None:
+    if engine not in ("jax", "pallas"):
+        raise ValueError(f"unknown engine {engine!r}; expected 'jax' or "
+                         f"'pallas' (the Python event engine lives in "
+                         f"repro.core.simulator)")
+
+
+def fcfs_sim(trace: Trace, engine: str = "jax") -> JaxSimResult:
+    """Multiserver-job FCFS (head-of-line blocking), exact sample path.
+
+    ``engine="pallas"`` runs the fused step kernel of
+    :mod:`repro.kernels.msj_scan` (interpret mode off-TPU) — bit-identical
+    to the ``lax.scan`` path, see ``tests/test_sim_cross.py``.
+    """
+    _check_engine(engine)
     with enable_x64():
-        starts = np.asarray(_fcfs_scan(
-            jnp.asarray(trace.arrival, jnp.float64),
-            jnp.asarray(trace.need, jnp.int32),
-            jnp.asarray(trace.service, jnp.float64), trace.k))
+        args = (jnp.asarray(trace.arrival, jnp.float64),
+                jnp.asarray(trace.need, jnp.int32),
+                jnp.asarray(trace.service, jnp.float64))
+        if engine == "pallas":
+            from repro.kernels.msj_scan import fcfs_scan  # lazy: no cycle
+            starts = np.asarray(fcfs_scan(
+                args[0][None], args[1][None], args[2][None],
+                k=trace.k)[0])
+        else:
+            starts = np.asarray(_fcfs_scan(*args, trace.k))
     resp = starts + trace.service - trace.arrival
     return JaxSimResult(response=resp, p_helper=None, blocked=None)
 
@@ -194,32 +221,41 @@ def fcfs_sim(trace: Trace) -> JaxSimResult:
 # --------------------------------------------------------------------------
 
 
+def _modbs_step(carry, inp, *, s_max: int):
+    """One ModifiedBS-π arrival (single lane).
+
+    Module-level (not a scan closure) so the fused Pallas kernel
+    (:mod:`repro.kernels.msj_scan`) executes the exact same step body.
+    """
+    comp, W, t_prev = carry           # comp: [C, s_max], W: [h] sorted
+    t, c, n, svc = inp
+    row = comp[c]
+    busy = jnp.sum(row > t)           # padding counts as busy
+    blocked = busy >= s_max
+    # --- A-system path: replace min completion in class row
+    idx = jnp.argmin(row)
+    new_row = row.at[idx].set(jnp.where(blocked, row[idx], t + svc))
+    comp = comp.at[c].set(new_row)
+    # --- helper path: FCFS on h servers, engaged only when blocked
+    W_upd, start_h = _fcfs_sorted_step(W, t_prev, t, n, svc)
+    W_new = jnp.where(blocked, W_upd, W)
+    t_prev_new = jnp.where(blocked, start_h, t_prev)
+    start = jnp.where(blocked, start_h, t)
+    return (comp, W_new, t_prev_new), (blocked, start)
+
+
+def _modbs_init(slots, s_max: int, h: int, dt):
+    """Initial (comp, W, t_prev) carry; padding slots are permanently busy."""
+    pad = jnp.arange(s_max)[None, :] >= slots[:, None]
+    comp0 = jnp.where(pad, _BIG, 0.0).astype(dt)
+    return comp0, jnp.zeros(h, dtype=dt), jnp.zeros((), dt)
+
+
 def _modbs_core(arrival, cls, need, service, slots, s_max: int, h: int):
     """Per-class loss queues (padded to s_max) + helper FCFS on h servers."""
-
-    def step(carry, inp):
-        comp, W, t_prev = carry           # comp: [C, s_max], W: [h] sorted
-        t, c, n, svc = inp
-        row = comp[c]
-        busy = jnp.sum(row > t)           # padding counts as busy
-        blocked = busy >= s_max
-        # --- A-system path: replace min completion in class row
-        idx = jnp.argmin(row)
-        new_row = row.at[idx].set(jnp.where(blocked, row[idx], t + svc))
-        comp = comp.at[c].set(new_row)
-        # --- helper path: FCFS on h servers, engaged only when blocked
-        W_upd, start_h = _fcfs_sorted_step(W, t_prev, t, n, svc)
-        W_new = jnp.where(blocked, W_upd, W)
-        t_prev_new = jnp.where(blocked, start_h, t_prev)
-        start = jnp.where(blocked, start_h, t)
-        return (comp, W_new, t_prev_new), (blocked, start)
-
-    # padding: entries >= slots[c] are permanently busy
-    pad = jnp.arange(s_max)[None, :] >= slots[:, None]
-    comp0 = jnp.where(pad, _BIG, 0.0).astype(arrival.dtype)
-    W0 = jnp.zeros(h, dtype=arrival.dtype)
+    carry0 = _modbs_init(slots, s_max, h, arrival.dtype)
     (_, _, _), (blocked, starts) = jax.lax.scan(
-        step, (comp0, W0, jnp.zeros((), arrival.dtype)),
+        partial(_modbs_step, s_max=s_max), carry0,
         (arrival, cls, need, service))
     return blocked, starts
 
@@ -228,8 +264,13 @@ _modbs_scan = partial(jax.jit, static_argnames=("s_max", "h"))(_modbs_core)
 
 
 def modified_bs_sim(trace: Trace, partition: BalancedPartition | None = None,
-                    wl: Workload | None = None) -> JaxSimResult:
-    """ModifiedBS-FCFS (Definition 2) — exact sample path, jit'd."""
+                    wl: Workload | None = None,
+                    engine: str = "jax") -> JaxSimResult:
+    """ModifiedBS-FCFS (Definition 2) — exact sample path, jit'd.
+
+    ``engine="pallas"`` = the fused step kernel, bit-identical to the scan.
+    """
+    _check_engine(engine)
     if partition is None:
         if wl is None:
             raise ValueError("need a partition or a workload")
@@ -240,12 +281,18 @@ def modified_bs_sim(trace: Trace, partition: BalancedPartition | None = None,
     if h < int(trace.need.max()):
         raise ValueError("helper set smaller than the largest server need")
     with enable_x64():
-        blocked, starts = _modbs_scan(
-            jnp.asarray(trace.arrival, jnp.float64),
-            jnp.asarray(trace.cls, jnp.int32),
-            jnp.asarray(trace.need, jnp.int32),
-            jnp.asarray(trace.service, jnp.float64),
-            jnp.asarray(slots), s_max, h)
+        args = (jnp.asarray(trace.arrival, jnp.float64),
+                jnp.asarray(trace.cls, jnp.int32),
+                jnp.asarray(trace.need, jnp.int32),
+                jnp.asarray(trace.service, jnp.float64))
+        if engine == "pallas":
+            from repro.kernels.msj_scan import modbs_scan  # lazy: no cycle
+            blocked, starts = modbs_scan(
+                *(a[None] for a in args), slots=slots, s_max=s_max, h=h)
+            blocked, starts = blocked[0], starts[0]
+        else:
+            blocked, starts = _modbs_scan(*args, jnp.asarray(slots),
+                                          s_max, h)
     blocked = np.asarray(blocked)
     starts = np.asarray(starts)
     resp = starts + trace.service - trace.arrival
@@ -258,62 +305,23 @@ def modified_bs_sim(trace: Trace, partition: BalancedPartition | None = None,
 # --------------------------------------------------------------------------
 
 
-def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
-             q_cap: int):
-    """BS-FCFS (Definition 1) sample paths as a 2J-step event scan, batched.
+def _bs_make_step(jobrec, C: int, s_max: int, h: int, q_cap: int):
+    """Build the batched BS-FCFS event-step function over ``jobrec``.
 
-    All inputs carry an explicit leading replications axis ([R, J] arrays);
-    the R lanes advance in lockstep through one ``lax.scan``.  The axis is
-    hand-vectorized rather than ``jax.vmap``-ed, and the step is written to
-    MINIMIZE THE NUMBER OF GATHER/SCATTER OPS, not FLOPs: beyond a small
-    body size XLA:CPU stops fusing the while body and pays fixed per-op
-    dispatch every event, so job attributes are packed into one [J, 4]
-    record (arrival, service, class, need — one gather instead of four),
-    the per-class free/head/tail counters live in one [3C] vector updated
-    by a single 3-entry scatter-add, and related single-element writes are
-    merged into multi-entry scatters with disjoint (or dropped
-    out-of-bounds) indices.
-
-    Exactly 2J events exist per lane: each job contributes its arrival
-    plus either its A-system completion (it ran in an A_i — routed on
-    arrival or pulled back by rule 3) or its helper start ("commit", it
-    ran in H), so a fixed-length scan of 2*J steps processes every event
-    with none to spare.  Per step and lane the three candidate next events
-    are
-
-    * the next arrival,                       time  Ta = arrival[ai]
-    * the earliest outstanding A completion,  time  Tc = min(comp)
-    * the helper-queue head's FCFS start,     time  Th = max(A_head, t_prev,
-                                                             t_hol, W[n-1])
-
-    and the earliest wins (commit on ties: at equal times the engine's
-    helper start belongs to an event that already happened; arrivals
-    precede A completions, matching the engine's heap order).  Rule 3 runs
-    inside the A-completion event: the freed class's ring-buffer head (its
-    oldest waiting job) starts in A_i at Tc — reusing the freed comp slot —
-    and if it was the *global* queue head, t_hol := Tc: the job promoted
-    to the head cannot start in H before the pull that promoted it (the
-    fixed Python engine re-runs the helper scheduler at exactly that
-    instant).  Helper starts use the same sorted Kiefer-Wolfowitz
-    free-time vector W as the FCFS core, so helper completions never need
-    events of their own.
-
-    Returns the raw per-event streams ``(tagged, rec_t)`` (each [R, 2J];
-    tagged encodes j = A start, j + J = routed to H, j + 2J = helper
-    commit, -1 = no record) and a per-lane ring-overflow flag; the host
-    wrappers (`_bs_scatter_events`) scatter the events to per-job arrays.
+    ``jobrec`` is the packed [R, J, 4] (arrival, service, class, need)
+    record array.  Module-level factory (not a scan closure inside
+    ``_bs_core``) so the fused Pallas kernel of
+    :mod:`repro.kernels.msj_scan` runs the *identical* step body with
+    R = 1 per grid cell — the bit-level cross-validation between the two
+    engines rests on this sharing.  See ``_bs_core`` for the event
+    semantics.
     """
-    R, J = arrival.shape
-    C = slots.shape[0]
-    dt = arrival.dtype
+    R, J, _ = jobrec.shape
+    dt = jobrec.dtype
     INF = jnp.asarray(jnp.inf, dt)
     lanes = jnp.arange(R)
     lanes1 = lanes[:, None]
     ar = jnp.arange(h)[None, :]
-    # packed per-job record: one gather fetches all four attributes
-    # (class/need are exact in f64 for any realistic J, k)
-    jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
-                       axis=2)                            # [R, J, 4]
 
     def taa(a, idx):
         """a[lane, idx[lane]] for every lane (single gather)."""
@@ -443,18 +451,80 @@ def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
         out = (tagged, rec_t)
         return (ai, st, comp, ring, heads, W, t_prev, t_hol, ovf), out
 
+    return step
+
+
+def _bs_init(R: int, J: int, C: int, s_max: int, h: int, q_cap: int,
+             slots, dt):
+    """Initial BS-FCFS event-scan carry (shared with the Pallas kernel)."""
     st0 = jnp.concatenate([
         jnp.broadcast_to(slots.astype(jnp.int32), (R, C)),  # free slots
         jnp.zeros((R, 2 * C), jnp.int32)], axis=1)          # head/tail = 0
-    carry0 = (jnp.zeros(R, jnp.int32),                    # ai
-              st0,                                        # free/head/tail
-              jnp.full((R, C * s_max), _BIG, dt),         # A completion times
-              jnp.zeros((R, C * q_cap), jnp.int32),       # helper-wait rings
-              jnp.full((R, C), J, jnp.int32),             # per-class heads
-              jnp.zeros((R, h), dt),                      # W, sorted asc.
-              jnp.zeros(R, dt),                           # t_prev
-              jnp.zeros(R, dt),                           # t_hol
-              jnp.zeros(R, bool))                         # ring overflow
+    return (jnp.zeros(R, jnp.int32),                    # ai
+            st0,                                        # free/head/tail
+            jnp.full((R, C * s_max), _BIG, dt),         # A completion times
+            jnp.zeros((R, C * q_cap), jnp.int32),       # helper-wait rings
+            jnp.full((R, C), J, jnp.int32),             # per-class heads
+            jnp.zeros((R, h), dt),                      # W, sorted asc.
+            jnp.zeros(R, dt),                           # t_prev
+            jnp.zeros(R, dt),                           # t_hol
+            jnp.zeros(R, bool))                         # ring overflow
+
+
+def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
+             q_cap: int):
+    """BS-FCFS (Definition 1) sample paths as a 2J-step event scan, batched.
+
+    All inputs carry an explicit leading replications axis ([R, J] arrays);
+    the R lanes advance in lockstep through one ``lax.scan``.  The axis is
+    hand-vectorized rather than ``jax.vmap``-ed, and the step is written to
+    MINIMIZE THE NUMBER OF GATHER/SCATTER OPS, not FLOPs: beyond a small
+    body size XLA:CPU stops fusing the while body and pays fixed per-op
+    dispatch every event, so job attributes are packed into one [J, 4]
+    record (arrival, service, class, need — one gather instead of four),
+    the per-class free/head/tail counters live in one [3C] vector updated
+    by a single 3-entry scatter-add, and related single-element writes are
+    merged into multi-entry scatters with disjoint (or dropped
+    out-of-bounds) indices.
+
+    Exactly 2J events exist per lane: each job contributes its arrival
+    plus either its A-system completion (it ran in an A_i — routed on
+    arrival or pulled back by rule 3) or its helper start ("commit", it
+    ran in H), so a fixed-length scan of 2*J steps processes every event
+    with none to spare.  Per step and lane the three candidate next events
+    are
+
+    * the next arrival,                       time  Ta = arrival[ai]
+    * the earliest outstanding A completion,  time  Tc = min(comp)
+    * the helper-queue head's FCFS start,     time  Th = max(A_head, t_prev,
+                                                             t_hol, W[n-1])
+
+    and the earliest wins (commit on ties: at equal times the engine's
+    helper start belongs to an event that already happened; arrivals
+    precede A completions, matching the engine's heap order).  Rule 3 runs
+    inside the A-completion event: the freed class's ring-buffer head (its
+    oldest waiting job) starts in A_i at Tc — reusing the freed comp slot —
+    and if it was the *global* queue head, t_hol := Tc: the job promoted
+    to the head cannot start in H before the pull that promoted it (the
+    fixed Python engine re-runs the helper scheduler at exactly that
+    instant).  Helper starts use the same sorted Kiefer-Wolfowitz
+    free-time vector W as the FCFS core, so helper completions never need
+    events of their own.
+
+    Returns the raw per-event streams ``(tagged, rec_t)`` (each [R, 2J];
+    tagged encodes j = A start, j + J = routed to H, j + 2J = helper
+    commit, -1 = no record) and a per-lane ring-overflow flag; the host
+    wrappers (`_bs_scatter_events`) scatter the events to per-job arrays.
+    """
+    R, J = arrival.shape
+    C = slots.shape[0]
+    dt = arrival.dtype
+    # packed per-job record: one gather fetches all four attributes
+    # (class/need are exact in f64 for any realistic J, k)
+    jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
+                       axis=2)                            # [R, J, 4]
+    step = _bs_make_step(jobrec, C, s_max, h, q_cap)
+    carry0 = _bs_init(R, J, C, s_max, h, q_cap, slots, dt)
     (_, _, _, _, _, _, _, _, ovf), (tagged, rec_t) \
         = jax.lax.scan(step, carry0, None, length=2 * J)
 
@@ -469,23 +539,31 @@ _bs_scan = partial(jax.jit, static_argnames=("s_max", "h", "q_cap"))(_bs_core)
 
 
 def _bs_scatter_events(J: int, tagged, rec_t):
-    """Scatter one replication's [2J] event records to per-job arrays.
+    """Scatter [R, 2J] event records to per-job [R, J] arrays, all reps at
+    once.
 
     ``tagged`` encodes the event: j = job j started in its A_i (the record
     time is its start), j + J = job j was routed to H on arrival, j + 2J =
     job j started on a helper server.  Each job yields exactly one start
-    record and at most one routing record; -1 = non-recording event.
+    record and at most one routing record per replication, so every target
+    cell is written at most once and one flat advanced-indexing assignment
+    per record kind handles the whole batch — host post-processing stays
+    O(R·J) vectorized numpy instead of an R-iteration Python loop.
     """
-    start = np.zeros(J)
-    served = np.zeros(J, bool)
-    routed = np.zeros(J, bool)
+    tagged = np.asarray(tagged)
+    rec_t = np.asarray(rec_t)
+    R = tagged.shape[0]
+    rows = np.broadcast_to(np.arange(R)[:, None], tagged.shape)
+    start = np.zeros((R, J))
+    served = np.zeros((R, J), bool)
+    routed = np.zeros((R, J), bool)
     m_a = (tagged >= 0) & (tagged < J)
     m_r = (tagged >= J) & (tagged < 2 * J)
     m_h = tagged >= 2 * J
-    start[tagged[m_a]] = rec_t[m_a]
-    routed[tagged[m_r] - J] = True
-    start[tagged[m_h] - 2 * J] = rec_t[m_h]
-    served[tagged[m_h] - 2 * J] = True
+    start[rows[m_a], tagged[m_a]] = rec_t[m_a]
+    routed[rows[m_r], tagged[m_r] - J] = True
+    start[rows[m_h], tagged[m_h] - 2 * J] = rec_t[m_h]
+    served[rows[m_h], tagged[m_h] - 2 * J] = True
     return start, served, routed
 
 
@@ -508,28 +586,35 @@ def _bs_args(trace_or_batch, partition, wl, queue_cap):
 
 
 def bs_sim(trace: Trace, partition: BalancedPartition | None = None,
-           wl: Workload | None = None, queue_cap: int | None = None
-           ) -> JaxSimResult:
+           wl: Workload | None = None, queue_cap: int | None = None,
+           engine: str = "jax") -> JaxSimResult:
     """BS-FCFS (Definition 1, rule-3 pull-backs) — exact sample path, jit'd.
 
     ``queue_cap`` bounds the per-class helper-wait ring buffers (default
     ``min(J, 8192)``); a stable workload never comes close, and an overflow
-    raises rather than returning a silently wrong path.
+    raises rather than returning a silently wrong path.  ``engine="pallas"``
+    = the fused event-step kernel, bit-identical to the event scan.
     """
+    _check_engine(engine)
     slots, s_max, h, q_cap = _bs_args(trace, partition, wl, queue_cap)
     with enable_x64():
-        tagged, rec_t, ovf = _bs_scan(
-            jnp.asarray(trace.arrival, jnp.float64)[None],
-            jnp.asarray(trace.cls, jnp.int32)[None],
-            jnp.asarray(trace.need, jnp.int32)[None],
-            jnp.asarray(trace.service, jnp.float64)[None],
-            jnp.asarray(slots), s_max, h, q_cap)
+        args = (jnp.asarray(trace.arrival, jnp.float64)[None],
+                jnp.asarray(trace.cls, jnp.int32)[None],
+                jnp.asarray(trace.need, jnp.int32)[None],
+                jnp.asarray(trace.service, jnp.float64)[None])
+        if engine == "pallas":
+            from repro.kernels.msj_scan import bs_scan  # lazy: no cycle
+            tagged, rec_t, ovf = bs_scan(*args, slots=slots, s_max=s_max,
+                                         h=h, q_cap=q_cap)
+        else:
+            tagged, rec_t, ovf = _bs_scan(*args, jnp.asarray(slots),
+                                          s_max, h, q_cap)
     if bool(ovf[0]):
         raise RuntimeError(
             f"helper-wait ring buffer overflow (queue_cap={q_cap}) — "
             f"workload unstable at this load, or raise queue_cap")
-    start, served, routed = _bs_scatter_events(
-        trace.num_jobs, np.asarray(tagged[0]), np.asarray(rec_t[0]))
+    start, served, routed = _bs_scatter_events(trace.num_jobs, tagged, rec_t)
+    start, served, routed = start[0], served[0], routed[0]
     resp = start + trace.service - trace.arrival
     return JaxSimResult(response=resp, p_helper=float(served.mean()),
                         blocked=None, p_routed=float(routed.mean()),

@@ -1,0 +1,5 @@
+from .ops import bs_scan, fcfs_scan, modbs_scan
+from .ref import bs_scan_ref, fcfs_scan_ref, modbs_scan_ref
+
+__all__ = ["bs_scan", "bs_scan_ref", "fcfs_scan", "fcfs_scan_ref",
+           "modbs_scan", "modbs_scan_ref"]

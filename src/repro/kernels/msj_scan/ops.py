@@ -1,0 +1,42 @@
+"""Public wrappers for the fused event-scan kernels.
+
+Pallas compilation on TPU, interpret mode everywhere else (the repo's CPU
+CI path): interpret mode scans the grid one replication at a time with the
+kernel body executed as ordinary XLA ops, so it fuses nothing on CPU — it
+exists for bit-level cross-validation and the ``engine="pallas"`` benchmark
+rows, not CPU speed.  See ``kernel.py`` for the TPU-path constraints
+(f32-only state, per-replication rows resident in VMEM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import bs_scan_fwd, fcfs_scan_fwd, modbs_scan_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fcfs_scan(arrival, need, service, *, k: int):
+    """Fused FCFS Kiefer–Wolfowitz scan: [R, J] arrays -> starts [R, J]."""
+    return fcfs_scan_fwd(arrival, need, service, k=k,
+                         interpret=_interpret())
+
+
+def modbs_scan(arrival, cls, need, service, *, slots, s_max: int, h: int):
+    """Fused ModifiedBS-π scan -> (blocked [R, J], starts [R, J])."""
+    return modbs_scan_fwd(arrival, cls, need, service,
+                          jnp.asarray(slots, jnp.int32),
+                          s_max=s_max, h=h, interpret=_interpret())
+
+
+def bs_scan(arrival, cls, need, service, *, slots, s_max: int, h: int,
+            q_cap: int):
+    """Fused BS-π (Def. 1) event scan -> (tagged, rec_t, ovf) streams."""
+    return bs_scan_fwd(arrival, cls, need, service,
+                       jnp.asarray(slots, jnp.int32),
+                       s_max=s_max, h=h, q_cap=q_cap,
+                       interpret=_interpret())

@@ -38,9 +38,9 @@ def test_partition_invariants(args):
     # (b) exact cover
     assert sum(p.a) + p.helpers == k
     assert p.helpers >= 0
-    # (c) ψ semantics: if ψ < 1 the helper set can host any single job
-    if p.psi < 1.0:
-        assert p.helpers >= max(needs)
+    # (c) ψ semantics (eq. 2): the helper set can host any single job —
+    # unconditionally, including the integral-fracs ψ=1 branch
+    assert p.helpers >= max(needs)
     assert 0.0 <= p.psi <= 1.0
 
 
@@ -67,15 +67,42 @@ def test_psi_is_maximal(args):
             assert (counts == counts_psi).all()
 
 
-def test_integral_case_gives_psi_one_and_empty_helpers():
+def test_integral_case_still_reserves_helpers():
+    """Integral (k/n_i)(ϱ_i/ϱ) packs the A blocks perfectly at x=1
+    (|H| = 0), so eq. (2)'s helper constraint must push ψ below 1 — the
+    old ψ=1 shortcut left BS-π/ModBS-π with no helper set and the
+    simulators raised on legitimate workloads."""
     # two classes engineered so (k/n_i)(ϱ_i/ϱ) is integral
     classes = (JobClass("a", 2, Exp(1.0), 0.5), JobClass("b", 4, Exp(1.0), 0.5))
     wl = Workload(k=96, lam=1.0, classes=classes)
     # demands: 1.0 and 2.0 -> fracs: 96/2*(1/3)=16, 96/4*(2/3)=16 (integral)
     p = balanced_partition(wl)
-    assert p.psi == 1.0
-    assert p.helpers == 0
-    assert p.a == (32, 64)
+    assert p.psi < 1.0
+    assert p.helpers >= max(p.needs)
+    # |H|(x) = 96 - 6*floor(16x): the largest feasible breakpoint is 15/16
+    assert p.psi == pytest.approx(15 / 16)
+    assert p.a == (30, 60) and p.helpers == 6
+
+
+def test_integral_fracs_workload_runs_end_to_end_through_bs_sim_batch():
+    """Regression: an integral-fracs workload used to get ψ=1, |H|=0 and
+    ``bs_sim_batch``/``modified_bs_sim_batch`` raised ValueError ('helper
+    set smaller than the largest server need')."""
+    from repro.core.sim_batch import bs_sim_batch, modified_bs_sim_batch
+
+    # fracs = (8/1*0.5, 8/2*0.5) = (4, 2), both integral
+    classes = (JobClass("one", 1, Exp(2.0), 0.5),
+               JobClass("two", 2, Exp(1.0), 0.5))
+    wl = Workload(k=8, lam=1.0, classes=classes)
+    p = balanced_partition(wl)
+    assert p.psi < 1.0
+    assert p.helpers >= max(p.needs)
+    batch = wl.sample_traces(400, 2, seed=3)
+    res = bs_sim_batch(batch, wl=wl)
+    assert np.isfinite(res.response).all()
+    assert (res.wait >= 0).all()
+    res_mod = modified_bs_sim_batch(batch, wl=wl)
+    assert np.isfinite(res_mod.response).all()
 
 
 def test_paper_figure1_partition_k512():

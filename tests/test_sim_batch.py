@@ -9,7 +9,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.sim_batch import sweep_many_server
+from repro.core.sim_batch import pin_single_thread_runtime, sweep_many_server
 from repro.core.workload import (Exp, JobClass, Trace, Workload,
                                  figure1_workload, replication_stream)
 
@@ -116,6 +116,78 @@ def test_sweep_single_rep_has_zero_ci():
     assert (sweep.ci95_response == 0).all()
 
 
+# -- runtime pinning ----------------------------------------------------------
+
+
+def test_pin_runtime_noops_after_backend_init():
+    """Once any JAX computation has initialized the backend, pinning the
+    intra-op pool is impossible — the call must report False and leave the
+    runtime fully usable, never crash on a private-API probe."""
+    import jax
+
+    jax.devices()  # force backend init (pytest has usually done so already)
+    assert pin_single_thread_runtime() is False
+    # runtime still works after the no-op
+    assert int(jax.numpy.arange(3).sum()) == 3
+    # idempotent: repeated calls stay no-ops
+    assert pin_single_thread_runtime() is False
+
+
+def test_backends_initialized_probe_agrees_with_reality():
+    import jax
+
+    from repro.core.sim_batch import _backends_initialized
+
+    jax.devices()
+    # after init the probe must say so (None = every probe API is gone,
+    # which would silently disable pinning — fail loudly here instead)
+    assert _backends_initialized() is True
+
+
+# -- bench regression guard ---------------------------------------------------
+
+
+def _fake_report(jps_by_key):
+    return {"schema": "bench_sim/v1", "config": {},
+            "rows": [{"engine": e, "policy": p, "jobs_per_sec": v}
+                     for (e, p), v in jps_by_key.items()]}
+
+
+def test_check_bench_regression_passes_and_fails_correctly():
+    mod = pytest.importorskip(
+        "benchmarks.check_bench_regression",
+        reason="benchmarks package needs repo root on sys.path")
+    check = mod.check
+
+    base = _fake_report({("jax-batch", "fcfs"): 1000.0,
+                         ("python", "fcfs"): 100.0})
+    same = _fake_report({("jax-batch", "fcfs"): 990.0,
+                         ("python", "fcfs"): 95.0})
+    assert check(same, base, factor=2.0) == []
+    # >2x slowdown on one pair -> exactly that pair flagged
+    slow = _fake_report({("jax-batch", "fcfs"): 400.0,
+                         ("python", "fcfs"): 95.0})
+    failures = check(slow, base, factor=2.0)
+    assert len(failures) == 1 and "jax-batch/fcfs" in failures[0]
+    # unseen (engine, policy) pairs are not compared
+    new_engine = _fake_report({("pallas", "fcfs"): 1.0})
+    assert check(new_engine, base, factor=2.0) == []
+    # a uniformly 2.5x-slower CI host is NOT a regression: the python-row
+    # ratio normalizes the floor (hardware speed is not a code change)
+    slow_host = _fake_report({("jax-batch", "fcfs"): 400.0,
+                              ("python", "fcfs"): 40.0})
+    assert check(slow_host, base, factor=2.0) == []
+    # ...but a jitted-engine collapse on that same slow host still trips
+    slow_host_regressed = _fake_report({("jax-batch", "fcfs"): 70.0,
+                                        ("python", "fcfs"): 40.0})
+    failures = check(slow_host_regressed, base, factor=2.0)
+    assert len(failures) == 1 and "jax-batch/fcfs" in failures[0]
+    # a faster host never loosens the bar (ratio capped at 1)
+    fast_host = _fake_report({("jax-batch", "fcfs"): 450.0,
+                              ("python", "fcfs"): 300.0})
+    assert len(check(fast_host, base, factor=2.0)) == 1
+
+
 # -- bench harness ------------------------------------------------------------
 
 
@@ -142,11 +214,11 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     on_disk = json.loads(out.read_text())
     assert on_disk["schema"] == bench_sim.SCHEMA
     rows = on_disk["rows"]
-    # 3 engines x 3 policies per k
-    assert len(rows) == 9 * len(on_disk["config"]["ks"])
+    # 4 engines x 3 policies per k
+    assert len(rows) == 12 * len(on_disk["config"]["ks"])
     for r in rows:
         assert set(bench_sim.ROW_KEYS) <= set(r)
-        assert r["engine"] in ("python", "jax", "jax-batch")
+        assert r["engine"] in ("python", "jax", "jax-batch", "pallas")
         assert r["jobs_per_sec"] > 0 and r["wall_s"] > 0
         if r["engine"] == "python":
             assert r["speedup_vs_python"] is None

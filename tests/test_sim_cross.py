@@ -5,13 +5,16 @@ simulator (and its batched vmap variant) reproduces the Python
 event-driven engine's sample path exactly — same start times, same
 responses, same blocking decisions — on the traces both can run.  Also
 pins the O(k) sorted-invariant FCFS step bit-for-bit to the retained
-full-sort reference step.
+full-sort reference step, and the fused Pallas kernels
+(``repro.kernels.msj_scan``, interpret mode on CPU) bit-for-bit (rtol=0)
+to the jax-batch scan cores at k ∈ {32, 256}.
 """
 
 import heapq
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 from jax.experimental import enable_x64
@@ -212,3 +215,139 @@ def test_bs_queue_cap_overflow_raises():
     trace = wl.sample_trace(3000, seed=7)
     with pytest.raises(RuntimeError, match="overflow"):
         bs_sim(trace, wl=wl, queue_cap=4)
+
+
+# -- fused Pallas kernels (interpret mode on CPU) -----------------------------
+#
+# The rtol=0 contract of the msj_scan kernel family: grid cell r runs the
+# *same* step functions as the jax-batch scan cores (see sim_jax's
+# "Fused-kernel layer" docstring), so starts/waits/observables must be
+# bit-identical, not merely close.
+
+
+@pytest.mark.parametrize("k", [32, 256])
+def test_pallas_fcfs_bitexact_vs_jax_batch(k):
+    wl = small_workload(k=k)
+    batch = wl.sample_traces(1200, 2, seed=17)
+    ref = fcfs_sim_batch(batch)
+    out = fcfs_sim_batch(batch, engine="pallas")
+    assert np.array_equal(out.response, ref.response)
+    assert np.array_equal(out.wait, ref.wait)
+
+
+@pytest.mark.parametrize("k", [32, 256])
+def test_pallas_modbs_bitexact_vs_jax_batch(k):
+    wl = figure1_workload(k, theta=0.7)
+    batch = wl.sample_traces(1200, 2, seed=17)
+    ref = modified_bs_sim_batch(batch, wl=wl)
+    out = modified_bs_sim_batch(batch, wl=wl, engine="pallas")
+    assert np.array_equal(out.response, ref.response)
+    assert np.array_equal(out.blocked, ref.blocked)
+    assert np.array_equal(out.p_helper, ref.p_helper)
+
+
+@pytest.mark.parametrize("k", [32, 256])
+def test_pallas_bs_bitexact_vs_jax_batch(k):
+    wl = figure1_workload(k, theta=0.7)
+    batch = wl.sample_traces(1200, 2, seed=17)
+    ref = bs_sim_batch(batch, wl=wl)
+    out = bs_sim_batch(batch, wl=wl, engine="pallas")
+    assert np.array_equal(out.response, ref.response)
+    assert np.array_equal(out.wait, ref.wait)
+    assert np.array_equal(out.p_helper, ref.p_helper)
+    assert np.array_equal(out.p_routed, ref.p_routed)
+
+
+def test_pallas_kernel_family_matches_refs_at_raw_stream_level():
+    """Below the sim_batch wrappers: each msj_scan kernel against its ref
+    (the scan core with the kernel call signature) on the raw outputs —
+    including the BS event stream (tagged/rec_t/ovf) before the host
+    scatter."""
+    from repro.core.sim_jax import _bs_args
+    from repro.kernels.msj_scan import (bs_scan, bs_scan_ref, fcfs_scan,
+                                        fcfs_scan_ref, modbs_scan,
+                                        modbs_scan_ref)
+
+    wl = figure1_workload(32, theta=0.7)
+    batch = wl.sample_traces(800, 2, seed=21)
+    slots, s_max, h, q_cap = _bs_args(batch, None, wl, None)
+    with enable_x64():
+        a = jnp.asarray(batch.arrival, jnp.float64)
+        c = jnp.asarray(batch.cls, jnp.int32)
+        n = jnp.asarray(batch.need, jnp.int32)
+        v = jnp.asarray(batch.service, jnp.float64)
+        assert np.array_equal(np.asarray(fcfs_scan(a, n, v, k=batch.k)),
+                              np.asarray(fcfs_scan_ref(a, n, v, k=batch.k)))
+        out = modbs_scan(a, c, n, v, slots=slots, s_max=s_max, h=h)
+        ref = modbs_scan_ref(a, c, n, v, slots=slots, s_max=s_max, h=h)
+        for o, r in zip(out, ref):
+            assert np.array_equal(np.asarray(o), np.asarray(r))
+        out = bs_scan(a, c, n, v, slots=slots, s_max=s_max, h=h,
+                      q_cap=q_cap)
+        ref = bs_scan_ref(a, c, n, v, slots=slots, s_max=s_max, h=h,
+                          q_cap=q_cap)
+        for o, r in zip(out, ref):
+            assert np.array_equal(np.asarray(o), np.asarray(r))
+
+
+def test_pallas_single_trace_engines_match():
+    """The engine knob on the single-trace wrappers routes to the kernels."""
+    wl = figure1_workload(32, theta=0.7)
+    trace = wl.sample_trace(600, seed=2)
+    assert np.array_equal(fcfs_sim(trace, engine="pallas").response,
+                          fcfs_sim(trace).response)
+    assert np.array_equal(modified_bs_sim(trace, wl=wl,
+                                          engine="pallas").response,
+                          modified_bs_sim(trace, wl=wl).response)
+    a = bs_sim(trace, wl=wl, engine="pallas")
+    b = bs_sim(trace, wl=wl)
+    assert np.array_equal(a.response, b.response)
+    assert a.p_helper == b.p_helper
+
+
+def test_unknown_engine_raises():
+    wl = small_workload()
+    batch = wl.sample_traces(10, 1, seed=0)
+    with pytest.raises(ValueError, match="unknown engine"):
+        fcfs_sim_batch(batch, engine="tpu")
+    with pytest.raises(ValueError, match="unknown engine"):
+        fcfs_sim(batch.rep(0), engine="")
+
+
+# -- O(k) roll-and-insert under ties (property test) --------------------------
+#
+# Duplicated arrival/service values drive searchsorted(W, comp, "right")
+# into tied boundaries (comp equal to one or more entries of W, tied
+# arrivals, zero services).  The O(k) sorted-invariant step, the retained
+# full-sort reference, and the fused Pallas kernel must agree bit-for-bit
+# on every such trace.
+
+_TIE_J = 64  # fixed length: one compile per k for all examples
+
+tie_traces = st.tuples(
+    st.sampled_from([8, 32]),                                  # k
+    st.lists(st.tuples(st.sampled_from([0.0, 0.0, 0.25, 1.0]),  # gap
+                       st.integers(1, 8),                       # need
+                       st.sampled_from([0.0, 0.5, 0.5, 1.0, 2.0])),  # svc
+             min_size=_TIE_J, max_size=_TIE_J),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tie_traces)
+def test_fcfs_roll_insert_ties_bitexact(args):
+    k, jobs = args
+    gaps = np.array([j[0] for j in jobs])
+    need = np.minimum(np.array([j[1] for j in jobs]), k)
+    svc = np.array([j[2] for j in jobs])
+    arrival = np.cumsum(gaps)
+    with enable_x64():
+        a = jnp.asarray(arrival, jnp.float64)
+        n = jnp.asarray(need, jnp.int32)
+        v = jnp.asarray(svc, jnp.float64)
+        fast = np.asarray(sim_jax._fcfs_scan(a, n, v, k))
+        ref = np.asarray(sim_jax._fcfs_scan_reference(a, n, v, k))
+        from repro.kernels.msj_scan import fcfs_scan
+        fused = np.asarray(fcfs_scan(a[None], n[None], v[None], k=k)[0])
+    assert np.array_equal(fast, ref), f"roll-and-insert != sort ref (k={k})"
+    assert np.array_equal(fused, ref), f"pallas != sort ref (k={k})"
