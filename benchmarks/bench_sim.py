@@ -1,6 +1,11 @@
 """Simulation-substrate benchmark — tracks the hot-path perf trajectory.
 
-Times four engines on the Fig. 1 critical-regime workload:
+Two scenarios (``--scenario {fig1,traces,all}``): the Fig. 1
+critical-regime synthetic workload (``bench="fig1-critical"``) and the
+Fig. 3 empirical-trace path (``bench="traces"``: an SDSC-SP2 synthesized
+log, moving-block-bootstrapped into replications via
+``BatchTrace.from_trace`` and dispatched through the engine registry).
+Each times four engines:
 
 * ``python``    — the exact event-driven engine (the correctness oracle)
 * ``jax``       — per-trace ``lax.scan`` (``repro.core.sim_jax``)
@@ -31,12 +36,13 @@ import json
 import sys
 import time
 
+from repro.core import engines
 from repro.core.policies import make_policy
-from repro.core.sim_batch import (bs_sim_batch, fcfs_sim_batch,
-                                  modified_bs_sim_batch)
 from repro.core.sim_jax import bs_sim, fcfs_sim, modified_bs_sim
 from repro.core.simulator import simulate_trace
-from repro.core.workload import figure1_workload
+from repro.core.workload import BatchTrace, figure1_workload, \
+    sdsc_sp2_workload
+from repro.data.swf import sdsc_sp2_trace
 
 SCHEMA = "bench_sim/v1"
 
@@ -46,10 +52,10 @@ ROW_KEYS = ("bench", "engine", "policy", "k", "jobs", "reps", "wall_s",
 
 
 def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
-         python_jps=None):
+         python_jps=None, bench="fig1-critical"):
     jps = jobs * reps / wall_s
     return {
-        "bench": "fig1-critical", "engine": engine, "policy": policy,
+        "bench": bench, "engine": engine, "policy": policy,
         "k": k, "jobs": jobs, "reps": reps,
         "wall_s": round(wall_s, 4),
         "jobs_per_sec": round(jps, 1),
@@ -86,30 +92,64 @@ def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
                          python_jps=python_jps[name]))
 
     batch = wl.sample_traces(jobs, reps, seed=seed)
+    rows += _registry_rows(batch, wl, k, jobs, reps, python_jps)
+    return rows
+
+
+def _registry_rows(batch, wl, k, jobs, reps, python_jps,
+                   bench="fig1-critical"):
+    """jax-batch + pallas rows for every registry policy on one batch."""
+    rows = []
     for engine, label in (("jax", "jax-batch"), ("pallas", "pallas")):
-        for name, fn in (
-                ("fcfs",
-                 lambda e=engine: fcfs_sim_batch(batch, engine=e)),
-                ("modbs-fcfs",
-                 lambda e=engine: modified_bs_sim_batch(batch, wl=wl,
-                                                        engine=e)),
-                ("bs-fcfs",
-                 lambda e=engine: bs_sim_batch(batch, wl=wl, engine=e))):
+        for name in engines.policies_for(engine):
+            def fn(e=engine, n=name):
+                return engines.simulate(n, batch, engine=e, wl=wl)
             t0 = time.time(); fn(); first = time.time() - t0
             t0 = time.time(); fn(); wall = time.time() - t0
             rows.append(_row(label, name, k, jobs, reps, wall,
                              compile_s=max(0.0, first - wall),
-                             python_jps=python_jps[name]))
+                             python_jps=python_jps.get(name), bench=bench))
     return rows
 
 
-def run(ks, jobs, reps, python_jobs, seed=0):
+def bench_traces(jobs: int, reps: int, python_jobs: int, seed: int = 0,
+                 k: int = 512, load: float = 0.85) -> list[dict]:
+    """The empirical-trace scenario: SDSC-SP2 synthesized log,
+    moving-block bootstrap (``BatchTrace.from_trace``) into ``reps``
+    replications, every registry policy timed on the same batch
+    (``bench="traces"`` rows)."""
+    wl = sdsc_sp2_workload(k=k, load=load)
     rows = []
-    for k in ks:
-        rows += bench_point(k, jobs, reps, python_jobs, seed=seed)
+    python_jps = {}
+    trace_py = sdsc_sp2_trace(python_jobs, k=k, load=load, seed=seed)
+    py_batch = BatchTrace.from_trace(trace_py, 1, seed=seed, method="block")
+    for pol in engines.policies_for("jax"):
+        t0 = time.time()
+        engines.simulate(pol, py_batch, engine="python", wl=wl)
+        wall = time.time() - t0
+        python_jps[pol] = python_jobs / wall
+        rows.append(_row("python", pol, k, python_jobs, 1, wall,
+                         bench="traces"))
+    trace = sdsc_sp2_trace(jobs, k=k, load=load, seed=seed)
+    batch = BatchTrace.from_trace(trace, reps, seed=seed, method="block")
+    rows += _registry_rows(batch, wl, k, jobs, reps, python_jps,
+                           bench="traces")
+    return rows
+
+
+def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
+        traces_k=512):
+    rows = []
+    if scenario in ("fig1", "all"):
+        for k in ks:
+            rows += bench_point(k, jobs, reps, python_jobs, seed=seed)
+    if scenario in ("traces", "all"):
+        rows += bench_traces(jobs, reps, python_jobs, seed=seed,
+                             k=traces_k)
     return {"schema": SCHEMA,
             "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
-                       "python_jobs": python_jobs, "seed": seed},
+                       "python_jobs": python_jobs, "seed": seed,
+                       "scenario": scenario, "traces_k": traces_k},
             "rows": rows}
 
 
@@ -130,6 +170,10 @@ def main(argv=None):
                "--engine {python,jax,pallas} selection.")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, < 60 s on CPU")
+    ap.add_argument("--scenario", choices=("fig1", "traces", "all"),
+                    default="all",
+                    help="fig1 = synthetic critical-regime sweep; traces "
+                         "= SDSC-SP2 bootstrap batch (the Fig. 3 path)")
     ap.add_argument("--ks", type=int, nargs="+", default=None)
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--reps", type=int, default=None)
@@ -137,22 +181,22 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args(argv)
     if args.smoke:
-        ks, jobs, reps, pj = (64,), 20_000, 4, 2_000
+        ks, jobs, reps, pj, tk = (64,), 20_000, 4, 2_000, 256
     else:
         # 16 replications: the batched engines amortize the scan's fixed
         # per-step dispatch across lanes, and the CIs tighten for free
-        ks, jobs, reps, pj = (256, 1024), 100_000, 16, 100_000
+        ks, jobs, reps, pj, tk = (256, 1024), 100_000, 16, 100_000, 512
     ks = tuple(args.ks) if args.ks else ks
     jobs = args.jobs or jobs
     reps = args.reps or reps
     pj = args.python_jobs or pj
-    report = run(ks, jobs, reps, pj)
+    report = run(ks, jobs, reps, pj, scenario=args.scenario, traces_k=tk)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")
     for r in report["rows"]:
-        print(f"{r['engine']:>9} {r['policy']:<10} k={r['k']:<5} "
-              f"{r['jobs_per_sec']:>12,.0f} jobs/s"
+        print(f"{r['bench']:>13} {r['engine']:>9} {r['policy']:<10} "
+              f"k={r['k']:<5} {r['jobs_per_sec']:>12,.0f} jobs/s"
               + (f"  ({r['speedup_vs_python']}x python)"
                  if r["speedup_vs_python"] else ""), file=sys.stderr)
     print(f"wrote {args.out}", file=sys.stderr)

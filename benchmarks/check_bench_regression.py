@@ -1,11 +1,13 @@
 """Guard against silent scan-substrate slowdowns in CI.
 
 Compares a freshly generated ``bench_sim`` report (typically ``--smoke``)
-against the committed ``BENCH_sim.json``: for every (engine, policy) pair
-present in both, the new ``jobs_per_sec`` must be at least ``1/factor`` of
-the *slowest* committed row for that pair (the committed file sweeps
+against the committed ``BENCH_sim.json``: for every (bench, engine,
+policy) cell present in both — the synthetic ``fig1-critical`` scenario
+and the empirical-bootstrap ``traces`` scenario are guarded
+independently — the new ``jobs_per_sec`` must be at least ``1/factor`` of
+the *slowest* committed row for that cell (the committed file sweeps
 several k; the smoke config uses a smaller k and fewer reps, so the
-per-pair minimum is the conservative comparable baseline).
+per-cell minimum is the conservative comparable baseline).
 
 The committed file was produced on a different machine than the CI
 runner, so raw jobs/sec would conflate hardware speed with code
@@ -29,10 +31,11 @@ import json
 import sys
 
 
-def _min_jps_by_key(report: dict) -> dict[tuple[str, str], float]:
-    out: dict[tuple[str, str], float] = {}
+def _min_jps_by_key(report: dict) -> dict[tuple[str, str, str], float]:
+    out: dict[tuple[str, str, str], float] = {}
     for row in report["rows"]:
-        key = (row["engine"], row["policy"])
+        key = (row.get("bench", "fig1-critical"), row["engine"],
+               row["policy"])
         jps = float(row["jobs_per_sec"])
         out[key] = min(out.get(key, float("inf")), jps)
     return out
@@ -41,25 +44,26 @@ def _min_jps_by_key(report: dict) -> dict[tuple[str, str], float]:
 def _machine_ratio(fresh: dict, base: dict) -> float:
     """median(new/base) over shared python-engine rows, capped at 1."""
     ratios = sorted(fresh[k] / base[k]
-                    for k in fresh if k in base and k[0] == "python")
+                    for k in fresh if k in base and k[1] == "python")
     if not ratios:
         return 1.0
     return min(1.0, ratios[len(ratios) // 2])
 
 
 def check(new: dict, baseline: dict, factor: float = 2.0) -> list[str]:
-    """Failure messages for every (engine, policy) regressed > factor."""
+    """Failure messages for every (bench, engine, policy) cell regressed
+    more than ``factor``."""
     base = _min_jps_by_key(baseline)
     fresh = _min_jps_by_key(new)
     machine = _machine_ratio(fresh, base)
     failures = []
     for key, jps in sorted(fresh.items()):
         if key not in base:
-            continue  # new engine/policy with no committed baseline yet
+            continue  # new scenario/engine/policy with no baseline yet
         floor = base[key] * machine / factor
         if jps < floor:
             failures.append(
-                f"{key[0]}/{key[1]}: {jps:,.0f} jobs/s < "
+                f"{key[0]}:{key[1]}/{key[2]}: {jps:,.0f} jobs/s < "
                 f"{floor:,.0f} (committed min {base[key]:,.0f} x machine "
                 f"ratio {machine:.2f} / factor {factor})")
     return failures

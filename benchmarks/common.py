@@ -5,9 +5,11 @@ from __future__ import annotations
 import sys
 import time
 
+import numpy as np
+
 from repro.core.policies import make_policy
 from repro.core.simulator import simulate_trace
-from repro.core.workload import Workload
+from repro.core.workload import BatchTrace, Workload
 
 #: the policy set the paper benchmarks against (Figures 1-3)
 PAPER_POLICIES = ("bs", "fcfs", "serverfilling", "sf-srpt", "ff-srpt", "msf")
@@ -16,6 +18,12 @@ PAPER_POLICIES = ("bs", "fcfs", "serverfilling", "sf-srpt", "ff-srpt", "msf")
 #: bs-fcfs is BS-π proper (Def. 1 pull-backs) on the event-indexed scan,
 #: modbs-fcfs doubles as the Cor.-1 upper bound on BS-π's P_H.
 JAX_POLICIES = ("fcfs", "modbs-fcfs", "bs-fcfs")
+
+#: the engine choices every benchmark CLI exposes
+ENGINES = ("python", "jax", "pallas")
+ENGINE_HELP = ("jax = batched vmap scans (default); pallas = fused step "
+               "kernels, bit-identical to jax but interpret-mode (slower) "
+               "off-TPU; python = exact event engine, full paper policy set")
 
 
 def pin_scan_runtime() -> bool:
@@ -53,7 +61,20 @@ def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
 
 
 def run_policies(wl: Workload, num_jobs: int, seed: int,
-                 policies=PAPER_POLICIES, extra_cols=None) -> list[dict]:
+                 policies=PAPER_POLICIES, extra_cols=None, *,
+                 engine: str = "python", reps: int = 1) -> list[dict]:
+    """One CSV row per policy on a trace sampled from ``wl``.
+
+    ``engine="python"`` (the default) keeps the original single-trace
+    event-engine path.  Fast engines sample a ``reps``-replication Philox
+    batch and dispatch every policy through the engine registry
+    (:func:`run_policies_batch`), falling back to the python engine for
+    policies the scan substrate does not cover.
+    """
+    if engine != "python":
+        batch = wl.sample_traces(num_jobs, reps, seed=seed)
+        return run_policies_batch(batch, wl, policies, engine=engine,
+                                  extra_cols=extra_cols)
     trace = wl.sample_trace(num_jobs, seed=seed)
     rows = []
     for name in policies:
@@ -73,6 +94,66 @@ def run_policies(wl: Workload, num_jobs: int, seed: int,
             row.update(extra_cols)
         rows.append(row)
     return rows
+
+
+def run_policies_batch(batch: BatchTrace, wl: Workload | None,
+                       policies=PAPER_POLICIES, engine: str = "jax",
+                       extra_cols=None) -> list[dict]:
+    """Registry-dispatched rows: one per policy on a shared batch.
+
+    Every policy goes through ``engines.simulate`` on the *same*
+    :class:`BatchTrace` (synthetic or bootstrap-resampled), and every row
+    is assembled from the returned per-job arrays by the same numpy ops —
+    so two engines that agree bit-for-bit on the sample path produce
+    bit-identical CSV rows.  Policies without a core under ``engine``
+    (SF-SRPT, FF-SRPT, MSF, ... on the scan substrates) fall back to
+    ``engine="python"``; the row's ``engine`` column records which core
+    actually ran.
+    """
+    from repro.core import engines
+    if engine != "python":
+        pin_scan_runtime()
+    rows = []
+    for name in policies:
+        pol = engines.canonical(name)
+        use = engine if (pol, engine) in engines.registered() else "python"
+        t0 = time.time()
+        try:
+            res = engines.simulate(pol, batch, engine=use, wl=wl)
+            row = _batch_row(pol, batch, res)
+        except RuntimeError as e:       # unstable on this batch
+            row = {"policy": pol, "jobs": batch.num_jobs,
+                   "reps": batch.reps,
+                   "mean_response": float("inf"), "mean_wait": float("inf"),
+                   "p_wait": 1.0, "p_helper": None,
+                   "p95_response": float("inf"), "utilization": 0.0,
+                   "note": str(e)[:60]}
+        row["engine"] = use
+        row["sim_s"] = round(time.time() - t0, 2)
+        if extra_cols:
+            row.update(extra_cols)
+        rows.append(row)
+    return rows
+
+
+def _batch_row(policy: str, batch: BatchTrace, res) -> dict:
+    """CSV row of a BatchSimResult — identical float ops for every engine."""
+    from repro.core.sim_batch import _ci95
+    busy = (batch.need * batch.service).sum(axis=1)     # [R]
+    completion = batch.arrival + res.response
+    horizon = completion.max(axis=1)                    # [R]
+    ph = res.p_helper
+    return {
+        "policy": policy, "jobs": batch.num_jobs, "reps": batch.reps,
+        "mean_response": res.mean_response.mean(),
+        "ci95_response": _ci95(res.mean_response),
+        "mean_wait": res.mean_wait.mean(),
+        "p_wait": res.p_wait.mean(),
+        "ci95_p_wait": _ci95(res.p_wait),
+        "p_helper": None if ph is None else ph.mean(),
+        "p95_response": np.percentile(res.response, 95, axis=1).mean(),
+        "utilization": (busy / (batch.k * horizon)).mean(),
+    }
 
 
 def emit(rows: list[dict], cols: list[str], file=None) -> None:

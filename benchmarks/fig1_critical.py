@@ -24,8 +24,8 @@ import argparse
 from repro.core.theory import analyze
 from repro.core.workload import figure1_workload
 
-from .common import JAX_POLICIES, PAPER_POLICIES, emit, run_policies, \
-    run_policies_jax
+from .common import ENGINE_HELP, ENGINES, JAX_POLICIES, PAPER_POLICIES, \
+    emit, run_policies, run_policies_jax
 
 COLS = ["k", "policy", "mean_response", "ci95_response", "reps", "mean_wait",
         "p_wait", "ci95_p_wait", "p_helper", "p95_response", "utilization",
@@ -62,12 +62,8 @@ def run_jax(ks=(256, 512, 1024, 2048), num_jobs=100_000, reps=8, seed=0,
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("jax", "pallas", "python"),
-                    default="jax",
-                    help="jax = batched vmap scans (default); pallas = "
-                         "fused step kernels, bit-identical to jax but "
-                         "interpret-mode (slower) off-TPU; python = exact "
-                         "event engine, full paper policy set")
+    ap.add_argument("--engine", choices=ENGINES, default="jax",
+                    help=ENGINE_HELP)
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--reps", type=int, default=8)
     ap.add_argument("--ks", type=int, nargs="+",

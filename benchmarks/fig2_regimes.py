@@ -19,8 +19,8 @@ import argparse
 from repro.core.workload import figure2_workload, figure1_base_classes, \
     subcritical_scaling
 
-from .common import JAX_POLICIES, PAPER_POLICIES, emit, run_policies, \
-    run_policies_jax
+from .common import ENGINE_HELP, ENGINES, JAX_POLICIES, PAPER_POLICIES, \
+    emit, run_policies, run_policies_jax
 
 COLS = ["regime", "k", "load", "policy", "mean_response", "ci95_response",
         "reps", "mean_wait", "p_wait", "ci95_p_wait", "p_helper",
@@ -78,12 +78,8 @@ def run_subcritical_jax(load=0.85, ks=(256, 512, 1024, 2048),
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("jax", "pallas", "python"),
-                    default="jax",
-                    help="jax = batched vmap scans (default); pallas = "
-                         "fused step kernels, bit-identical to jax but "
-                         "interpret-mode (slower) off-TPU; python = exact "
-                         "event engine, full paper policy set")
+    ap.add_argument("--engine", choices=ENGINES, default="jax",
+                    help=ENGINE_HELP)
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--reps", type=int, default=8)
     ap.add_argument("--policies", nargs="+", default=None,

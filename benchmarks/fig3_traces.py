@@ -2,51 +2,109 @@
 
 Traces are synthesized from the paper's Table-2/3 extracted parameters
 (lognormal service fit; the raw archive logs are not redistributable).
-``--swf <path>`` switches to a real SWF log when available.
+``--swf <path>`` switches to a real SWF log when available (``--k`` sets
+its server count).
+
+The empirical traces run on the batched substrate: every cell bootstraps
+the trace into ``--reps`` replications (``BatchTrace.from_trace``, IID or
+moving-block via ``--bootstrap``) and dispatches each policy through the
+engine registry.  ``--engine jax`` (default) runs fcfs/modbs-fcfs/bs-fcfs
+on the vmapped scans with the remaining paper policies (SF-SRPT, FF-SRPT,
+MSF, ...) falling back to the exact Python engine; ``--engine python``
+runs everything on the event engine over the *same* bootstrap batch, so
+rows are bit-comparable across engines (the ``engine`` column records the
+core that actually ran each row).
 """
 
 from __future__ import annotations
 
 import argparse
 
-from repro.core.workload import kit_fh2_workload, sdsc_sp2_workload
+from repro.core.workload import (BatchTrace, kit_fh2_workload,
+                                 sdsc_sp2_workload)
+from repro.data.swf import kit_fh2_trace, sdsc_sp2_trace
 
-from .common import PAPER_POLICIES, emit, run_policies
+from .common import ENGINES, ENGINE_HELP, PAPER_POLICIES, emit, \
+    run_policies_batch
 
-COLS = ["dataset", "k", "load", "policy", "mean_response", "mean_wait",
-        "p_wait", "p_helper", "p95_response", "utilization", "sim_s"]
+COLS = ["dataset", "k", "load", "engine", "policy", "jobs", "reps",
+        "mean_response", "ci95_response", "mean_wait", "p_wait", "p_helper",
+        "p95_response", "utilization", "sim_s"]
+
+_DATASETS = (("sdsc_sp2", sdsc_sp2_trace, sdsc_sp2_workload),
+             ("kit_fh2", kit_fh2_trace, kit_fh2_workload))
 
 
-def run(num_jobs=15_000, seed=0, ks=(512, 1024),
-        loads=(0.5, 0.7, 0.85), policies=PAPER_POLICIES):
+def run(num_jobs=15_000, seed=0, ks=(512, 1024), loads=(0.5, 0.7, 0.85),
+        policies=PAPER_POLICIES, engine="jax", reps=4,
+        bootstrap="iid") -> list[dict]:
+    """Table-2/3 synthesized traces, bootstrapped, through the registry."""
     rows = []
-    for name, factory in (("sdsc_sp2", sdsc_sp2_workload),
-                          ("kit_fh2", kit_fh2_workload)):
+    for name, trace_fn, wl_fn in _DATASETS:
         for k in ks:
             for load in loads:
-                wl = factory(k=k, load=load)
-                rows += run_policies(
-                    wl, num_jobs, seed, policies,
+                trace = trace_fn(num_jobs, k=k, load=load, seed=seed)
+                batch = BatchTrace.from_trace(trace, reps, seed=seed,
+                                              method=bootstrap)
+                wl = wl_fn(k=k, load=load)
+                rows += run_policies_batch(
+                    batch, wl, policies, engine=engine,
                     extra_cols={"dataset": name, "k": k, "load": load})
     return rows
 
 
+def run_swf(path: str, k: int = 512, load: float = 0.85,
+            jobs: int | None = None, seed=0, policies=PAPER_POLICIES,
+            engine="jax", reps=4, bootstrap="block") -> list[dict]:
+    """A real SWF log on the bootstrap substrate.
+
+    The log's own arrival/service/need columns are bootstrap-resampled
+    (moving-block by default — real logs are bursty); ``load`` only feeds
+    the eq.-2 partition fit via :func:`trace_to_workload`.
+    """
+    from repro.data.swf import parse_swf, trace_to_workload
+    trace = parse_swf(path, k=k, limit=jobs)
+    wl = trace_to_workload(trace, k, load)
+    batch = BatchTrace.from_trace(trace, reps, seed=seed, method=bootstrap)
+    return run_policies_batch(
+        batch, wl, policies, engine=engine,
+        extra_cols={"dataset": "swf", "k": k, "load": load})
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=ENGINES, default="jax",
+                    help=ENGINE_HELP)
     ap.add_argument("--jobs", type=int, default=15_000)
+    ap.add_argument("--reps", type=int, default=4,
+                    help="bootstrap replications per cell")
+    ap.add_argument("--ks", type=int, nargs="+", default=[512, 1024])
+    ap.add_argument("--loads", type=float, nargs="+",
+                    default=[0.5, 0.7, 0.85])
+    ap.add_argument("--policies", nargs="+", default=None)
+    ap.add_argument("--bootstrap", choices=("iid", "block"), default=None,
+                    help="job-record resampling: iid or moving-block "
+                         "(default: iid for the synthesized tables, block "
+                         "for --swf logs — real arrivals are bursty)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--swf", default=None, help="real SWF log path")
+    ap.add_argument("--k", type=int, default=512,
+                    help="server count for the --swf path")
+    ap.add_argument("--load", type=float, default=0.85,
+                    help="partition-fit load for the --swf path")
     args = ap.parse_args(argv)
     jobs = 1_000_000 if args.full else args.jobs
+    pols = tuple(args.policies or PAPER_POLICIES)
     if args.swf:
-        from repro.data.swf import parse_swf, trace_to_workload
-        trace = parse_swf(args.swf, k=512)
-        wl = trace_to_workload(trace, 512, 0.85)
-        emit(run_policies(wl, jobs, 0, PAPER_POLICIES,
-                          extra_cols={"dataset": "swf", "k": 512,
-                                      "load": 0.85}), COLS)
+        emit(run_swf(args.swf, k=args.k, load=args.load, jobs=jobs,
+                     seed=args.seed, policies=pols, engine=args.engine,
+                     reps=args.reps, bootstrap=args.bootstrap or "block"),
+             COLS)
         return
-    emit(run(num_jobs=jobs), COLS)
+    emit(run(num_jobs=jobs, seed=args.seed, ks=tuple(args.ks),
+             loads=tuple(args.loads), policies=pols, engine=args.engine,
+             reps=args.reps, bootstrap=args.bootstrap or "iid"), COLS)
 
 
 if __name__ == "__main__":

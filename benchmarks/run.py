@@ -22,6 +22,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--engine", choices=("jax", "pallas"), default="jax",
+                    help="fast-engine selection for the batched-substrate "
+                         "and fig3 sections (python-engine sections always "
+                         "run the event engine)")
     args = ap.parse_args(argv)
 
     from . import (fig1_critical, fig2_regimes, fig3_traces, kernels_bench,
@@ -42,20 +46,24 @@ def main(argv=None):
     jreps = 8 if args.full else 4
     emit(fig1_critical.run_jax(
         ks=(256, 512, 1024) if not args.full else (256, 512, 1024, 2048, 4096),
-        num_jobs=jjobs, reps=jreps), fig1_critical.COLS)
+        num_jobs=jjobs, reps=jreps, engine=args.engine), fig1_critical.COLS)
 
     _section("Figure 2: heavy-traffic + subcritical regimes")
     emit(fig2_regimes.run_heavy(num_jobs=jobs2) +
          fig2_regimes.run_subcritical(num_jobs=jobs2), fig2_regimes.COLS)
 
     _section("Figure 2 (batched jax substrate)")
-    emit(fig2_regimes.run_heavy_jax(num_jobs=jjobs, reps=jreps) +
-         fig2_regimes.run_subcritical_jax(num_jobs=jjobs, reps=jreps),
+    emit(fig2_regimes.run_heavy_jax(num_jobs=jjobs, reps=jreps,
+                                    engine=args.engine) +
+         fig2_regimes.run_subcritical_jax(num_jobs=jjobs, reps=jreps,
+                                          engine=args.engine),
          fig2_regimes.COLS)
 
-    _section("Figure 3: SDSC-SP2 / KIT-FH2 HPC trace workloads")
+    _section("Figure 3: SDSC-SP2 / KIT-FH2 HPC trace workloads (bootstrap)")
     emit(fig3_traces.run(num_jobs=jobs2,
-                         ks=(512,) if not args.full else (512, 1024)),
+                         ks=(512,) if not args.full else (512, 1024),
+                         engine=args.engine,
+                         reps=2 if not args.full else 4),
          fig3_traces.COLS)
 
     _section("Theorems 1-2: convergence tables (analytic + Monte-Carlo)")

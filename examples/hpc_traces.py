@@ -1,32 +1,47 @@
 """HPC trace workloads (paper Figure 3 / Tables 2-3) through the policies.
 
-    PYTHONPATH=src python examples/hpc_traces.py
+    PYTHONPATH=src python examples/hpc_traces.py [--engine jax]
 
 Synthesizes SDSC-SP2 and KIT-FH2 traces from the paper's published table
-parameters, writes them in Standard Workload Format, and compares BS-pi
-with the baselines — reproducing the Figure-3 ordering (BS beats FCFS and
-ServerFilling on these heavy-tailed mixes).
+parameters, writes them in Standard Workload Format, bootstrap-resamples
+them into replications (``BatchTrace.from_trace``, moving-block so the
+arrival burstiness survives), and runs every registered policy through the
+engine registry's single ``simulate()`` entry point — ``--engine`` picks
+the substrate (vmapped jax scans by default; ``python`` = the exact event
+engine, bit-identical; ``pallas`` = the fused kernels).  Reproduces the
+Figure-3 ordering: BS beats FCFS on these heavy-tailed mixes.
 """
 
+import argparse
 import sys
 import tempfile
 
 sys.path.insert(0, "src")
 
-from repro.core.policies import make_policy                     # noqa
-from repro.core.simulator import simulate_trace                 # noqa
-from repro.core.workload import kit_fh2_workload, sdsc_sp2_workload  # noqa
+from repro.core import engines                                  # noqa
+from repro.core.workload import (BatchTrace, kit_fh2_workload,  # noqa
+                                 sdsc_sp2_workload)
 from repro.data.swf import write_swf                            # noqa
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--engine", choices=("python", "jax", "pallas"),
+                default="jax")
+ap.add_argument("--jobs", type=int, default=10_000)
+ap.add_argument("--reps", type=int, default=4,
+                help="bootstrap replications")
+args = ap.parse_args()
 
 for name, factory in (("SDSC-SP2", sdsc_sp2_workload),
                       ("KIT-FH2", kit_fh2_workload)):
     wl = factory(k=512, load=0.8)
-    trace = wl.sample_trace(10_000, seed=0)
+    trace = wl.sample_trace(args.jobs, seed=0)
     path = tempfile.mktemp(suffix=".swf")
     write_swf(trace, path)
-    print(f"\n{name} (k=512, load=0.8) — {trace.num_jobs} jobs, "
+    batch = BatchTrace.from_trace(trace, args.reps, seed=0, method="block")
+    print(f"\n{name} (k=512, load=0.8) — {trace.num_jobs} jobs x "
+          f"{batch.reps} bootstrap reps, engine={args.engine}, "
           f"SWF written to {path}")
-    for pol in ("bs", "fcfs", "serverfilling", "sf-srpt"):
-        res = simulate_trace(trace, make_policy(pol, wl=wl))
-        print(f"  {res.policy:>14s}: R={res.mean_response:10.1f}s  "
-              f"P(wait)={res.p_wait:.3f}")
+    for pol in engines.policies_for("jax"):   # the substrate policy set
+        res = engines.simulate(pol, batch, engine=args.engine, wl=wl)
+        print(f"  {pol:>14s}: R={res.mean_response.mean():10.1f}s  "
+              f"P(wait)={res.p_wait.mean():.3f}")

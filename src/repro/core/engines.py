@@ -1,0 +1,142 @@
+"""Unified simulation-engine registry — the single dispatch point.
+
+Before this module, every ``*_sim_batch`` wrapper hand-routed between the
+vmapped ``lax.scan`` cores and the fused Pallas kernels (a per-policy
+``if engine == "pallas"`` plus a lazy import), and the Python event engine
+lived behind an entirely different interface — so new engines and new
+policies both meant touching N call sites.  Now every simulation core
+registers itself under a ``(policy, engine)`` key and *all* callers —
+batched wrappers, single-trace wrappers, ``sweep_many_server``, the
+benchmark drivers, and the cross-validation tests — go through one entry
+point:
+
+    from repro.core import engines
+    res = engines.simulate("bs-fcfs", batch, engine="jax", wl=wl)
+
+Registry contract
+-----------------
+* **Key**: ``(policy, engine)``.  ``policy`` is the canonical policy name —
+  identical to the Python engine's ``Policy.name`` (``"fcfs"``,
+  ``"modbs-fcfs"``, ``"bs-fcfs"``, ``"sf-srpt"``, ...) so CSV rows line up
+  across engines; :func:`canonical` resolves the short CLI aliases
+  (``"bs"`` → ``"bs-fcfs"``).  ``engine`` names a substrate: ``"python"``
+  (the exact event-driven oracle, :mod:`repro.core.simulator`), ``"jax"``
+  (vmapped ``lax.scan`` cores, :mod:`repro.core.sim_batch`), ``"pallas"``
+  (fused step kernels, :mod:`repro.kernels.msj_scan`).
+* **Core**: a callable ``core(batch, *, partition=None, wl=None, **kw) ->
+  BatchSimResult``.  ``batch`` is a :class:`~repro.core.workload.BatchTrace`
+  ([R, J] replications — synthetic Poisson via ``Workload.sample_traces``
+  or empirical bootstrap via ``BatchTrace.from_trace``); ``partition``/
+  ``wl`` feed the eq.-2 balanced partition where the policy needs one;
+  extra keywords (e.g. ``queue_cap``) pass through untouched.  Cores must
+  not mutate the batch.
+* **Determinism**: on a fixed batch, every engine registered under one
+  policy must produce the *bit-identical* ``BatchSimResult`` (rtol=0) —
+  the registry is iterated by the parity tests in
+  ``tests/test_engines.py`` / ``tests/test_sim_cross.py``, so a new
+  engine is cross-validated the moment it registers.
+* **Registration**: cores self-register at import time via the
+  :func:`register` decorator; double registration of a key is an error.
+  Providers are imported lazily on first dispatch (``_PROVIDERS``), so
+  importing this module costs nothing and there are no import cycles —
+  this module never imports the core modules at top level.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import TYPE_CHECKING, Callable
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
+    from .sim_batch import BatchSimResult
+    from .workload import BatchTrace
+
+#: modules whose import registers engine cores (order is irrelevant;
+#: registration is idempotent because modules import once)
+_PROVIDERS = (
+    "repro.core.simulator",        # engine="python"
+    "repro.core.sim_batch",        # engine="jax"
+    "repro.kernels.msj_scan.ops",  # engine="pallas"
+)
+
+_REGISTRY: dict[tuple[str, str], Callable[..., "BatchSimResult"]] = {}
+
+#: short benchmark-CLI aliases -> canonical policy names (Policy.name)
+ALIASES = {
+    "bs": "bs-fcfs", "balanced-splitting": "bs-fcfs",
+    "modbs": "modbs-fcfs", "modified-bs": "modbs-fcfs",
+}
+
+
+def canonical(policy: str) -> str:
+    """Resolve a short policy alias to its canonical ``Policy.name``."""
+    return ALIASES.get(policy, policy)
+
+
+def register(policy: str, engine: str):
+    """Decorator: register a simulation core under ``(policy, engine)``."""
+    def deco(fn: Callable[..., "BatchSimResult"]):
+        key = (policy, engine)
+        if key in _REGISTRY:
+            raise ValueError(f"engine core {key} registered twice")
+        _REGISTRY[key] = fn
+        return fn
+    return deco
+
+
+def _ensure_registered() -> None:
+    """Import every provider module so self-registration has happened."""
+    for mod in _PROVIDERS:
+        importlib.import_module(mod)
+
+
+def registered() -> tuple[tuple[str, str], ...]:
+    """All registered ``(policy, engine)`` keys, sorted."""
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def available_engines() -> tuple[str, ...]:
+    """All engine names with at least one registered core, sorted."""
+    return tuple(sorted({e for _, e in registered()}))
+
+
+def engines_for(policy: str) -> tuple[str, ...]:
+    """Engines registered for a policy (canonicalized), sorted."""
+    pol = canonical(policy)
+    return tuple(sorted(e for p, e in registered() if p == pol))
+
+
+def policies_for(engine: str) -> tuple[str, ...]:
+    """Policies registered for an engine, sorted."""
+    return tuple(sorted(p for p, e in registered() if e == engine))
+
+
+def get(policy: str, engine: str) -> Callable[..., "BatchSimResult"]:
+    """The registered core for ``(policy, engine)``; loud errors otherwise.
+
+    Unknown policy -> ``KeyError`` (mirrors the old ``BATCHED_SIMS`` dict
+    lookup); known policy under an unknown engine -> ``ValueError``.
+    """
+    _ensure_registered()
+    pol = canonical(policy)
+    core = _REGISTRY.get((pol, engine))
+    if core is not None:
+        return core
+    if not engines_for(pol):
+        raise KeyError(f"no simulation core for policy {policy!r}; "
+                       f"registered policies: {sorted({p for p, _ in _REGISTRY})}")
+    raise ValueError(f"unknown engine {engine!r} for policy {pol!r}; "
+                     f"registered engines: {list(engines_for(pol))}")
+
+
+def simulate(policy: str, batch: "BatchTrace", *, engine: str = "jax",
+             partition=None, wl=None, **kw) -> "BatchSimResult":
+    """Run ``batch`` through the registered ``(policy, engine)`` core.
+
+    The single dispatch point of the simulation stack: no caller branches
+    on the engine name.  ``partition``/``wl`` are forwarded to the core
+    (BSF policies need one of them for the eq.-2 partition); extra
+    keywords (e.g. ``queue_cap`` for ``bs-fcfs``) pass through.
+    """
+    return get(policy, engine)(batch, partition=partition, wl=wl, **kw)

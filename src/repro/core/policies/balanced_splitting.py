@@ -52,6 +52,7 @@ class BalancedSplitting(Policy):
         self.h_wait: list[int] = []            # helper queue, arrival order
         self.n_routed_helper = 0               # jobs sent to H on arrival
         self.n_served_helper = 0               # jobs that START on H servers
+        self.routed_jobs: set[int] = set()     # per-job routing record
         self.n_arrivals = 0
 
     def reset(self, view: SystemView) -> None:
@@ -96,6 +97,7 @@ class BalancedSplitting(Policy):
             self.a_running.add(j)
         else:
             self.n_routed_helper += 1
+            self.routed_jobs.add(j)
             self.h_wait.append(j)
             self._helper_schedule(view)
 

@@ -20,11 +20,15 @@ of :mod:`repro.core.sim_jax` over a leading replications axis:
 * ``sweep_many_server`` drives the Fig. 1/2-style sweeps: one workload per
   swept point, ``reps`` replications each, returning mean/CI arrays ready
   for the benchmark CSVs.
-* every batched entry point takes ``engine={"jax","pallas"}``: ``"pallas"``
-  swaps the vmapped scan for the fused step kernels of
-  :mod:`repro.kernels.msj_scan` (one kernel per replication on the Pallas
-  grid; interpret mode off-TPU).  The engines are pinned bit-for-bit
-  against each other in ``tests/test_sim_cross.py``.
+* engine dispatch goes through the registry of :mod:`repro.core.engines`:
+  this module registers the vmapped scan cores under ``engine="jax"``,
+  :mod:`repro.kernels.msj_scan` registers the fused step kernels under
+  ``engine="pallas"`` (one kernel per replication on the Pallas grid;
+  interpret mode off-TPU), and :mod:`repro.core.simulator` registers the
+  exact event engine under ``engine="python"`` — all behind the same
+  ``engines.simulate(policy, batch, engine=...)`` entry point.  The
+  engines are pinned bit-for-bit against each other in
+  ``tests/test_sim_cross.py`` / ``tests/test_engines.py``.
 
 Replication r of a batch is bit-identical to the single-trace path on
 ``sample_trace(J, seed=replication_stream(seed, r))`` — cross-validated in
@@ -46,9 +50,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from . import engines
 from .partition import BalancedPartition, balanced_partition
-from .sim_jax import (_bs_args, _bs_core, _bs_scatter_events, _check_engine,
-                      _fcfs_core, _loss_core, _modbs_core)
+from .sim_jax import (_bs_args, _bs_core, _bs_scatter_events, _fcfs_core,
+                      _loss_core, _modbs_core)
 from .workload import BatchTrace, Workload
 
 #: waiting-time epsilon for P[wait > 0] — matches ``Simulation.wait_eps``
@@ -174,6 +179,7 @@ class BatchSimResult:
     blocked: np.ndarray | None  # [R, J] bool (loss queue / BSF routing)
     p_routed: np.ndarray | None = None  # [R] fraction routed to H on arrival
                                         # (> p_helper under Def.-1 pull-backs)
+    start: np.ndarray | None = None     # [R, J] raw start times
 
     @property
     def reps(self) -> int:
@@ -201,7 +207,8 @@ class BatchSimResult:
             p_helper=None if self.p_helper is None else float(self.p_helper[r]),
             blocked=None if self.blocked is None else self.blocked[r],
             p_routed=None if self.p_routed is None
-            else float(self.p_routed[r]))
+            else float(self.p_routed[r]),
+            start=None if self.start is None else self.start[r])
 
 
 def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
@@ -217,39 +224,28 @@ def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
                           p_helper=None, blocked=blocked)
 
 
-def fcfs_sim_batch(batch: BatchTrace, engine: str = "jax") -> BatchSimResult:
-    """Batched multiserver-job FCFS over all replications at once.
-
-    ``engine="pallas"`` runs the fused step kernel of
-    :mod:`repro.kernels.msj_scan` with the replications axis as the Pallas
-    grid (interpret mode off-TPU) — bit-identical to the vmapped scan.
-    """
-    _check_engine(engine)
-    with enable_x64():
-        args = (jnp.asarray(batch.arrival, jnp.float64),
-                jnp.asarray(batch.need, jnp.int32),
-                jnp.asarray(batch.service, jnp.float64))
-        if engine == "pallas":
-            from repro.kernels.msj_scan import fcfs_scan  # lazy: no cycle
-            starts = np.asarray(_call(
-                lambda a, n, v: fcfs_scan(a, n, v, k=batch.k), *args))
-        else:
-            starts = np.asarray(_call(_fcfs_scan_batch, *args, batch.k))
-    # same op order as fcfs_sim so replications are bit-identical to it
-    return BatchSimResult(response=starts + batch.service - batch.arrival,
-                          wait=starts - batch.arrival,
-                          p_helper=None, blocked=None)
+# -- shared input-prep / result-assembly helpers (every engine's cores use
+# these, so results are bit-identical across engines by construction) -------
 
 
-def modified_bs_sim_batch(batch: BatchTrace,
-                          partition: BalancedPartition | None = None,
-                          wl: Workload | None = None,
-                          engine: str = "jax") -> BatchSimResult:
-    """Batched ModifiedBS-FCFS (Definition 2) over all replications.
+def _fcfs_inputs(batch: BatchTrace) -> tuple:
+    """(arrival f64, need i32, service f64) device arrays of a batch."""
+    return (jnp.asarray(batch.arrival, jnp.float64),
+            jnp.asarray(batch.need, jnp.int32),
+            jnp.asarray(batch.service, jnp.float64))
 
-    ``engine="pallas"`` = the fused step kernel, bit-identical to the scan.
-    """
-    _check_engine(engine)
+
+def _class_inputs(batch: BatchTrace) -> tuple:
+    """(arrival f64, cls i32, need i32, service f64) device arrays."""
+    return (jnp.asarray(batch.arrival, jnp.float64),
+            jnp.asarray(batch.cls, jnp.int32),
+            jnp.asarray(batch.need, jnp.int32),
+            jnp.asarray(batch.service, jnp.float64))
+
+
+def _partition_args(batch: BatchTrace, partition: BalancedPartition | None,
+                    wl: Workload | None) -> tuple[np.ndarray, int, int]:
+    """(slots, s_max, h) of the eq.-2 partition, validated for the batch."""
     if partition is None:
         if wl is None:
             raise ValueError("need a partition or a workload")
@@ -259,58 +255,28 @@ def modified_bs_sim_batch(batch: BatchTrace,
     h = int(partition.helpers)
     if h < int(batch.need.max()):
         raise ValueError("helper set smaller than the largest server need")
-    with enable_x64():
-        args = (jnp.asarray(batch.arrival, jnp.float64),
-                jnp.asarray(batch.cls, jnp.int32),
-                jnp.asarray(batch.need, jnp.int32),
-                jnp.asarray(batch.service, jnp.float64))
-        if engine == "pallas":
-            from repro.kernels.msj_scan import modbs_scan  # lazy: no cycle
-            blocked, starts = _call(
-                lambda a, c, n, v: modbs_scan(a, c, n, v, slots=slots,
-                                              s_max=s_max, h=h), *args)
-        else:
-            blocked, starts = _call(_modbs_scan_batch, *args,
-                                    jnp.asarray(slots), s_max, h)
+    return slots, s_max, h
+
+
+def _fcfs_result(batch: BatchTrace, starts) -> BatchSimResult:
+    # same op order as the single-trace path so replications bit-match it
+    starts = np.asarray(starts)
+    return BatchSimResult(response=starts + batch.service - batch.arrival,
+                          wait=starts - batch.arrival,
+                          p_helper=None, blocked=None, start=starts)
+
+
+def _modbs_result(batch: BatchTrace, blocked, starts) -> BatchSimResult:
     blocked = np.asarray(blocked)
     starts = np.asarray(starts)
     return BatchSimResult(response=starts + batch.service - batch.arrival,
                           wait=starts - batch.arrival,
                           p_helper=blocked.mean(axis=1), blocked=blocked,
-                          p_routed=blocked.mean(axis=1))
+                          p_routed=blocked.mean(axis=1), start=starts)
 
 
-def bs_sim_batch(batch: BatchTrace,
-                 partition: BalancedPartition | None = None,
-                 wl: Workload | None = None,
-                 queue_cap: int | None = None,
-                 engine: str = "jax") -> BatchSimResult:
-    """Batched BS-FCFS (Definition 1, rule-3 pull-backs) over all reps.
-
-    Runs the event-indexed 2J-step scan of ``sim_jax._bs_core`` vmapped
-    over the replications axis; replication ``r`` is bit-identical to
-    ``bs_sim(batch.rep(r))``.  Raises if any replication overflowed the
-    per-class helper-wait ring buffers (``queue_cap``, default
-    ``min(J, 8192)``) — an overflow means the workload is unstable at this
-    load, not that the result is approximate.  ``engine="pallas"`` = the
-    fused event-step kernel, bit-identical to the event scan.
-    """
-    _check_engine(engine)
-    slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
-    with enable_x64():
-        args = (jnp.asarray(batch.arrival, jnp.float64),
-                jnp.asarray(batch.cls, jnp.int32),
-                jnp.asarray(batch.need, jnp.int32),
-                jnp.asarray(batch.service, jnp.float64))
-        if engine == "pallas":
-            from repro.kernels.msj_scan import bs_scan  # lazy: no cycle
-            tagged, rec_t, ovf = _call(
-                lambda a, c, n, v: bs_scan(a, c, n, v, slots=slots,
-                                           s_max=s_max, h=h, q_cap=q_cap),
-                *args)
-        else:
-            tagged, rec_t, ovf = _call(_bs_scan_batch, *args,
-                                       jnp.asarray(slots), s_max, h, q_cap)
+def _bs_result(batch: BatchTrace, tagged, rec_t, ovf,
+               q_cap: int) -> BatchSimResult:
     ovf = np.asarray(ovf)
     if ovf.any():
         raise RuntimeError(
@@ -324,19 +290,73 @@ def bs_sim_batch(batch: BatchTrace,
     return BatchSimResult(response=starts + batch.service - batch.arrival,
                           wait=starts - batch.arrival,
                           p_helper=served.mean(axis=1), blocked=None,
-                          p_routed=routed.mean(axis=1))
+                          p_routed=routed.mean(axis=1), start=starts)
 
 
-#: policy name -> batched simulator over (batch, wl, engine); names match
-#: the Python engine's ``Policy.name`` so CSV rows line up across engines.
-BATCHED_SIMS: dict[str, Callable[..., BatchSimResult]] = {
-    "fcfs": lambda batch, wl, engine="jax": fcfs_sim_batch(batch,
-                                                           engine=engine),
-    "modbs-fcfs": lambda batch, wl, engine="jax": modified_bs_sim_batch(
-        batch, wl=wl, engine=engine),
-    "bs-fcfs": lambda batch, wl, engine="jax": bs_sim_batch(batch, wl=wl,
-                                                            engine=engine),
-}
+# -- engine="jax" cores (the vmapped lax.scan substrate) --------------------
+
+
+@engines.register("fcfs", "jax")
+def _fcfs_jax(batch: BatchTrace, *, partition=None, wl=None):
+    """Batched multiserver-job FCFS over all replications at once."""
+    with enable_x64():
+        starts = _call(_fcfs_scan_batch, *_fcfs_inputs(batch), batch.k)
+    return _fcfs_result(batch, starts)
+
+
+@engines.register("modbs-fcfs", "jax")
+def _modbs_jax(batch: BatchTrace, *, partition=None, wl=None):
+    """Batched ModifiedBS-FCFS (Definition 2) over all replications."""
+    slots, s_max, h = _partition_args(batch, partition, wl)
+    with enable_x64():
+        blocked, starts = _call(_modbs_scan_batch, *_class_inputs(batch),
+                                jnp.asarray(slots), s_max, h)
+    return _modbs_result(batch, blocked, starts)
+
+
+@engines.register("bs-fcfs", "jax")
+def _bs_jax(batch: BatchTrace, *, partition=None, wl=None, queue_cap=None):
+    """Batched BS-FCFS (Definition 1, rule-3 pull-backs) over all reps.
+
+    Runs the event-indexed 2J-step scan of ``sim_jax._bs_core`` with the
+    replications axis carried natively; replication ``r`` is bit-identical
+    to ``bs_sim(batch.rep(r))``.  Raises if any replication overflowed the
+    per-class helper-wait ring buffers (``queue_cap``, default
+    ``min(J, 8192)``) — an overflow means the workload is unstable at this
+    load, not that the result is approximate.
+    """
+    slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
+    with enable_x64():
+        tagged, rec_t, ovf = _call(_bs_scan_batch, *_class_inputs(batch),
+                                   jnp.asarray(slots), s_max, h, q_cap)
+    return _bs_result(batch, tagged, rec_t, ovf, q_cap)
+
+
+# -- public batched entry points (thin shims over the registry) -------------
+
+
+def fcfs_sim_batch(batch: BatchTrace, engine: str = "jax") -> BatchSimResult:
+    """Batched FCFS via the engine registry (:mod:`repro.core.engines`)."""
+    return engines.simulate("fcfs", batch, engine=engine)
+
+
+def modified_bs_sim_batch(batch: BatchTrace,
+                          partition: BalancedPartition | None = None,
+                          wl: Workload | None = None,
+                          engine: str = "jax") -> BatchSimResult:
+    """Batched ModifiedBS-FCFS via the engine registry."""
+    return engines.simulate("modbs-fcfs", batch, engine=engine,
+                            partition=partition, wl=wl)
+
+
+def bs_sim_batch(batch: BatchTrace,
+                 partition: BalancedPartition | None = None,
+                 wl: Workload | None = None,
+                 queue_cap: int | None = None,
+                 engine: str = "jax") -> BatchSimResult:
+    """Batched BS-FCFS (Definition 1) via the engine registry."""
+    return engines.simulate("bs-fcfs", batch, engine=engine,
+                            partition=partition, wl=wl, queue_cap=queue_cap)
 
 
 # --------------------------------------------------------------------------
@@ -412,16 +432,22 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
     One batch of ``reps`` Philox replications x ``num_jobs`` arrivals is
     sampled per point; each policy's batched scan is jit-compiled once per
     (k, reps, num_jobs) shape, so sweeps that hold k fixed (Fig. 2a's load
-    sweep) compile exactly once.  ``engine`` selects the scan substrate:
-    ``"jax"`` (vmapped lax.scan, the default) or ``"pallas"`` (fused step
-    kernels, interpret mode off-TPU — bit-identical, slower on CPU).
+    sweep) compile exactly once.  ``engine`` selects the substrate via the
+    registry of :mod:`repro.core.engines`: ``"jax"`` (vmapped lax.scan,
+    the default), ``"pallas"`` (fused step kernels, interpret mode off-TPU
+    — bit-identical, slower on CPU), or ``"python"`` (the exact event
+    engine — slow, but the same interface).  Any ``(policy, engine)``
+    registry pair sweeps; unknown policies raise ``KeyError``.
     Returns mean/CI arrays [policies, points].
     """
-    _check_engine(engine)
-    unknown = set(policies) - set(BATCHED_SIMS)
+    if engine not in engines.available_engines():
+        raise ValueError(f"unknown engine {engine!r}; registered engines: "
+                         f"{list(engines.available_engines())}")
+    avail = engines.policies_for(engine)
+    unknown = set(policies) - set(avail)
     if unknown:
-        raise KeyError(f"no batched simulator for {sorted(unknown)}; "
-                       f"available: {sorted(BATCHED_SIMS)}")
+        raise KeyError(f"no {engine!r} simulator for {sorted(unknown)}; "
+                       f"available: {list(avail)}")
     P, N = len(policies), len(points)
     shape = (P, N)
     mean_r = np.zeros(shape); ci_r = np.zeros(shape)
@@ -435,7 +461,7 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
         busy = (batch.need * batch.service).sum(axis=1)        # [R]
         for i, pol in enumerate(policies):
             t0 = time.time()
-            res = BATCHED_SIMS[pol](batch, wl, engine=engine)
+            res = engines.simulate(pol, batch, engine=engine, wl=wl)
             sim_s[i, j] = time.time() - t0
             mean_r[i, j] = res.mean_response.mean()
             ci_r[i, j] = _ci95(res.mean_response)

@@ -58,9 +58,11 @@ Fused-kernel layer.  The per-event step bodies (``_fcfs_sorted_step``,
 ``_modbs_step``, ``_bs_make_step``) are module-level functions rather than
 scan closures so that :mod:`repro.kernels.msj_scan` can run the *identical*
 step inside a fused Pallas kernel (one kernel launch per replication instead
-of ~19 dispatched XLA ops per event).  Every wrapper here and in
-``sim_batch`` takes ``engine={"jax","pallas"}``; the two engines are pinned
-bit-for-bit against each other in ``tests/test_sim_cross.py``.
+of ~19 dispatched XLA ops per event).  Engine selection goes through the
+registry of :mod:`repro.core.engines`: the wrappers here wrap the trace as
+a one-replication batch and dispatch ``engine={"python","jax","pallas"}``
+to whichever core is registered — the engines are pinned bit-for-bit
+against each other in ``tests/test_sim_cross.py`` / ``tests/test_engines.py``.
 """
 
 from __future__ import annotations
@@ -74,8 +76,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from . import engines
 from .partition import BalancedPartition, balanced_partition
-from .workload import Trace, Workload
+from .workload import BatchTrace, Trace, Workload
 
 _BIG = 1e30
 
@@ -186,34 +189,21 @@ def _fcfs_scan_reference(arrival, need, service, k: int):
     return starts
 
 
-def _check_engine(engine: str) -> None:
-    if engine not in ("jax", "pallas"):
-        raise ValueError(f"unknown engine {engine!r}; expected 'jax' or "
-                         f"'pallas' (the Python event engine lives in "
-                         f"repro.core.simulator)")
+def _as_batch(trace: Trace) -> BatchTrace:
+    """The trace as a one-replication batch (the registry cores' input)."""
+    return BatchTrace(arrival=trace.arrival[None], cls=trace.cls[None],
+                      service=trace.service[None], need=trace.need[None],
+                      k=trace.k, C=trace.C)
 
 
 def fcfs_sim(trace: Trace, engine: str = "jax") -> JaxSimResult:
     """Multiserver-job FCFS (head-of-line blocking), exact sample path.
 
-    ``engine="pallas"`` runs the fused step kernel of
-    :mod:`repro.kernels.msj_scan` (interpret mode off-TPU) — bit-identical
-    to the ``lax.scan`` path, see ``tests/test_sim_cross.py``.
+    ``engine`` selects any registered substrate ("jax" scan, "pallas"
+    fused kernel, "python" event engine) via :mod:`repro.core.engines` —
+    all bit-identical, see ``tests/test_sim_cross.py``.
     """
-    _check_engine(engine)
-    with enable_x64():
-        args = (jnp.asarray(trace.arrival, jnp.float64),
-                jnp.asarray(trace.need, jnp.int32),
-                jnp.asarray(trace.service, jnp.float64))
-        if engine == "pallas":
-            from repro.kernels.msj_scan import fcfs_scan  # lazy: no cycle
-            starts = np.asarray(fcfs_scan(
-                args[0][None], args[1][None], args[2][None],
-                k=trace.k)[0])
-        else:
-            starts = np.asarray(_fcfs_scan(*args, trace.k))
-    resp = starts + trace.service - trace.arrival
-    return JaxSimResult(response=resp, p_helper=None, blocked=None)
+    return engines.simulate("fcfs", _as_batch(trace), engine=engine).rep(0)
 
 
 # --------------------------------------------------------------------------
@@ -260,44 +250,14 @@ def _modbs_core(arrival, cls, need, service, slots, s_max: int, h: int):
     return blocked, starts
 
 
-_modbs_scan = partial(jax.jit, static_argnames=("s_max", "h"))(_modbs_core)
 
 
 def modified_bs_sim(trace: Trace, partition: BalancedPartition | None = None,
                     wl: Workload | None = None,
                     engine: str = "jax") -> JaxSimResult:
-    """ModifiedBS-FCFS (Definition 2) — exact sample path, jit'd.
-
-    ``engine="pallas"`` = the fused step kernel, bit-identical to the scan.
-    """
-    _check_engine(engine)
-    if partition is None:
-        if wl is None:
-            raise ValueError("need a partition or a workload")
-        partition = balanced_partition(wl)
-    slots = np.asarray(partition.slots, dtype=np.int32)
-    s_max = int(slots.max())
-    h = int(partition.helpers)
-    if h < int(trace.need.max()):
-        raise ValueError("helper set smaller than the largest server need")
-    with enable_x64():
-        args = (jnp.asarray(trace.arrival, jnp.float64),
-                jnp.asarray(trace.cls, jnp.int32),
-                jnp.asarray(trace.need, jnp.int32),
-                jnp.asarray(trace.service, jnp.float64))
-        if engine == "pallas":
-            from repro.kernels.msj_scan import modbs_scan  # lazy: no cycle
-            blocked, starts = modbs_scan(
-                *(a[None] for a in args), slots=slots, s_max=s_max, h=h)
-            blocked, starts = blocked[0], starts[0]
-        else:
-            blocked, starts = _modbs_scan(*args, jnp.asarray(slots),
-                                          s_max, h)
-    blocked = np.asarray(blocked)
-    starts = np.asarray(starts)
-    resp = starts + trace.service - trace.arrival
-    return JaxSimResult(response=resp, p_helper=float(blocked.mean()),
-                        blocked=blocked, p_routed=float(blocked.mean()))
+    """ModifiedBS-FCFS (Definition 2) — exact sample path via the registry."""
+    return engines.simulate("modbs-fcfs", _as_batch(trace), engine=engine,
+                            partition=partition, wl=wl).rep(0)
 
 
 # --------------------------------------------------------------------------
@@ -535,7 +495,6 @@ def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
     return tagged.T, rec_t.T, ovf
 
 
-_bs_scan = partial(jax.jit, static_argnames=("s_max", "h", "q_cap"))(_bs_core)
 
 
 def _bs_scatter_events(J: int, tagged, rec_t):
@@ -588,37 +547,16 @@ def _bs_args(trace_or_batch, partition, wl, queue_cap):
 def bs_sim(trace: Trace, partition: BalancedPartition | None = None,
            wl: Workload | None = None, queue_cap: int | None = None,
            engine: str = "jax") -> JaxSimResult:
-    """BS-FCFS (Definition 1, rule-3 pull-backs) — exact sample path, jit'd.
+    """BS-FCFS (Definition 1, rule-3 pull-backs) — exact sample path.
 
     ``queue_cap`` bounds the per-class helper-wait ring buffers (default
     ``min(J, 8192)``); a stable workload never comes close, and an overflow
-    raises rather than returning a silently wrong path.  ``engine="pallas"``
-    = the fused event-step kernel, bit-identical to the event scan.
+    raises rather than returning a silently wrong path.  ``engine`` selects
+    any registered substrate — bit-identical across engines.
     """
-    _check_engine(engine)
-    slots, s_max, h, q_cap = _bs_args(trace, partition, wl, queue_cap)
-    with enable_x64():
-        args = (jnp.asarray(trace.arrival, jnp.float64)[None],
-                jnp.asarray(trace.cls, jnp.int32)[None],
-                jnp.asarray(trace.need, jnp.int32)[None],
-                jnp.asarray(trace.service, jnp.float64)[None])
-        if engine == "pallas":
-            from repro.kernels.msj_scan import bs_scan  # lazy: no cycle
-            tagged, rec_t, ovf = bs_scan(*args, slots=slots, s_max=s_max,
-                                         h=h, q_cap=q_cap)
-        else:
-            tagged, rec_t, ovf = _bs_scan(*args, jnp.asarray(slots),
-                                          s_max, h, q_cap)
-    if bool(ovf[0]):
-        raise RuntimeError(
-            f"helper-wait ring buffer overflow (queue_cap={q_cap}) — "
-            f"workload unstable at this load, or raise queue_cap")
-    start, served, routed = _bs_scatter_events(trace.num_jobs, tagged, rec_t)
-    start, served, routed = start[0], served[0], routed[0]
-    resp = start + trace.service - trace.arrival
-    return JaxSimResult(response=resp, p_helper=float(served.mean()),
-                        blocked=None, p_routed=float(routed.mean()),
-                        start=start)
+    return engines.simulate("bs-fcfs", _as_batch(trace), engine=engine,
+                            partition=partition, wl=wl,
+                            queue_cap=queue_cap).rep(0)
 
 
 def estimate_p_helper(wl: Workload, num_jobs: int = 200_000,

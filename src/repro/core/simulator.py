@@ -14,14 +14,16 @@ the empirical P_H.  Response time = completion − arrival.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 import math
 from typing import Sequence
 
 import numpy as np
 
+from . import engines
 from .policies.base import Policy
-from .workload import Trace, Workload
+from .workload import BatchTrace, Trace, Workload
 
 _ARRIVAL = 0
 _DEPARTURE = 1
@@ -252,3 +254,86 @@ def simulate(wl: Workload, policy: Policy, num_jobs: int = 100_000,
 
 def simulate_trace(trace: Trace, policy: Policy, **kw) -> SimResult:
     return Simulation(trace, policy, **kw).run()
+
+
+# --------------------------------------------------------------------------
+# engine="python" registry cores.
+#
+# The exact event-driven engine behind the same batched interface as the
+# scan/kernel substrates: one Simulation per replication, per-job arrays
+# assembled into a BatchSimResult with the identical float ops as the fast
+# engines (response = (start + service) - arrival inside the engine's
+# departure push), so registry parity tests can demand rtol=0.
+# --------------------------------------------------------------------------
+
+#: canonical registry policy name (== Policy.name) -> make_policy short name
+_PYTHON_POLICIES = {
+    "fcfs": "fcfs", "modbs-fcfs": "modbs", "bs-fcfs": "bs",
+    "serverfilling": "serverfilling", "sf-srpt": "sf-srpt",
+    "sf-gittins": "sf-gittins", "ff-srpt": "ff-srpt", "msf": "msf",
+    "lsf": "lsf", "backfill": "backfill", "maxweight": "maxweight",
+}
+
+#: policies that cannot build without a workload (eq.-2 partition / ranks)
+_NEEDS_WORKLOAD = {"modbs-fcfs", "bs-fcfs", "sf-gittins"}
+
+
+def _make_python_policy(canon: str, partition, wl):
+    """Policy instance for one replication, honoring an explicit partition
+    exactly like the scan cores' ``_partition_args`` does."""
+    from .policies import (BalancedSplitting, ModifiedBalancedSplitting,
+                          make_policy)
+    if canon in ("bs-fcfs", "modbs-fcfs") and partition is not None:
+        pol_cls = BalancedSplitting if canon == "bs-fcfs" \
+            else ModifiedBalancedSplitting
+        return pol_cls(partition, aux="fcfs")
+    if canon in _NEEDS_WORKLOAD and wl is None:
+        raise ValueError(f"policy {canon!r} needs a workload (wl=...) "
+                         f"or a partition")
+    return make_policy(_PYTHON_POLICIES[canon], wl=wl)
+
+
+def _python_core(canon: str, batch: BatchTrace, *, partition=None, wl=None,
+                 queue_cap=None, **kw):
+    """Run each replication through the event engine; batch the metrics.
+
+    ``queue_cap`` is accepted for interface parity with the bs-fcfs scan
+    cores and ignored: the event engine has no fixed-capacity ring
+    buffers.  ``blocked`` is populated for ModifiedBS (the per-job
+    irrevocable-routing mask, matching the scan cores); the BS/fcfs cores
+    return ``blocked=None`` on every engine.
+    """
+    from .sim_batch import BatchSimResult
+    R, J = batch.reps, batch.num_jobs
+    resp = np.empty((R, J))
+    wait = np.empty((R, J))
+    start = np.empty((R, J))
+    p_helper = np.empty(R)
+    p_routed = np.empty(R)
+    blocked = np.zeros((R, J), bool) if canon == "modbs-fcfs" else None
+    has_helper = False
+    for r in range(R):
+        trace = batch.rep(r)
+        pol = _make_python_policy(canon, partition, wl)
+        sim = Simulation(trace, pol, **kw)
+        sim.run()
+        resp[r] = sim.completion - trace.arrival
+        start[r] = sim.start_time
+        wait[r] = sim.start_time - trace.arrival
+        if blocked is not None:
+            blocked[r, sorted(pol.routed_jobs)] = True
+        ph = getattr(pol, "p_helper_estimate", None)
+        if ph is not None:
+            has_helper = True
+            p_helper[r] = ph
+            p_routed[r] = getattr(pol, "p_routed_estimate", ph)
+    return BatchSimResult(response=resp, wait=wait,
+                          p_helper=p_helper if has_helper else None,
+                          blocked=blocked,
+                          p_routed=p_routed if has_helper else None,
+                          start=start)
+
+
+for _canon in _PYTHON_POLICIES:
+    engines.register(_canon, "python")(functools.partial(_python_core,
+                                                         _canon))

@@ -21,9 +21,18 @@ from ..core.workload import (JobClass, LogNormal, Trace, Workload,
 
 
 def parse_swf(path: str, *, k: int, max_need: int = 64,
-              powers_of_two_only: bool = True, limit: int | None = None
-              ) -> Trace:
-    """Parse an SWF log into a Trace (fields 2=submit, 4=run, 5=procs)."""
+              powers_of_two_only: bool = True, limit: int | None = None,
+              statuses: tuple[int, ...] = (1, -1)) -> Trace:
+    """Parse an SWF log into a Trace (fields 2=submit, 4=run, 5=procs,
+    11=status).
+
+    Only rows whose SWF status field is in ``statuses`` are kept — by
+    default completed (1) and unknown (-1) jobs.  Failed (0) and
+    cancelled (5) rows report truncated runtimes that pollute the
+    per-class service-time fits, and partial-execution records (2-4) are
+    fragments of one checkpointed job; all are dropped.  Rows too short
+    to carry a status field count as unknown.
+    """
     arrivals, services, needs = [], [], []
     with open(path) as f:
         for line in f:
@@ -33,6 +42,9 @@ def parse_swf(path: str, *, k: int, max_need: int = 64,
             parts = line.split()
             submit, run, procs = float(parts[1]), float(parts[3]), \
                 int(parts[4])
+            status = int(parts[10]) if len(parts) > 10 else -1
+            if status not in statuses:
+                continue
             if run <= 0 or procs <= 0 or procs > max_need:
                 continue
             if powers_of_two_only and procs & (procs - 1):

@@ -6,12 +6,26 @@ kernel body executed as ordinary XLA ops, so it fuses nothing on CPU — it
 exists for bit-level cross-validation and the ``engine="pallas"`` benchmark
 rows, not CPU speed.  See ``kernel.py`` for the TPU-path constraints
 (f32-only state, per-replication rows resident in VMEM).
+
+This module also registers the kernels as the ``engine="pallas"`` cores of
+the :mod:`repro.core.engines` registry — the cores reuse the input-prep and
+result-assembly helpers of :mod:`repro.core.sim_batch`, so pallas results
+are bit-identical to the scan cores by construction everywhere outside the
+kernel bodies (and the bodies execute the same hoisted step functions; see
+``tests/test_sim_cross.py``).
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import engines
+from repro.core.sim_batch import (_bs_result, _call, _class_inputs,
+                                  _fcfs_inputs, _fcfs_result, _modbs_result,
+                                  _partition_args)
+from repro.core.sim_jax import _bs_args
 
 from .kernel import bs_scan_fwd, fcfs_scan_fwd, modbs_scan_fwd
 
@@ -40,3 +54,40 @@ def bs_scan(arrival, cls, need, service, *, slots, s_max: int, h: int,
                        jnp.asarray(slots, jnp.int32),
                        s_max=s_max, h=h, q_cap=q_cap,
                        interpret=_interpret())
+
+
+# -- engine="pallas" registry cores -----------------------------------------
+
+
+@engines.register("fcfs", "pallas")
+def _fcfs_pallas(batch, *, partition=None, wl=None):
+    """Fused-kernel FCFS core (replications axis = Pallas grid)."""
+    with enable_x64():
+        a, n, v = _fcfs_inputs(batch)
+        starts = _call(lambda a, n, v: fcfs_scan(a, n, v, k=batch.k),
+                       a, n, v)
+    return _fcfs_result(batch, starts)
+
+
+@engines.register("modbs-fcfs", "pallas")
+def _modbs_pallas(batch, *, partition=None, wl=None):
+    """Fused-kernel ModifiedBS-FCFS core."""
+    slots, s_max, h = _partition_args(batch, partition, wl)
+    with enable_x64():
+        blocked, starts = _call(
+            lambda a, c, n, v: modbs_scan(a, c, n, v, slots=slots,
+                                          s_max=s_max, h=h),
+            *_class_inputs(batch))
+    return _modbs_result(batch, blocked, starts)
+
+
+@engines.register("bs-fcfs", "pallas")
+def _bs_pallas(batch, *, partition=None, wl=None, queue_cap=None):
+    """Fused-kernel BS-FCFS (Definition 1) event-step core."""
+    slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
+    with enable_x64():
+        tagged, rec_t, ovf = _call(
+            lambda a, c, n, v: bs_scan(a, c, n, v, slots=slots, s_max=s_max,
+                                       h=h, q_cap=q_cap),
+            *_class_inputs(batch))
+    return _bs_result(batch, tagged, rec_t, ovf, q_cap)

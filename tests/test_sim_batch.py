@@ -148,9 +148,14 @@ def test_backends_initialized_probe_agrees_with_reality():
 
 
 def _fake_report(jps_by_key):
-    return {"schema": "bench_sim/v1", "config": {},
-            "rows": [{"engine": e, "policy": p, "jobs_per_sec": v}
-                     for (e, p), v in jps_by_key.items()]}
+    # 2-tuple keys default to the fig1 scenario; 3-tuples name one
+    rows = []
+    for key, v in jps_by_key.items():
+        bench, (e, p) = ("fig1-critical", key) if len(key) == 2 \
+            else (key[0], key[1:])
+        rows.append({"bench": bench, "engine": e, "policy": p,
+                     "jobs_per_sec": v})
+    return {"schema": "bench_sim/v1", "config": {}, "rows": rows}
 
 
 def test_check_bench_regression_passes_and_fails_correctly():
@@ -186,6 +191,16 @@ def test_check_bench_regression_passes_and_fails_correctly():
     fast_host = _fake_report({("jax-batch", "fcfs"): 450.0,
                               ("python", "fcfs"): 300.0})
     assert len(check(fast_host, base, factor=2.0)) == 1
+    # scenarios are guarded independently: a collapse in the traces
+    # scenario trips even when the fig1 cell of the same pair is healthy
+    base2 = _fake_report({("jax-batch", "fcfs"): 1000.0,
+                          ("python", "fcfs"): 100.0,
+                          ("traces", "jax-batch", "fcfs"): 800.0})
+    tr_slow = _fake_report({("jax-batch", "fcfs"): 990.0,
+                            ("python", "fcfs"): 100.0,
+                            ("traces", "jax-batch", "fcfs"): 100.0})
+    failures = check(tr_slow, base2, factor=2.0)
+    assert len(failures) == 1 and "traces:jax-batch/fcfs" in failures[0]
 
 
 # -- bench harness ------------------------------------------------------------
@@ -214,8 +229,9 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     on_disk = json.loads(out.read_text())
     assert on_disk["schema"] == bench_sim.SCHEMA
     rows = on_disk["rows"]
-    # 4 engines x 3 policies per k
-    assert len(rows) == 12 * len(on_disk["config"]["ks"])
+    # fig1: 4 engines x 3 policies per k; traces: 3 engines x 3 policies
+    assert len(rows) == 12 * len(on_disk["config"]["ks"]) + 9
+    assert {r["bench"] for r in rows} == {"fig1-critical", "traces"}
     for r in rows:
         assert set(bench_sim.ROW_KEYS) <= set(r)
         assert r["engine"] in ("python", "jax", "jax-batch", "pallas")
@@ -224,6 +240,8 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
             assert r["speedup_vs_python"] is None
         else:
             assert r["speedup_vs_python"] > 0
-    # the point of the substrate: batched beats the event engine
+    # the point of the substrate: batched beats the event engine — in the
+    # synthetic scenario and on the empirical bootstrap batch alike
     batched = [r for r in rows if r["engine"] == "jax-batch"]
+    assert {r["bench"] for r in batched} == {"fig1-critical", "traces"}
     assert all(r["speedup_vs_python"] > 1 for r in batched)

@@ -222,40 +222,32 @@ def test_bs_queue_cap_overflow_raises():
 # The rtol=0 contract of the msj_scan kernel family: grid cell r runs the
 # *same* step functions as the jax-batch scan cores (see sim_jax's
 # "Fused-kernel layer" docstring), so starts/waits/observables must be
-# bit-identical, not merely close.
+# bit-identical, not merely close.  The test iterates the engine registry,
+# so a newly registered (policy, engine) pair is cross-validated the
+# moment it registers — no hand-written pair list to forget to extend.
 
 
 @pytest.mark.parametrize("k", [32, 256])
-def test_pallas_fcfs_bitexact_vs_jax_batch(k):
-    wl = small_workload(k=k)
-    batch = wl.sample_traces(1200, 2, seed=17)
-    ref = fcfs_sim_batch(batch)
-    out = fcfs_sim_batch(batch, engine="pallas")
-    assert np.array_equal(out.response, ref.response)
-    assert np.array_equal(out.wait, ref.wait)
+def test_registry_fast_engines_bitexact_vs_jax(k):
+    from repro.core import engines
 
-
-@pytest.mark.parametrize("k", [32, 256])
-def test_pallas_modbs_bitexact_vs_jax_batch(k):
     wl = figure1_workload(k, theta=0.7)
     batch = wl.sample_traces(1200, 2, seed=17)
-    ref = modified_bs_sim_batch(batch, wl=wl)
-    out = modified_bs_sim_batch(batch, wl=wl, engine="pallas")
-    assert np.array_equal(out.response, ref.response)
-    assert np.array_equal(out.blocked, ref.blocked)
-    assert np.array_equal(out.p_helper, ref.p_helper)
-
-
-@pytest.mark.parametrize("k", [32, 256])
-def test_pallas_bs_bitexact_vs_jax_batch(k):
-    wl = figure1_workload(k, theta=0.7)
-    batch = wl.sample_traces(1200, 2, seed=17)
-    ref = bs_sim_batch(batch, wl=wl)
-    out = bs_sim_batch(batch, wl=wl, engine="pallas")
-    assert np.array_equal(out.response, ref.response)
-    assert np.array_equal(out.wait, ref.wait)
-    assert np.array_equal(out.p_helper, ref.p_helper)
-    assert np.array_equal(out.p_routed, ref.p_routed)
+    checked = 0
+    for policy in engines.policies_for("jax"):
+        ref = engines.simulate(policy, batch, engine="jax", wl=wl)
+        for eng in engines.engines_for(policy):
+            if eng in ("jax", "python"):
+                continue
+            out = engines.simulate(policy, batch, engine=eng, wl=wl)
+            for f in ("response", "wait", "start", "blocked", "p_helper",
+                      "p_routed"):
+                a, b = getattr(out, f), getattr(ref, f)
+                assert (a is None) == (b is None), (policy, eng, f)
+                if a is not None:
+                    assert np.array_equal(a, b), (policy, eng, f)
+            checked += 1
+    assert checked >= 3   # fcfs/modbs-fcfs/bs-fcfs x pallas
 
 
 def test_pallas_kernel_family_matches_refs_at_raw_stream_level():

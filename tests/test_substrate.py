@@ -31,14 +31,51 @@ def test_pipeline_deterministic_and_sharded():
     assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
 
 
-def test_swf_roundtrip(tmp_path):
+def test_swf_roundtrip_exact(tmp_path):
+    """Synthesize -> write SWF -> parse: the recovered Trace must match
+    field-for-field.  ``write_swf`` emits 2-decimal times, so the source
+    trace is quantized through the same formatter first — after that the
+    round trip must be exact (including class ids and the workload C)."""
+    import dataclasses
+
     trace = sdsc_sp2_trace(500, k=512, load=0.8)
+    q = lambda a: np.array([float(f"{v:.2f}") for v in a])  # noqa: E731
+    trace = dataclasses.replace(trace, arrival=q(trace.arrival),
+                                service=q(trace.service))
     p = str(tmp_path / "t.swf")
     write_swf(trace, p)
     back = parse_swf(p, k=512)
     assert back.num_jobs == trace.num_jobs
-    np.testing.assert_allclose(back.service, trace.service, rtol=1e-2)
-    assert (back.need == trace.need).all()
+    assert np.array_equal(back.arrival, trace.arrival)
+    assert np.array_equal(back.service, trace.service)
+    assert np.array_equal(back.need, trace.need)
+    assert np.array_equal(back.cls, trace.cls)
+    assert back.C == trace.C == 7
+    assert back.k == trace.k
+
+
+def test_parse_swf_honors_status_field(tmp_path):
+    """Cancelled (5) and failed (0) rows must be dropped — their truncated
+    runtimes pollute the service-time fits; completed (1), unknown (-1)
+    and status-less rows are kept."""
+    lines = [
+        "; header comment",
+        "1 10.0 0 100.0 2 -1 -1 2 -1 -1 1 -1 -1 -1 -1 -1 -1 -1",   # completed
+        "2 20.0 0 5.0 2 -1 -1 2 -1 -1 0 -1 -1 -1 -1 -1 -1 -1",     # failed
+        "3 30.0 0 7.0 4 -1 -1 4 -1 -1 5 -1 -1 -1 -1 -1 -1 -1",     # cancelled
+        "4 40.0 0 200.0 4 -1 -1 4 -1 -1 -1 -1 -1 -1 -1 -1 -1 -1",  # unknown
+        "5 50.0 0 300.0 8 -1 -1 8 -1 -1 2 -1 -1 -1 -1 -1 -1 -1",   # partial
+        "6 60.0 0 400.0 8",                                        # short row
+    ]
+    p = tmp_path / "log.swf"
+    p.write_text("\n".join(lines) + "\n")
+    back = parse_swf(str(p), k=64)
+    assert np.array_equal(back.arrival, [10.0, 40.0, 60.0])
+    assert np.array_equal(back.service, [100.0, 200.0, 400.0])
+    assert np.array_equal(back.need, [2, 4, 8])
+    # opting back in keeps the dropped rows
+    all_rows = parse_swf(str(p), k=64, statuses=(1, -1, 0, 2, 5))
+    assert all_rows.num_jobs == 6
 
 
 def test_table_workload_stats():
