@@ -5,11 +5,17 @@ critical-regime synthetic workload (``bench="fig1-critical"``) and the
 Fig. 3 empirical-trace path (``bench="traces"``: an SDSC-SP2 synthesized
 log, moving-block-bootstrapped into replications via
 ``BatchTrace.from_trace`` and dispatched through the engine registry).
-Each times four engines:
+Each times five engines (``--engines`` selects a subset):
 
 * ``python``    — the exact event-driven engine (the correctness oracle)
 * ``jax``       — per-trace ``lax.scan`` (``repro.core.sim_jax``)
 * ``jax-batch`` — vmap-over-replications (``repro.core.sim_batch``)
+* ``jax-shard`` — the same scan cores with the replications axis sharded
+  across the local device mesh (``repro.core.shard``).  ``--devices N``
+  exposes N host-platform devices on any CPU box; the row's
+  ``device_count`` column records the mesh size so
+  ``check_bench_regression`` never compares cells measured on different
+  topologies.
 * ``pallas``    — fused step kernels (``repro.kernels.msj_scan``), one
   kernel per replication on the Pallas grid.  Off-TPU this runs in
   *interpret mode*: the grid is scanned one replication at a time with
@@ -26,7 +32,13 @@ finish in well under a minute on CPU (used by the tier-1 test).
 
 JAX engines are timed on a steady-state call (after one compile call,
 whose cost is reported separately as ``compile_s``); jobs/sec for the
-batched engines counts all replications.
+batched engines counts all replications.  With ``--cache-dir`` the
+persistent compilation cache is enabled and each jitted cell additionally
+reports ``compile_warm_s`` — the retrace-plus-cache-load cost measured by
+clearing the in-memory jit caches and re-dispatching — so a compile-cache
+regression (warm ≈ cold) is visible in the committed rows; on a second
+sweep against the same cache dir, ``compile_s`` itself collapses to
+roughly ``compile_warm_s``.
 """
 
 from __future__ import annotations
@@ -35,6 +47,8 @@ import argparse
 import json
 import sys
 import time
+
+import jax
 
 from repro.core import engines
 from repro.core.policies import make_policy
@@ -48,11 +62,20 @@ SCHEMA = "bench_sim/v1"
 
 #: required keys of every row — the tier-1 smoke test checks these
 ROW_KEYS = ("bench", "engine", "policy", "k", "jobs", "reps", "wall_s",
-            "jobs_per_sec", "compile_s", "speedup_vs_python")
+            "jobs_per_sec", "compile_s", "speedup_vs_python",
+            "device_count", "compile_warm_s")
+
+#: row-label -> registry engine name of the timed substrates
+ENGINE_LABELS = (("jax", "jax-batch"), ("pallas", "pallas"),
+                 ("jax-shard", "jax-shard"))
+
+#: every engine label a row may carry (the --engines CLI choices)
+ALL_ENGINES = ("python", "jax", "jax-batch", "pallas", "jax-shard")
 
 
 def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
-         python_jps=None, bench="fig1-critical"):
+         python_jps=None, bench="fig1-critical", device_count=1,
+         compile_warm_s=None):
     jps = jobs * reps / wall_s
     return {
         "bench": bench, "engine": engine, "policy": policy,
@@ -62,58 +85,100 @@ def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
         "compile_s": None if compile_s is None else round(compile_s, 3),
         "speedup_vs_python": None if python_jps is None
         else round(jps / python_jps, 2),
+        "device_count": device_count,
+        "compile_warm_s": None if compile_warm_s is None
+        else round(compile_warm_s, 3),
     }
 
 
+def _warm_compile_s(fn, wall: float) -> float | None:
+    """Retrace + compile-cache-load cost of ``fn``'s executable.
+
+    Only measured when the persistent compilation cache is enabled
+    (``--cache-dir``): the in-memory jit caches are dropped so the next
+    dispatch re-traces and reloads the executable from the cache dir —
+    the steady-state ``wall`` is subtracted out.  Returns None (skipped)
+    without a cache: clearing would only re-measure the cold compile.
+    """
+    if not jax.config.jax_compilation_cache_dir:
+        return None
+    jax.clear_caches()
+    t0 = time.time()
+    fn()
+    return max(0.0, time.time() - t0 - wall)
+
+
+def _time_engine(fn):
+    """(wall_s, compile_s, compile_warm_s) of a jitted engine call."""
+    t0 = time.time(); fn(); first = time.time() - t0
+    t0 = time.time(); fn(); wall = time.time() - t0
+    return wall, max(0.0, first - wall), _warm_compile_s(fn, wall)
+
+
 def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
-                seed: int = 0, theta: float = 0.7) -> list[dict]:
+                seed: int = 0, theta: float = 0.7,
+                engines_sel=ALL_ENGINES) -> list[dict]:
     """All engines at one k; python runs ``python_jobs`` arrivals, 1 rep."""
     wl = figure1_workload(k, theta=theta)
     rows = []
     python_jps = {}
 
-    trace_py = wl.sample_trace(python_jobs, seed=seed)
-    for pol in ("fcfs", "modbs", "bs"):
-        t0 = time.time()
-        simulate_trace(trace_py, make_policy(pol, wl=wl))
-        wall = time.time() - t0
-        name = make_policy(pol, wl=wl).name
-        python_jps[name] = python_jobs / wall
-        rows.append(_row("python", name, k, python_jobs, 1, wall))
+    if "python" in engines_sel:
+        trace_py = wl.sample_trace(python_jobs, seed=seed)
+        for pol in ("fcfs", "modbs", "bs"):
+            t0 = time.time()
+            simulate_trace(trace_py, make_policy(pol, wl=wl))
+            wall = time.time() - t0
+            name = make_policy(pol, wl=wl).name
+            python_jps[name] = python_jobs / wall
+            rows.append(_row("python", name, k, python_jobs, 1, wall))
 
-    trace = wl.sample_trace(jobs, seed=seed)
-    for name, fn in (("fcfs", lambda: fcfs_sim(trace)),
-                     ("modbs-fcfs", lambda: modified_bs_sim(trace, wl=wl)),
-                     ("bs-fcfs", lambda: bs_sim(trace, wl=wl))):
-        t0 = time.time(); fn(); first = time.time() - t0
-        t0 = time.time(); fn(); wall = time.time() - t0
-        rows.append(_row("jax", name, k, jobs, 1, wall,
-                         compile_s=max(0.0, first - wall),
-                         python_jps=python_jps[name]))
+    if "jax" in engines_sel:
+        trace = wl.sample_trace(jobs, seed=seed)
+        for name, fn in (("fcfs", lambda: fcfs_sim(trace)),
+                         ("modbs-fcfs",
+                          lambda: modified_bs_sim(trace, wl=wl)),
+                         ("bs-fcfs", lambda: bs_sim(trace, wl=wl))):
+            wall, compile_s, warm = _time_engine(fn)
+            rows.append(_row("jax", name, k, jobs, 1, wall,
+                             compile_s=compile_s,
+                             python_jps=python_jps.get(name),
+                             device_count=jax.local_device_count(),
+                             compile_warm_s=warm))
 
-    batch = wl.sample_traces(jobs, reps, seed=seed)
-    rows += _registry_rows(batch, wl, k, jobs, reps, python_jps)
+    if any(label in engines_sel for _, label in ENGINE_LABELS):
+        batch = wl.sample_traces(jobs, reps, seed=seed)
+        rows += _registry_rows(batch, wl, k, jobs, reps, python_jps,
+                               engines_sel=engines_sel)
     return rows
 
 
 def _registry_rows(batch, wl, k, jobs, reps, python_jps,
-                   bench="fig1-critical"):
-    """jax-batch + pallas rows for every registry policy on one batch."""
+                   bench="fig1-critical", engines_sel=ALL_ENGINES):
+    """Batched-substrate rows for every registry policy on one batch."""
     rows = []
-    for engine, label in (("jax", "jax-batch"), ("pallas", "pallas")):
+    for engine, label in ENGINE_LABELS:
+        if label not in engines_sel:
+            continue
+        # every jitted row records the process topology it was measured
+        # under — a forced multi-device pool changes single-device timings
+        # too (the intra-op pool is shared), and check_bench_regression
+        # must never compare cells across topologies
+        dc = jax.local_device_count()
         for name in engines.policies_for(engine):
             def fn(e=engine, n=name):
                 return engines.simulate(n, batch, engine=e, wl=wl)
-            t0 = time.time(); fn(); first = time.time() - t0
-            t0 = time.time(); fn(); wall = time.time() - t0
+            wall, compile_s, warm = _time_engine(fn)
             rows.append(_row(label, name, k, jobs, reps, wall,
-                             compile_s=max(0.0, first - wall),
-                             python_jps=python_jps.get(name), bench=bench))
+                             compile_s=compile_s,
+                             python_jps=python_jps.get(name), bench=bench,
+                             device_count=dc, compile_warm_s=warm))
     return rows
 
 
 def bench_traces(jobs: int, reps: int, python_jobs: int, seed: int = 0,
-                 k: int = 512, load: float = 0.85) -> list[dict]:
+                 k: int = 512, load: float = 0.85,
+                 engines_sel=ALL_ENGINES) -> list[dict]:
     """The empirical-trace scenario: SDSC-SP2 synthesized log,
     moving-block bootstrap (``BatchTrace.from_trace``) into ``reps``
     replications, every registry policy timed on the same batch
@@ -121,65 +186,87 @@ def bench_traces(jobs: int, reps: int, python_jobs: int, seed: int = 0,
     wl = sdsc_sp2_workload(k=k, load=load)
     rows = []
     python_jps = {}
-    trace_py = sdsc_sp2_trace(python_jobs, k=k, load=load, seed=seed)
-    py_batch = BatchTrace.from_trace(trace_py, 1, seed=seed, method="block")
-    for pol in engines.policies_for("jax"):
-        t0 = time.time()
-        engines.simulate(pol, py_batch, engine="python", wl=wl)
-        wall = time.time() - t0
-        python_jps[pol] = python_jobs / wall
-        rows.append(_row("python", pol, k, python_jobs, 1, wall,
-                         bench="traces"))
-    trace = sdsc_sp2_trace(jobs, k=k, load=load, seed=seed)
-    batch = BatchTrace.from_trace(trace, reps, seed=seed, method="block")
-    rows += _registry_rows(batch, wl, k, jobs, reps, python_jps,
-                           bench="traces")
+    if "python" in engines_sel:
+        trace_py = sdsc_sp2_trace(python_jobs, k=k, load=load, seed=seed)
+        py_batch = BatchTrace.from_trace(trace_py, 1, seed=seed,
+                                         method="block")
+        for pol in engines.policies_for("jax"):
+            t0 = time.time()
+            engines.simulate(pol, py_batch, engine="python", wl=wl)
+            wall = time.time() - t0
+            python_jps[pol] = python_jobs / wall
+            rows.append(_row("python", pol, k, python_jobs, 1, wall,
+                             bench="traces"))
+    if any(label in engines_sel for _, label in ENGINE_LABELS):
+        trace = sdsc_sp2_trace(jobs, k=k, load=load, seed=seed)
+        batch = BatchTrace.from_trace(trace, reps, seed=seed,
+                                      method="block")
+        rows += _registry_rows(batch, wl, k, jobs, reps, python_jps,
+                               bench="traces", engines_sel=engines_sel)
     return rows
 
 
 def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
-        traces_k=512):
+        traces_k=512, engines_sel=ALL_ENGINES):
     rows = []
     if scenario in ("fig1", "all"):
         for k in ks:
-            rows += bench_point(k, jobs, reps, python_jobs, seed=seed)
+            rows += bench_point(k, jobs, reps, python_jobs, seed=seed,
+                                engines_sel=engines_sel)
     if scenario in ("traces", "all"):
         rows += bench_traces(jobs, reps, python_jobs, seed=seed,
-                             k=traces_k)
+                             k=traces_k, engines_sel=engines_sel)
     return {"schema": SCHEMA,
             "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
                        "python_jobs": python_jobs, "seed": seed,
-                       "scenario": scenario, "traces_k": traces_k},
+                       "scenario": scenario, "traces_k": traces_k,
+                       "engines": list(engines_sel),
+                       "device_count": jax.local_device_count()},
             "rows": rows}
 
 
 def main(argv=None):
-    from .common import pin_scan_runtime
-    pin_scan_runtime()            # sequential scans: 1-thread XLA pool
     ap = argparse.ArgumentParser(
         description="Benchmark the simulation engines "
-                    "(python | jax | jax-batch | pallas).",
+                    "(python | jax | jax-batch | jax-shard | pallas).",
         epilog="Engines: 'python' is the exact event-driven oracle; 'jax' "
                "is the per-trace lax.scan; 'jax-batch' is the vmapped "
-               "replication batch (the production sweep path); 'pallas' "
-               "is the fused step-kernel family of repro.kernels.msj_scan "
-               "— off-TPU it executes in Pallas interpret mode (one "
-               "replication at a time, unfused XLA ops), so its CPU rows "
-               "track correctness and trajectory, not the fused speed. "
+               "replication batch (the production sweep path); "
+               "'jax-shard' shards the replications axis across the local "
+               "device mesh (pair with --devices N — any CPU box can "
+               "expose N host devices); 'pallas' is the fused "
+               "step-kernel family of repro.kernels.msj_scan — off-TPU it "
+               "executes in Pallas interpret mode (one replication at a "
+               "time, unfused XLA ops), so its CPU rows track correctness "
+               "and trajectory, not the fused speed. "
                "fig1_critical/fig2_regimes accept the same "
-               "--engine {python,jax,pallas} selection.")
+               "--engine {python,jax,jax-shard,pallas} selection.")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, < 60 s on CPU")
     ap.add_argument("--scenario", choices=("fig1", "traces", "all"),
                     default="all",
                     help="fig1 = synthetic critical-regime sweep; traces "
                          "= SDSC-SP2 bootstrap batch (the Fig. 3 path)")
+    ap.add_argument("--engines", nargs="+", choices=ALL_ENGINES,
+                    default=None,
+                    help="subset of engines to time (default: all; rows "
+                         "without python rows carry no speedup column)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host-platform device count for the jax-shard "
+                         "rows (default: honor an existing XLA_FLAGS "
+                         "entry, else 1); must run before JAX init")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent JAX compilation-cache dir; enables "
+                         "the compile_warm_s column")
     ap.add_argument("--ks", type=int, nargs="+", default=None)
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--reps", type=int, default=None)
     ap.add_argument("--python-jobs", type=int, default=None)
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args(argv)
+    from .common import configure_scan_runtime
+    configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
+                           warn=True)   # loud if something beat us to init
     if args.smoke:
         ks, jobs, reps, pj, tk = (64,), 20_000, 4, 2_000, 256
     else:
@@ -190,13 +277,15 @@ def main(argv=None):
     jobs = args.jobs or jobs
     reps = args.reps or reps
     pj = args.python_jobs or pj
-    report = run(ks, jobs, reps, pj, scenario=args.scenario, traces_k=tk)
+    report = run(ks, jobs, reps, pj, scenario=args.scenario, traces_k=tk,
+                 engines_sel=tuple(args.engines or ALL_ENGINES))
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")
     for r in report["rows"]:
         print(f"{r['bench']:>13} {r['engine']:>9} {r['policy']:<10} "
-              f"k={r['k']:<5} {r['jobs_per_sec']:>12,.0f} jobs/s"
+              f"k={r['k']:<5} dc={r['device_count']} "
+              f"{r['jobs_per_sec']:>12,.0f} jobs/s"
               + (f"  ({r['speedup_vs_python']}x python)"
                  if r["speedup_vs_python"] else ""), file=sys.stderr)
     print(f"wrote {args.out}", file=sys.stderr)

@@ -2,12 +2,26 @@
 
 Compares a freshly generated ``bench_sim`` report (typically ``--smoke``)
 against the committed ``BENCH_sim.json``: for every (bench, engine,
-policy) cell present in both — the synthetic ``fig1-critical`` scenario
-and the empirical-bootstrap ``traces`` scenario are guarded
-independently — the new ``jobs_per_sec`` must be at least ``1/factor`` of
-the *slowest* committed row for that cell (the committed file sweeps
-several k; the smoke config uses a smaller k and fewer reps, so the
-per-cell minimum is the conservative comparable baseline).
+policy, device_count) cell present in both — the synthetic
+``fig1-critical`` scenario and the empirical-bootstrap ``traces``
+scenario are guarded independently, and cells measured on different
+device topologies are never compared with each other — the new
+``jobs_per_sec`` must be at least ``1/factor`` of the *slowest* committed
+row for that cell (the committed file merges full-scale *and*
+smoke-scale runs per device topology — smoke-scale throughput is
+intrinsically lower (smaller k, fewer jobs and reps to amortize
+dispatch), so including it keeps the per-cell minimum a genuinely
+comparable conservative baseline for the CI smoke runs).
+
+``device_count`` handling: the committed file may carry ``jax-shard``
+rows measured with more forced host devices than this machine has cores
+(``--xla_force_host_platform_device_count`` over-subscribes freely).
+Timing N virtual devices on fewer physical cores says nothing about the
+code, so cells whose ``device_count`` exceeds the host's CPU count are
+*skipped*, not failed.  The ``python`` engine never touches XLA — its
+rows are pinned to ``device_count=1`` regardless of the process topology,
+which also keeps the machine-speed ratio (below) comparable across runs
+with different ``--devices``.
 
 The committed file was produced on a different machine than the CI
 runner, so raw jobs/sec would conflate hardware speed with code
@@ -18,8 +32,8 @@ changes): the committed floor is scaled by ``median(new/base)`` over the
 shared python rows, capped at 1 so a faster runner never loosens the bar.
 A runner 2x slower than the baseline machine then still passes untouched
 code, while a real >factor regression in any jitted engine — a lost
-fusion, an accidental vmap of the BS scatter path, a dropped
-single-thread pin — still trips the guard.
+fusion, an accidental vmap of the BS scatter path, a dropped runtime
+pin — still trips the guard.
 
 Exit status 0 = no regression, 1 = at least one pair regressed >factor.
 """
@@ -28,14 +42,20 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
+#: cell key: (bench, engine, policy, device_count)
+Key = tuple
 
-def _min_jps_by_key(report: dict) -> dict[tuple[str, str, str], float]:
-    out: dict[tuple[str, str, str], float] = {}
+
+def _min_jps_by_key(report: dict) -> dict[Key, float]:
+    out: dict[Key, float] = {}
     for row in report["rows"]:
+        dc = 1 if row["engine"] == "python" \
+            else int(row.get("device_count") or 1)
         key = (row.get("bench", "fig1-critical"), row["engine"],
-               row["policy"])
+               row["policy"], dc)
         jps = float(row["jobs_per_sec"])
         out[key] = min(out.get(key, float("inf")), jps)
     return out
@@ -50,20 +70,32 @@ def _machine_ratio(fresh: dict, base: dict) -> float:
     return min(1.0, ratios[len(ratios) // 2])
 
 
-def check(new: dict, baseline: dict, factor: float = 2.0) -> list[str]:
-    """Failure messages for every (bench, engine, policy) cell regressed
-    more than ``factor``."""
+def check(new: dict, baseline: dict, factor: float = 2.0,
+          host_cpus: int | None = None) -> list[str]:
+    """Failure messages for every (bench, engine, policy, device_count)
+    cell regressed more than ``factor``.
+
+    Cells whose device topology over-subscribes this host
+    (``device_count > host_cpus``, default ``os.cpu_count()``) are
+    skipped: forced virtual devices beyond the physical cores measure
+    scheduler contention, not the code.
+    """
+    if host_cpus is None:
+        host_cpus = os.cpu_count() or 1
     base = _min_jps_by_key(baseline)
     fresh = _min_jps_by_key(new)
     machine = _machine_ratio(fresh, base)
     failures = []
     for key, jps in sorted(fresh.items()):
         if key not in base:
-            continue  # new scenario/engine/policy with no baseline yet
+            continue  # new scenario/engine/policy/topology, no baseline yet
+        if key[3] > host_cpus:
+            continue  # committed topology over-subscribes this host
         floor = base[key] * machine / factor
         if jps < floor:
+            dc = f" [devices={key[3]}]" if key[3] != 1 else ""
             failures.append(
-                f"{key[0]}:{key[1]}/{key[2]}: {jps:,.0f} jobs/s < "
+                f"{key[0]}:{key[1]}/{key[2]}{dc}: {jps:,.0f} jobs/s < "
                 f"{floor:,.0f} (committed min {base[key]:,.0f} x machine "
                 f"ratio {machine:.2f} / factor {factor})")
     return failures
@@ -76,17 +108,22 @@ def main(argv=None) -> int:
                     help="committed reference (default: BENCH_sim.json)")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max tolerated slowdown (default: 2x)")
+    ap.add_argument("--host-cpus", type=int, default=None,
+                    help="CPU count used for the over-subscription skip "
+                         "(default: os.cpu_count())")
     args = ap.parse_args(argv)
     with open(args.new) as f:
         new = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    failures = check(new, baseline, factor=args.factor)
+    failures = check(new, baseline, factor=args.factor,
+                     host_cpus=args.host_cpus)
     for msg in failures:
         print(f"REGRESSION {msg}", file=sys.stderr)
     if not failures:
-        print(f"ok: no (engine, policy) pair regressed more than "
-              f"{args.factor}x vs {args.baseline}", file=sys.stderr)
+        print(f"ok: no (bench, engine, policy, device_count) cell "
+              f"regressed more than {args.factor}x vs {args.baseline}",
+              file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -20,23 +20,32 @@ PAPER_POLICIES = ("bs", "fcfs", "serverfilling", "sf-srpt", "ff-srpt", "msf")
 JAX_POLICIES = ("fcfs", "modbs-fcfs", "bs-fcfs")
 
 #: the engine choices every benchmark CLI exposes
-ENGINES = ("python", "jax", "pallas")
-ENGINE_HELP = ("jax = batched vmap scans (default); pallas = fused step "
-               "kernels, bit-identical to jax but interpret-mode (slower) "
-               "off-TPU; python = exact event engine, full paper policy set")
+ENGINES = ("python", "jax", "jax-shard", "pallas")
+ENGINE_HELP = ("jax = batched vmap scans (default); jax-shard = the same "
+               "scans with replications sharded across the local device "
+               "mesh (combine with --devices N on any CPU box), "
+               "bit-identical to jax; pallas = fused step kernels, "
+               "bit-identical but interpret-mode (slower) off-TPU; "
+               "python = exact event engine, full paper policy set")
 
 
-def pin_scan_runtime() -> bool:
-    """One-thread XLA pool for the sequential scan cores.
+def configure_scan_runtime(devices: int | None = None,
+                           cache_dir: str | None = None, *,
+                           warn: bool = False) -> bool:
+    """Configure the XLA runtime for the scan cores.
 
-    No-op if JAX is already initialized; see
-    :func:`repro.core.sim_batch.pin_single_thread_runtime`.  Every
-    jax-engine benchmark entry point goes through this (directly or via
-    :func:`run_policies_jax`) so none silently loses the 3-4x scan
-    throughput.
+    Thin wrapper over :func:`repro.core.shard.configure_runtime`:
+    ``devices`` host devices, a 1-thread intra-op pool per device (the
+    per-op-dispatch win of the old single-thread pin, times N), and an
+    optional persistent compilation cache.  Benchmark *mains* call this
+    first with ``warn=True`` so a caller that raced backend init hears
+    about the dead pool loudly; the opportunistic internal calls (every
+    jax-engine helper routes through here) keep ``warn=False`` and simply
+    inherit whatever runtime exists.
     """
-    from repro.core.sim_batch import pin_single_thread_runtime
-    return pin_single_thread_runtime()
+    from repro.core.shard import configure_runtime
+    return configure_runtime(devices=devices, intra_op_threads=1,
+                             cache_dir=cache_dir, warn=warn)
 
 
 def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
@@ -48,11 +57,12 @@ def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
     One ``sweep_many_server`` call over ``wl_factory(point)``; returns CSV
     rows with mean/CI columns.  ``per_point_cols`` is an optional sequence
     (parallel to ``points``) of extra per-point column dicts.  ``engine``
-    is ``"jax"`` (vmapped scans) or ``"pallas"`` (fused step kernels —
+    is ``"jax"`` (vmapped scans), ``"jax-shard"`` (replications sharded
+    over the local device mesh) or ``"pallas"`` (fused step kernels —
     interpret mode off-TPU: bit-identical results, slower on CPU).
     """
     from repro.core.sim_batch import sweep_many_server
-    pin_scan_runtime()
+    configure_scan_runtime()
     sweep = sweep_many_server(wl_factory, points, num_jobs=num_jobs,
                               reps=reps, seed=seed, policies=policies,
                               engine=engine)
@@ -112,7 +122,7 @@ def run_policies_batch(batch: BatchTrace, wl: Workload | None,
     """
     from repro.core import engines
     if engine != "python":
-        pin_scan_runtime()
+        configure_scan_runtime()
     rows = []
     for name in policies:
         pol = engines.canonical(name)

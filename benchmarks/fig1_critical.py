@@ -4,17 +4,24 @@ k sweeps with f_k = floor((k/32)^(2/3)), (1-ρ)√(k/f_k) -> θ = 0.7;
 small jobs (f_k, 1) w.p. 0.95; large (2f_k,40)/(4f_k,20)/(8f_k,10) w.p.
 0.05/3 each; exponential services, Poisson arrivals (paper Fig. 1 setup).
 
-Three engines:
+Four engines:
 
 * ``--engine jax`` (default) — the batched vmap substrate
   (``repro.core.sim_batch``): FCFS + ModifiedBS-FCFS + BS-FCFS proper
   (Definition 1, rule-3 pull-backs, on the event-indexed scan), ``--reps``
   independent Philox replications per k, mean/CI columns.
+* ``--engine jax-shard`` — same sweeps with the replications axis sharded
+  across the local device mesh (``repro.core.shard``); pair with
+  ``--devices N`` to expose N host devices on any CPU box.  Bit-identical
+  to ``jax``.
 * ``--engine pallas`` — same sweeps on the fused step kernels
   (``repro.kernels.msj_scan``); bit-identical to ``jax``, interpret mode
   (slower) off-TPU.
 * ``--engine python`` — the exact event-driven engine over the full paper
   policy set (slow; use for the policies the scan substrate cannot cover).
+
+``--cache-dir`` points JAX's persistent compilation cache at a directory
+so repeated sweeps stop paying the per-(k, R, J) compile.
 """
 
 from __future__ import annotations
@@ -72,11 +79,18 @@ def main(argv=None):
                     help="subset of the engine's policy set")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 10^6 arrivals")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host-platform device count (jax-shard sweeps)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent JAX compilation-cache dir")
     args = ap.parse_args(argv)
+    from .common import configure_scan_runtime
+    configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
+                           warn=True)
     default = 30_000 if args.engine == "python" else 100_000
     jobs = args.jobs if args.jobs is not None \
         else (1_000_000 if args.full else default)
-    if args.engine in ("jax", "pallas"):
+    if args.engine != "python":
         rows = run_jax(ks=tuple(args.ks), num_jobs=jobs, reps=args.reps,
                        policies=tuple(args.policies or JAX_POLICIES),
                        engine=args.engine)

@@ -5,7 +5,11 @@ Same job classes and server needs as Figure 1 (k = 512, f_k = 6).
 ``--engine jax`` (default) runs both sweeps on the batched vmap substrate
 (FCFS + ModifiedBS-FCFS + BS-FCFS proper with Def.-1 pull-backs, ``--reps``
 replications, mean/CI columns); the heavy-traffic sweep holds k fixed, so
-every load point reuses one compiled (k, R, J) executable.
+every load point reuses one compiled (k, R, J) executable — and with
+``--cache-dir`` the executable survives the process, so a re-run pays no
+compile at all.
+``--engine jax-shard`` shards the replications axis across the local
+device mesh (pair with ``--devices N``); bit-identical to ``jax``.
 ``--engine pallas`` runs the same sweeps on the fused step kernels
 (bit-identical; interpret mode — slower — off-TPU).
 ``--engine python`` runs the event-driven engine over the full paper
@@ -85,11 +89,18 @@ def main(argv=None):
     ap.add_argument("--policies", nargs="+", default=None,
                     help="subset of the engine's policy set")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host-platform device count (jax-shard sweeps)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent JAX compilation-cache dir")
     args = ap.parse_args(argv)
+    from .common import configure_scan_runtime
+    configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
+                           warn=True)
     default = 20_000 if args.engine == "python" else 100_000
     jobs = args.jobs if args.jobs is not None \
         else (1_000_000 if args.full else default)
-    if args.engine in ("jax", "pallas"):
+    if args.engine != "python":
         pols = tuple(args.policies or JAX_POLICIES)
         rows = (run_heavy_jax(num_jobs=jobs, reps=args.reps, policies=pols,
                               engine=args.engine)

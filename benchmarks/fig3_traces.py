@@ -10,10 +10,12 @@ the trace into ``--reps`` replications (``BatchTrace.from_trace``, IID or
 moving-block via ``--bootstrap``) and dispatches each policy through the
 engine registry.  ``--engine jax`` (default) runs fcfs/modbs-fcfs/bs-fcfs
 on the vmapped scans with the remaining paper policies (SF-SRPT, FF-SRPT,
-MSF, ...) falling back to the exact Python engine; ``--engine python``
-runs everything on the event engine over the *same* bootstrap batch, so
-rows are bit-comparable across engines (the ``engine`` column records the
-core that actually ran each row).
+MSF, ...) falling back to the exact Python engine; ``--engine jax-shard``
+shards the replications of those policies across the local device mesh
+(pair with ``--devices N``); ``--engine python`` runs everything on the
+event engine over the *same* bootstrap batch, so rows are bit-comparable
+across engines (the ``engine`` column records the core that actually ran
+each row).  ``--cache-dir`` enables the persistent compilation cache.
 """
 
 from __future__ import annotations
@@ -93,7 +95,14 @@ def main(argv=None):
                     help="server count for the --swf path")
     ap.add_argument("--load", type=float, default=0.85,
                     help="partition-fit load for the --swf path")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host-platform device count (jax-shard rows)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent JAX compilation-cache dir")
     args = ap.parse_args(argv)
+    from .common import configure_scan_runtime
+    configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
+                           warn=True)
     jobs = 1_000_000 if args.full else args.jobs
     pols = tuple(args.policies or PAPER_POLICIES)
     if args.swf:

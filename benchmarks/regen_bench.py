@@ -1,0 +1,93 @@
+"""Regenerate the committed multi-topology ``BENCH_sim.json``.
+
+    PYTHONPATH=src python -m benchmarks.regen_bench [--out BENCH_sim.json]
+
+The committed baseline merges rows from several *processes*, because the
+XLA host-device count is frozen at backend init and so one process can
+only ever measure one topology:
+
+* ``devices=1``, every engine, full config **and** ``--smoke`` — the
+  cells the ``fast``/``pallas`` CI jobs compare against.  The smoke-scale
+  rows matter: smoke throughput is intrinsically lower (smaller k, fewer
+  jobs/reps to amortize dispatch), and ``check_bench_regression`` takes
+  the per-cell *minimum* as the floor, so without them a fast full-config
+  run would set floors a legitimate smoke run cannot clear.
+* ``devices=2`` and ``devices=4``, python + jax-shard, full and smoke —
+  the per-topology cells the CI ``shard`` job (4 forced host devices)
+  compares against.  Topologies that over-subscribe the measuring host's
+  cores are still committed: they are *floors*, and hosts with that many
+  real cores only beat them (hosts without skip them via the checker's
+  over-subscription rule).
+
+Regenerating with a bare ``python -m benchmarks.bench_sim`` would write a
+single-topology file and silently drop the dc>1 cells — the CI shard
+gate would then skip every sharded cell for lack of a baseline.  Always
+regenerate through this driver (or pass ``--topologies`` to trim it on a
+small box).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+
+
+def _run(out: str, args: list[str], cache_dir: str) -> dict:
+    cmd = [sys.executable, "-m", "benchmarks.bench_sim", "--out", out,
+           "--cache-dir", cache_dir, *args]
+    print("+", " ".join(cmd[2:]), file=sys.stderr, flush=True)
+    subprocess.run(cmd, check=True)
+    with open(out) as f:
+        return json.load(f)
+
+
+def regenerate(topologies=(1, 2, 4), out="BENCH_sim.json",
+               cache_dir=None) -> dict:
+    """Run bench_sim once per (topology, scale) and merge the rows."""
+    cache_dir = cache_dir or tempfile.mkdtemp(prefix="bench-jax-cache-")
+    parts = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for n in topologies:
+            # dc=1 measures every engine; dc>1 adds the sharded cells
+            # (plus python rows so the machine-speed ratio always has
+            # shared cells) without re-measuring single-device engines
+            # under a topology they would never ship rows for
+            sel = [] if n == 1 else ["--engines", "python", "jax-shard"]
+            for i, scale in enumerate((["--smoke"], [])):
+                parts.append(_run(f"{tmp}/bench_dc{n}_{i}.json",
+                                  ["--devices", str(n), *sel, *scale],
+                                  cache_dir))
+    report = parts[-1]           # full-config dc-max run's config block
+    report["rows"] = [r for p in parts for r in p["rows"]]
+    report["config"]["merged_runs"] = [
+        {"devices": p["config"]["device_count"],
+         "engines": p["config"]["engines"],
+         "smoke": p["config"]["ks"] == [64]} for p in parts]
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out} ({len(report['rows'])} rows, "
+          f"topologies {list(topologies)})", file=sys.stderr)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--topologies", type=int, nargs="+", default=[1, 2, 4],
+                    help="host-device counts to measure (default: 1 2 4)")
+    ap.add_argument("--out", default="BENCH_sim.json")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compile cache shared by all runs "
+                         "(default: a fresh temp dir, so compile_s is "
+                         "honestly cold and compile_warm_s warm)")
+    args = ap.parse_args(argv)
+    regenerate(tuple(args.topologies), out=args.out,
+               cache_dir=args.cache_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,15 +22,23 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--jobs", type=int, default=None)
-    ap.add_argument("--engine", choices=("jax", "pallas"), default="jax",
+    ap.add_argument("--engine", choices=("jax", "jax-shard", "pallas"),
+                    default="jax",
                     help="fast-engine selection for the batched-substrate "
                          "and fig3 sections (python-engine sections always "
                          "run the event engine)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host-platform device count (jax-shard sections)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent JAX compilation-cache dir")
     args = ap.parse_args(argv)
 
     from . import (fig1_critical, fig2_regimes, fig3_traces, kernels_bench,
                    roofline, theory_tables)
-    from .common import emit
+    from .common import configure_scan_runtime, emit
+
+    configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
+                           warn=True)
 
     t0 = time.time()
     jobs1 = args.jobs or (1_000_000 if args.full else 12_000)

@@ -2,14 +2,23 @@
 
     PYTHONPATH=src python examples/hpc_traces.py [--engine jax]
 
+Multi-device on CPU — no accelerator needed: ``jax-shard`` splits the
+bootstrap replications across XLA host-platform devices, and
+``--devices N`` exposes N of them on any CPU box (the flag must be set
+before JAX initializes, which this script does for you):
+
+    PYTHONPATH=src python examples/hpc_traces.py \\
+        --engine jax-shard --devices 4 --reps 8
+
 Synthesizes SDSC-SP2 and KIT-FH2 traces from the paper's published table
 parameters, writes them in Standard Workload Format, bootstrap-resamples
 them into replications (``BatchTrace.from_trace``, moving-block so the
 arrival burstiness survives), and runs every registered policy through the
 engine registry's single ``simulate()`` entry point — ``--engine`` picks
-the substrate (vmapped jax scans by default; ``python`` = the exact event
-engine, bit-identical; ``pallas`` = the fused kernels).  Reproduces the
-Figure-3 ordering: BS beats FCFS on these heavy-tailed mixes.
+the substrate (vmapped jax scans by default; ``jax-shard`` = the same
+scans sharded over the device mesh, bit-identical; ``python`` = the exact
+event engine, bit-identical; ``pallas`` = the fused kernels).  Reproduces
+the Figure-3 ordering: BS beats FCFS on these heavy-tailed mixes.
 """
 
 import argparse
@@ -19,17 +28,24 @@ import tempfile
 sys.path.insert(0, "src")
 
 from repro.core import engines                                  # noqa
+from repro.core.shard import configure_runtime                  # noqa
 from repro.core.workload import (BatchTrace, kit_fh2_workload,  # noqa
                                  sdsc_sp2_workload)
 from repro.data.swf import write_swf                            # noqa
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--engine", choices=("python", "jax", "pallas"),
+ap.add_argument("--engine", choices=("python", "jax", "jax-shard",
+                                     "pallas"),
                 default="jax")
 ap.add_argument("--jobs", type=int, default=10_000)
 ap.add_argument("--reps", type=int, default=4,
                 help="bootstrap replications")
+ap.add_argument("--devices", type=int, default=None,
+                help="host-platform device count for --engine jax-shard")
 args = ap.parse_args()
+
+# before any JAX computation: device topology + per-device 1-thread pools
+configure_runtime(devices=args.devices, warn=True)
 
 for name, factory in (("SDSC-SP2", sdsc_sp2_workload),
                       ("KIT-FH2", kit_fh2_workload)):

@@ -22,7 +22,9 @@ Registry contract
   (``"bs"`` → ``"bs-fcfs"``).  ``engine`` names a substrate: ``"python"``
   (the exact event-driven oracle, :mod:`repro.core.simulator`), ``"jax"``
   (vmapped ``lax.scan`` cores, :mod:`repro.core.sim_batch`), ``"pallas"``
-  (fused step kernels, :mod:`repro.kernels.msj_scan`).
+  (fused step kernels, :mod:`repro.kernels.msj_scan`), ``"jax-shard"``
+  (the same scan cores with the replications axis sharded over the local
+  device mesh, :mod:`repro.core.shard`).
 * **Core**: a callable ``core(batch, *, partition=None, wl=None, **kw) ->
   BatchSimResult``.  ``batch`` is a :class:`~repro.core.workload.BatchTrace`
   ([R, J] replications — synthetic Poisson via ``Workload.sample_traces``
@@ -57,6 +59,7 @@ _PROVIDERS = (
     "repro.core.simulator",        # engine="python"
     "repro.core.sim_batch",        # engine="jax"
     "repro.kernels.msj_scan.ops",  # engine="pallas"
+    "repro.core.shard",            # engine="jax-shard"
 )
 
 _REGISTRY: dict[tuple[str, str], Callable[..., "BatchSimResult"]] = {}

@@ -1,0 +1,378 @@
+"""Replication-sharded execution (``engine="jax-shard"``) and device topology.
+
+The vmapped scan cores of :mod:`repro.core.sim_batch` advance every
+replication on **one** device: fast per dispatched op, but a k-sweep with
+many replications leaves every other device idle.  This module owns the
+device side of the substrate:
+
+* :func:`ensure_host_devices` — force N XLA host-platform devices (the
+  ``--xla_force_host_platform_device_count`` flag) *before* backend init,
+  so multi-device execution needs no accelerator: any CPU box exposes N
+  devices today, and the identical mesh/``shard_map`` code path is what a
+  real TPU mesh will compile.
+* :func:`local_mesh` — a 1-D :class:`jax.sharding.Mesh` over the local
+  devices with a single ``"r"`` (replications) axis.
+* the ``engine="jax-shard"`` simulation cores: the same scan cores as
+  ``engine="jax"`` (:mod:`repro.core.sim_jax` — FCFS roll-and-insert,
+  ModBS slot-counter, the hand-vectorized BS-π event scan), wrapped in
+  ``shard_map`` so the replications axis is split across the mesh.  Every
+  per-lane step is lane-independent by construction (the BS-π scan
+  vectorizes its lane axis with per-lane gather/scatter indices and no
+  cross-lane reductions), so sharding the lane axis is legal and the
+  results are **bit-identical** to every other engine of the policy — the
+  registry contract (rtol=0) pins this in ``tests/test_sim_cross.py`` /
+  ``tests/test_engines.py`` the moment the cores register.
+* R-padding: replication counts need not divide the device count.  Batches
+  are padded up to the next multiple of the mesh size by repeating the
+  last replication (always a valid lane — no sentinel values to thread
+  through the scan cores) and the padded lanes are dropped before
+  :class:`~repro.core.sim_batch.BatchSimResult` assembly.
+* :func:`configure_runtime` — the device-aware successor of
+  ``pin_single_thread_runtime()``: forces the device count *and* sizes the
+  XLA:CPU intra-op pool to ``devices * intra_op_threads`` threads (PJRT
+  sizes the pool from the CPUs visible at backend init, so the pool is
+  restricted via process affinity around the init call).  The single-core
+  1-thread pin that bought 3-4x on the dispatch-bound BS scan is the
+  ``devices=1`` special case.  Unlike the old pin, a call that comes too
+  late (backend already initialized by someone else) **warns loudly once**
+  instead of silently keeping the default pool.
+* :func:`enable_compile_cache` — persistent JAX compilation cache
+  (``jax_compilation_cache_dir``), so repeated k-sweeps stop paying
+  ``compile_s`` per (k, R, J) cell; ``benchmarks/bench_sim.py`` tracks
+  warm-vs-cold compile separately.
+
+CPU caveat (measured, 2-core host): XLA:CPU backs all host-platform
+devices of a process with **one shared intra-op thread pool**, so the
+wide data-parallel scans (FCFS/ModBS: every op touches all lanes x k
+entries) gain from sharding, while the dispatch-bound BS-π event scan —
+whose single-thread pin exists precisely to avoid per-op cross-thread
+handoffs — can lose a little to pool contention until each device really
+owns a core.  On a TPU mesh each device is a physically separate core and
+the same ``shard_map`` program shards without that contention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:                              # public since jax 0.4.35-ish ...
+    from jax import shard_map
+except ImportError:               # ... experimental before (and removed
+    from jax.experimental.shard_map import shard_map  # there after 0.6)
+
+from . import engines
+from .sim_batch import (_backends_initialized, _bs_result, _call,
+                        _class_inputs, _fcfs_inputs, _fcfs_result,
+                        _modbs_result, _partition_args)
+from .sim_jax import _bs_args, _bs_core, _fcfs_core, _modbs_core
+from .workload import BatchTrace
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+# --------------------------------------------------------------------------
+# Device topology.
+# --------------------------------------------------------------------------
+
+
+def _flag_device_count(flags: str) -> int | None:
+    """The forced host-platform device count in an XLA_FLAGS string."""
+    for tok in reversed(flags.split()):
+        if tok.startswith(_FLAG + "="):
+            try:
+                return int(tok.split("=", 1)[1])
+            except ValueError:
+                return None
+    return None
+
+
+def ensure_host_devices(n: int) -> bool:
+    """Force at least ``n`` XLA host-platform (CPU) devices.
+
+    Must run before the first JAX computation: the flag only takes effect
+    at backend init.  Before init this sets (or raises) the
+    ``--xla_force_host_platform_device_count`` entry of ``XLA_FLAGS`` and
+    returns True.  After init it validates instead: no-op returning False
+    when ``n`` devices already exist, ``RuntimeError`` otherwise — a
+    too-late call must never silently hand back a smaller mesh.
+    """
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    state = _backends_initialized()
+    if state or state is None:
+        # initialized — or unknowable (every probe API gone): validate
+        # against the real topology rather than guess.  In the unknown
+        # case local_device_count() may itself initialize the backend,
+        # which is still the honest outcome: the flag could no longer be
+        # trusted to apply, and a too-small mesh must raise, not silently
+        # shrink.
+        have = jax.local_device_count()
+        if have < n:
+            raise RuntimeError(
+                f"JAX backend already initialized with {have} device(s), "
+                f"cannot expose {n}; set XLA_FLAGS={_FLAG}={n} (or call "
+                f"configure_runtime) before the first JAX computation")
+        return False
+    flags = os.environ.get("XLA_FLAGS", "")
+    cur = _flag_device_count(flags)
+    if cur is not None and cur >= n:
+        return True
+    toks = [t for t in flags.split() if not t.startswith(_FLAG + "=")]
+    toks.append(f"{_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(toks)
+    return True
+
+
+def local_mesh(devices: int | None = None) -> Mesh:
+    """A 1-D mesh over the local devices, replications axis ``"r"``.
+
+    ``devices`` takes the first N local devices (default: all of them);
+    asking for more than exist is a loud error, not a silent shrink.
+    """
+    avail = jax.devices()
+    n = len(avail) if devices is None else devices
+    if not 1 <= n <= len(avail):
+        raise ValueError(f"requested {devices} devices, "
+                         f"{len(avail)} available")
+    return Mesh(np.array(avail[:n]), ("r",))
+
+
+# --------------------------------------------------------------------------
+# Runtime configuration (successor of pin_single_thread_runtime).
+# --------------------------------------------------------------------------
+
+#: devices configured by a successful configure_runtime() call, else None
+_configured_devices: int | None = None
+_warned = False
+
+
+def _warn_once(msg: str) -> None:
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def enable_compile_cache(cache_dir: str | os.PathLike) -> str:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    Every executable compiled from here on is written to (and on later
+    runs loaded from) the directory, so a repeated k-sweep pays tracing
+    but not XLA compilation per (k, R, J) cell — ``bench_sim`` reports the
+    warm-vs-cold difference as ``compile_warm_s`` vs ``compile_s``.
+    Callable before or after backend init.
+    """
+    cache_dir = os.fspath(cache_dir)
+    os.makedirs(cache_dir, exist_ok=True)  # the cache never mkdirs itself
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    # cache every hit: the scan executables compile fast but recompile often
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    return cache_dir
+
+
+def configure_runtime(devices: int | None = None, intra_op_threads: int = 1,
+                      cache_dir: str | os.PathLike | None = None, *,
+                      warn: bool = True) -> bool:
+    """Device-aware XLA runtime setup — replaces ``pin_single_thread_runtime``.
+
+    Forces ``devices`` host-platform devices (default: whatever an
+    existing ``XLA_FLAGS`` entry requests, else 1) and initializes the
+    backend with the process affinity restricted to
+    ``devices * intra_op_threads`` CPUs, so PJRT sizes its intra-op pool
+    to exactly that many threads — ``intra_op_threads=1`` keeps the
+    per-op-dispatch win of the old single-thread pin (3-4x on the BS event
+    scan) per device.  ``cache_dir`` additionally enables the persistent
+    compilation cache (:func:`enable_compile_cache`; applied even when the
+    pool can no longer be pinned).
+
+    Returns True when the runtime is configured as requested.  When the
+    backend was **already initialized** by an earlier JAX call the pool
+    cannot be resized: the call warns loudly once (``RuntimeWarning``,
+    suppressed by ``warn=False`` for opportunistic library callers) and
+    returns False — unless a previous ``configure_runtime`` already set up
+    a runtime that covers the request, which is an idempotent success.
+    Where process affinity is unavailable (non-Linux), the device count
+    still takes effect but the pool keeps its default size: the call
+    returns False without warning, and later calls treat the topology as
+    configured.
+    """
+    global _configured_devices
+    if cache_dir is not None:
+        enable_compile_cache(cache_dir)
+    if devices is None:
+        devices = _flag_device_count(os.environ.get("XLA_FLAGS", "")) or 1
+    if devices < 1 or intra_op_threads < 1:
+        raise ValueError("devices and intra_op_threads must be >= 1")
+    state = _backends_initialized()
+    if state or state is None:
+        # subsumed iff a previous call really configured the runtime (the
+        # pool was pinned) AND the live topology covers the request — the
+        # recorded count can understate reality when an env XLA_FLAGS
+        # asked for more devices than that call did
+        if (_configured_devices is not None
+                and jax.local_device_count() >= devices):
+            return True
+        if warn:
+            _warn_once(
+                f"configure_runtime(devices={devices}) called after the JAX "
+                "backend was initialized: the intra-op thread pool and "
+                "device count are frozen at backend init, so this call "
+                "cannot take effect. Call configure_runtime (or set "
+                f"XLA_FLAGS={_FLAG}=N) before the first JAX computation.")
+        return False
+    ensure_host_devices(devices)
+    # the device topology is now committed (the flag applies at first JAX
+    # use even if pool pinning below is unavailable) — record it so later
+    # calls are recognized as subsumed instead of spuriously warning
+    _configured_devices = devices
+    try:
+        cpus = os.sched_getaffinity(0)
+        pool = min(devices * intra_op_threads, len(cpus))
+        os.sched_setaffinity(0, set(sorted(cpus)[:pool]))
+        try:
+            jax.devices()  # backend init sees exactly `pool` CPUs
+        finally:
+            os.sched_setaffinity(0, cpus)
+    except (AttributeError, OSError):  # non-Linux or restricted:
+        return False  # devices take effect, the pool stays default-sized
+    return True
+
+
+# --------------------------------------------------------------------------
+# Replication padding.
+# --------------------------------------------------------------------------
+
+
+def _pad_reps(n_dev: int, *arrays: np.ndarray):
+    """Pad the leading replications axis up to a multiple of ``n_dev``.
+
+    Padding repeats the last replication — always a valid sample path, so
+    the scan cores need no sentinel handling and a padded BS-π lane can
+    never overflow a ring buffer its source lane did not.  Returns the
+    (possibly shared-memory) padded arrays and the true replication count;
+    callers slice outputs back to ``[:R]`` before result assembly.
+    """
+    R = arrays[0].shape[0]
+    pad = (-R) % n_dev
+    if pad == 0:
+        return arrays, R
+    return tuple(np.concatenate(
+        [a, np.broadcast_to(a[-1:], (pad,) + a.shape[1:])], axis=0)
+        for a in arrays), R
+
+
+def _pad_batch(batch: BatchTrace, n_dev: int) -> tuple[BatchTrace, int]:
+    """``batch`` with its replications padded to a multiple of ``n_dev``.
+
+    Returns a :class:`BatchTrace` (not raw arrays) so the sharded cores
+    feed the *same* input-prep helpers (``_fcfs_inputs``/``_class_inputs``)
+    as every other engine — bit-identical dtype handling by construction.
+    """
+    (a, c, n, v), R = _pad_reps(n_dev, batch.arrival, batch.cls,
+                                batch.need, batch.service)
+    if a is batch.arrival:
+        return batch, R
+    return dataclasses.replace(batch, arrival=a, cls=c, need=n,
+                               service=v), R
+
+
+# --------------------------------------------------------------------------
+# Sharded scan entry points (replications axis split over the mesh).
+# --------------------------------------------------------------------------
+#
+# The mesh is a static jit argument (Mesh is hashable): one executable per
+# (shape, k/partition statics, mesh), exactly like the single-device cores
+# compile per (k, R, J).  Inputs shard along their leading axis (P("r"));
+# the eq.-2 slots vector is replicated (P(None)).
+
+
+@partial(jax.jit, static_argnums=(3, 4))
+def _fcfs_shard_call(arrival, need, service, k: int, mesh: Mesh):
+    body = lambda a, n, v: jax.vmap(
+        lambda a1, n1, v1: _fcfs_core(a1, n1, v1, k))(a, n, v)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P("r"), P("r"), P("r")),
+                     out_specs=P("r"))(arrival, need, service)
+
+
+@partial(jax.jit, static_argnums=(5, 6, 7))
+def _modbs_shard_call(arrival, cls, need, service, slots, s_max: int, h: int,
+                      mesh: Mesh):
+    body = lambda a, c, n, v, s: jax.vmap(
+        lambda a1, c1, n1, v1: _modbs_core(a1, c1, n1, v1, s, s_max, h))(
+        a, c, n, v)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P("r"),) * 4 + (P(),),
+                     out_specs=(P("r"), P("r")))(
+        arrival, cls, need, service, slots)
+
+
+@partial(jax.jit, static_argnums=(5, 6, 7, 8))
+def _bs_shard_call(arrival, cls, need, service, slots, s_max: int, h: int,
+                   q_cap: int, mesh: Mesh):
+    # _bs_core carries the lane axis natively (per-lane gather/scatter
+    # indices, no cross-lane ops) — each mesh shard runs it on its slice.
+    body = lambda a, c, n, v, s: _bs_core(a, c, n, v, s, s_max, h, q_cap)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P("r"),) * 4 + (P(),),
+                     out_specs=(P("r"), P("r"), P("r")))(
+        arrival, cls, need, service, slots)
+
+
+# --------------------------------------------------------------------------
+# engine="jax-shard" registry cores.
+# --------------------------------------------------------------------------
+#
+# Same input prep, same scan cores, same result assembly as engine="jax" —
+# the only difference is the mesh between them.  `devices` (extra keyword,
+# forwarded by engines.simulate) bounds the mesh; default all local.
+
+
+@engines.register("fcfs", "jax-shard")
+def _fcfs_jax_shard(batch, *, partition=None, wl=None, devices=None):
+    """FCFS with the replications axis sharded across the local mesh."""
+    mesh = local_mesh(devices)
+    padded, R = _pad_batch(batch, mesh.size)
+    with enable_x64():
+        starts = _call(_fcfs_shard_call, *_fcfs_inputs(padded), batch.k,
+                       mesh)
+    return _fcfs_result(batch, np.asarray(starts)[:R])
+
+
+@engines.register("modbs-fcfs", "jax-shard")
+def _modbs_jax_shard(batch, *, partition=None, wl=None, devices=None):
+    """ModifiedBS-FCFS (Definition 2), replication-sharded."""
+    slots, s_max, h = _partition_args(batch, partition, wl)
+    mesh = local_mesh(devices)
+    padded, R = _pad_batch(batch, mesh.size)
+    with enable_x64():
+        blocked, starts = _call(_modbs_shard_call, *_class_inputs(padded),
+                                jnp.asarray(slots), s_max, h, mesh)
+    return _modbs_result(batch, np.asarray(blocked)[:R],
+                         np.asarray(starts)[:R])
+
+
+@engines.register("bs-fcfs", "jax-shard")
+def _bs_jax_shard(batch, *, partition=None, wl=None, queue_cap=None,
+                  devices=None):
+    """BS-FCFS (Definition 1) event scan, replication-sharded."""
+    slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
+    mesh = local_mesh(devices)
+    padded, R = _pad_batch(batch, mesh.size)
+    with enable_x64():
+        tagged, rec_t, ovf = _call(_bs_shard_call, *_class_inputs(padded),
+                                   jnp.asarray(slots), s_max, h, q_cap,
+                                   mesh)
+    return _bs_result(batch, np.asarray(tagged)[:R], np.asarray(rec_t)[:R],
+                      np.asarray(ovf)[:R], q_cap)

@@ -38,7 +38,6 @@ Replication r of a batch is bit-identical to the single-trace path on
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 import warnings
 from functools import partial
@@ -104,31 +103,17 @@ def pin_single_thread_runtime() -> bool:
     microseconds of work, and XLA's thunk executor pays a cross-core
     handoff per op when its intra-op pool has more than one thread — on a
     2-core host that synchronization is 3-4x the entire runtime of the
-    BS-FCFS event scan (measured: 101k -> 339k jobs/s at k=256, R=8), and
-    the FCFS/ModBS scans get mildly faster too.  PJRT sizes the pool from
-    the CPUs visible when the backend initializes, so this must run before
-    the first JAX computation: it briefly restricts the process affinity
-    to one CPU, forces backend init, then restores the affinity.
+    BS-FCFS event scan (measured: 101k -> 339k jobs/s at k=256, R=8).
 
-    Returns True if the pool was pinned; False (no-op) where affinity is
-    unsupported or the backend is already initialized (e.g. after any
-    ``jax.devices()`` call) — callers may proceed either way, the result
-    is purely a perf hint.  Benchmark entry points call this; library
-    code never does.
+    Kept as the single-device special case of the device-aware successor,
+    :func:`repro.core.shard.configure_runtime` — this shim delegates to
+    ``configure_runtime(devices=1, intra_op_threads=1)`` with the
+    after-init warning suppressed (opportunistic callers may run after
+    the backend exists and just keep whatever pool is there).  New code
+    and the benchmark mains should call ``configure_runtime`` directly.
     """
-    already = _backends_initialized()
-    if already or already is None:  # unknown state: don't guess, don't pin
-        return False
-    try:
-        cpus = os.sched_getaffinity(0)
-        os.sched_setaffinity(0, {min(cpus)})
-        try:
-            jax.devices()  # forces backend init with the reduced affinity
-        finally:
-            os.sched_setaffinity(0, cpus)
-        return True
-    except (AttributeError, OSError):  # non-Linux or restricted
-        return False
+    from .shard import configure_runtime  # local: shard imports this module
+    return configure_runtime(devices=1, intra_op_threads=1, warn=False)
 
 
 # --------------------------------------------------------------------------
@@ -434,11 +419,15 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
     (k, reps, num_jobs) shape, so sweeps that hold k fixed (Fig. 2a's load
     sweep) compile exactly once.  ``engine`` selects the substrate via the
     registry of :mod:`repro.core.engines`: ``"jax"`` (vmapped lax.scan,
-    the default), ``"pallas"`` (fused step kernels, interpret mode off-TPU
-    — bit-identical, slower on CPU), or ``"python"`` (the exact event
-    engine — slow, but the same interface).  Any ``(policy, engine)``
-    registry pair sweeps; unknown policies raise ``KeyError``.
-    Returns mean/CI arrays [policies, points].
+    the default), ``"jax-shard"`` (the same cores with the replications
+    axis sharded over the local device mesh — see
+    :mod:`repro.core.shard`; use ``configure_runtime(devices=N)`` before
+    the first JAX call to expose N host devices), ``"pallas"`` (fused
+    step kernels, interpret mode off-TPU — bit-identical, slower on CPU),
+    or ``"python"`` (the exact event engine — slow, but the same
+    interface).  Any ``(policy, engine)`` registry pair sweeps; unknown
+    policies raise ``KeyError``.  Returns mean/CI arrays
+    [policies, points].
     """
     if engine not in engines.available_engines():
         raise ValueError(f"unknown engine {engine!r}; registered engines: "

@@ -1,0 +1,65 @@
+"""Subprocess body of the multi-device jax-shard cross-validation.
+
+Run as a *fresh process* (``tests/test_shard.py`` drives it) because the
+``--xla_force_host_platform_device_count`` flag only takes effect at
+backend init — the pytest process has usually initialized JAX long before
+the shard tests run.  The env assignment below must precede the first
+``jax`` import.
+
+Checks, on 4 forced host devices: ``engine="jax-shard"`` is bit-identical
+(rtol=0) to ``engine="jax"`` for fcfs / modbs-fcfs / bs-fcfs at
+k in {32, 256}, with R=5 (does not divide 4: the padding path) and R=2
+(fewer replications than devices), plus a 3-device sub-mesh via the
+``devices`` kwarg.  Exit 0 and a final ``OK`` line on success.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+RESULT_FIELDS = ("response", "wait", "start", "blocked", "p_helper",
+                 "p_routed")
+
+
+def _assert_same(out, ref, ctx):
+    import numpy as np
+    for f in RESULT_FIELDS:
+        a, b = getattr(out, f), getattr(ref, f)
+        assert (a is None) == (b is None), (*ctx, f)
+        if a is not None:
+            assert np.array_equal(a, b), (*ctx, f)
+
+
+def main():
+    import jax
+
+    from repro.core import engines
+    from repro.core.workload import figure1_workload
+
+    assert jax.local_device_count() == 4, jax.devices()
+    checked = 0
+    for k in (32, 256):
+        wl = figure1_workload(k, theta=0.7)
+        for R in (5, 2):            # 5: padding path; 2: R < device_count
+            batch = wl.sample_traces(800, R, seed=17)
+            for pol in ("fcfs", "modbs-fcfs", "bs-fcfs"):
+                ref = engines.simulate(pol, batch, engine="jax", wl=wl)
+                out = engines.simulate(pol, batch, engine="jax-shard",
+                                       wl=wl)
+                _assert_same(out, ref, (k, R, pol))
+                assert out.response.shape == (R, 800), (k, R, pol)
+                checked += 1
+    # sub-mesh selection: 3 of the 4 devices, R=5 pads to 6
+    wl = figure1_workload(32, theta=0.7)
+    batch = wl.sample_traces(400, 5, seed=3)
+    for pol in ("fcfs", "bs-fcfs"):
+        ref = engines.simulate(pol, batch, engine="jax", wl=wl)
+        out = engines.simulate(pol, batch, engine="jax-shard", wl=wl,
+                               devices=3)
+        _assert_same(out, ref, ("sub-mesh", pol))
+        checked += 1
+    print(f"OK checked={checked}")
+
+
+if __name__ == "__main__":
+    main()

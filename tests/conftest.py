@@ -2,7 +2,11 @@ import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device;
-# only launch/dryrun.py forces 512 host devices (before any jax import).
+# only launch/dryrun.py forces 512 host devices (before any jax import),
+# and the multi-device jax-shard cross-validation runs in a subprocess
+# (tests/_shard_check.py) for the same reason: the device count is frozen
+# at backend init.  The CI shard job opts the whole pytest process into 4
+# devices via env XLA_FLAGS instead.
 
 
 @pytest.fixture

@@ -32,13 +32,16 @@ def small_workload(k=32, load=0.8):
 def test_registry_covers_the_substrate_policy_grid():
     keys = set(engines.registered())
     for pol in ("fcfs", "modbs-fcfs", "bs-fcfs"):
-        for eng in ("python", "jax", "pallas"):
+        for eng in ("python", "jax", "jax-shard", "pallas"):
             assert (pol, eng) in keys
     # the python engine also covers the paper comparison policies
     for pol in ("serverfilling", "sf-srpt", "ff-srpt", "msf"):
         assert (pol, "python") in keys
-    assert engines.available_engines() == ("jax", "pallas", "python")
+    assert engines.available_engines() == ("jax", "jax-shard", "pallas",
+                                           "python")
     assert engines.policies_for("jax") == ("bs-fcfs", "fcfs", "modbs-fcfs")
+    assert engines.policies_for("jax-shard") == ("bs-fcfs", "fcfs",
+                                                 "modbs-fcfs")
 
 
 def test_registry_canonical_aliases():
@@ -82,7 +85,7 @@ def test_explicit_partition_honored_on_every_engine():
     batch = wl.sample_traces(300, 1, seed=2)
     for pol in ("modbs-fcfs", "bs-fcfs"):
         ref = engines.simulate(pol, batch, engine="jax", partition=part)
-        for eng in ("python", "pallas"):
+        for eng in ("python", "pallas", "jax-shard"):
             out = engines.simulate(pol, batch, engine=eng, partition=part)
             assert np.array_equal(out.response, ref.response), (pol, eng)
             assert np.array_equal(out.p_helper, ref.p_helper), (pol, eng)
@@ -192,7 +195,7 @@ def test_every_registered_pair_matches_python_on_bootstrap_rep():
             if a is not None:
                 assert np.array_equal(a, b), (policy, engine, f)
         checked += 1
-    assert checked >= 6   # fcfs/modbs-fcfs/bs-fcfs x jax/pallas
+    assert checked >= 9   # fcfs/modbs-fcfs/bs-fcfs x jax/jax-shard/pallas
 
 
 # -- fig3 rows across engines (the acceptance pin) ----------------------------

@@ -158,6 +158,50 @@ def _fake_report(jps_by_key):
     return {"schema": "bench_sim/v1", "config": {}, "rows": rows}
 
 
+def test_check_bench_regression_device_count_cells():
+    mod = pytest.importorskip(
+        "benchmarks.check_bench_regression",
+        reason="benchmarks package needs repo root on sys.path")
+
+    def report(rows):
+        return {"schema": "bench_sim/v1", "config": {}, "rows": rows}
+
+    def row(engine, policy, jps, dc=None):
+        r = {"bench": "fig1-critical", "engine": engine, "policy": policy,
+             "jobs_per_sec": jps}
+        if dc is not None:
+            r["device_count"] = dc
+        return r
+
+    base = report([row("jax-shard", "fcfs", 4000.0, dc=4),
+                   row("jax-shard", "fcfs", 1000.0, dc=1),
+                   row("python", "fcfs", 100.0)])
+    # same topology compares: a collapse of the dc=4 cell trips on a
+    # >=4-cpu host ...
+    slow4 = report([row("jax-shard", "fcfs", 900.0, dc=4),
+                    row("python", "fcfs", 100.0)])
+    failures = mod.check(slow4, base, factor=2.0, host_cpus=8)
+    assert len(failures) == 1 and "[devices=4]" in failures[0]
+    # ... but is skipped — not failed — when the committed topology
+    # over-subscribes this host's cores
+    assert mod.check(slow4, base, factor=2.0, host_cpus=2) == []
+    # different topologies never compare: a slow dc=2 cell has no dc=2
+    # baseline, and the dc=1 baseline must not be used against it
+    slow2 = report([row("jax-shard", "fcfs", 10.0, dc=2),
+                    row("python", "fcfs", 100.0)])
+    assert mod.check(slow2, base, factor=2.0, host_cpus=8) == []
+    # the dc=1 cell is still guarded independently
+    slow1 = report([row("jax-shard", "fcfs", 400.0, dc=1),
+                    row("python", "fcfs", 100.0)])
+    failures = mod.check(slow1, base, factor=2.0, host_cpus=8)
+    assert len(failures) == 1 and "[devices=" not in failures[0]
+    # python rows are topology-pinned to dc=1: a python row measured in a
+    # forced-4-device process still feeds the machine-speed ratio
+    slow_host = report([row("jax-shard", "fcfs", 1800.0, dc=4),
+                        row("python", "fcfs", 50.0, dc=4)])
+    assert mod.check(slow_host, base, factor=2.0, host_cpus=8) == []
+
+
 def test_check_bench_regression_passes_and_fails_correctly():
     mod = pytest.importorskip(
         "benchmarks.check_bench_regression",
@@ -219,6 +263,9 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(repo_root, "src"), env.get("PYTHONPATH", "")])
+    # the smoke budget assumes the default topology: an inherited forced
+    # device count (e.g. from the CI shard job) must not leak in
+    env.pop("XLA_FLAGS", None)
     t0 = time.time()
     subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_sim", "--smoke",
@@ -229,13 +276,14 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     on_disk = json.loads(out.read_text())
     assert on_disk["schema"] == bench_sim.SCHEMA
     rows = on_disk["rows"]
-    # fig1: 4 engines x 3 policies per k; traces: 3 engines x 3 policies
-    assert len(rows) == 12 * len(on_disk["config"]["ks"]) + 9
+    # fig1: 5 engines x 3 policies per k; traces: 4 engines x 3 policies
+    assert len(rows) == 15 * len(on_disk["config"]["ks"]) + 12
     assert {r["bench"] for r in rows} == {"fig1-critical", "traces"}
     for r in rows:
         assert set(bench_sim.ROW_KEYS) <= set(r)
-        assert r["engine"] in ("python", "jax", "jax-batch", "pallas")
+        assert r["engine"] in bench_sim.ALL_ENGINES
         assert r["jobs_per_sec"] > 0 and r["wall_s"] > 0
+        assert r["device_count"] >= 1
         if r["engine"] == "python":
             assert r["speedup_vs_python"] is None
         else:
