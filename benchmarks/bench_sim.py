@@ -1,10 +1,15 @@
 """Simulation-substrate benchmark — tracks the hot-path perf trajectory.
 
-Two scenarios (``--scenario {fig1,traces,all}``): the Fig. 1
-critical-regime synthetic workload (``bench="fig1-critical"``) and the
+Three scenarios (``--scenario {fig1,traces,failures,all}``): the Fig. 1
+critical-regime synthetic workload (``bench="fig1-critical"``), the
 Fig. 3 empirical-trace path (``bench="traces"``: an SDSC-SP2 synthesized
 log, moving-block-bootstrapped into replications via
-``BatchTrace.from_trace`` and dispatched through the engine registry).
+``BatchTrace.from_trace`` and dispatched through the engine registry),
+and the degraded-capacity path (``bench="failures"``: the Fig. 1
+workload with drain-mode MTBF/MTTR outages merged into the event stream
+— the failure branch of every scan step is on the hot path, so a
+regression there is invisible to the clean scenarios; pallas has no
+capacity mask and ships no rows here).
 Each times five engines (``--engines`` selects a subset):
 
 * ``python``    — the exact event-driven engine (the correctness oracle)
@@ -154,12 +159,15 @@ def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
 
 
 def _registry_rows(batch, wl, k, jobs, reps, python_jps,
-                   bench="fig1-critical", engines_sel=ALL_ENGINES):
+                   bench="fig1-critical", engines_sel=ALL_ENGINES,
+                   failures=None):
     """Batched-substrate rows for every registry policy on one batch."""
     rows = []
     for engine, label in ENGINE_LABELS:
         if label not in engines_sel:
             continue
+        if failures is not None and engine == "pallas":
+            continue   # the fused kernels carry no capacity mask
         # every jitted row records the process topology it was measured
         # under — a forced multi-device pool changes single-device timings
         # too (the intra-op pool is shared), and check_bench_regression
@@ -167,7 +175,9 @@ def _registry_rows(batch, wl, k, jobs, reps, python_jps,
         dc = jax.local_device_count()
         for name in engines.policies_for(engine):
             def fn(e=engine, n=name):
-                return engines.simulate(n, batch, engine=e, wl=wl)
+                return engines.simulate(
+                    n, batch, engine=e, wl=wl,
+                    **({} if failures is None else {"failures": failures}))
             wall, compile_s, warm = _time_engine(fn)
             rows.append(_row(label, name, k, jobs, reps, wall,
                              compile_s=compile_s,
@@ -206,6 +216,50 @@ def bench_traces(jobs: int, reps: int, python_jobs: int, seed: int = 0,
     return rows
 
 
+def bench_failures(jobs: int, reps: int, python_jobs: int, seed: int = 0,
+                   k: int = 256, theta: float = 0.7,
+                   engines_sel=ALL_ENGINES) -> list[dict]:
+    """The degraded-capacity scenario: the Fig. 1 workload with
+    drain-mode MTBF/MTTR outages merged into the event stream
+    (``bench="failures"`` rows).  Each server sees ~4 outages over the
+    horizon, so the failure-event count scales with k exactly like the
+    event-stream length does; repairs are short (mttr = horizon/400,
+    ~1% average capacity loss) because the critical-regime workload runs
+    its class blocks above unit load by design — the helper absorbs the
+    overflow with only a ~(1-ρ)k margin, and heavier outages push the
+    helper queue past the BS ring-buffer cap at full-scale J.  Pallas is
+    skipped — the fused kernels carry no capacity mask (see ROADMAP)."""
+    from repro.core.failures import FailureProcess
+
+    wl = figure1_workload(k, theta=theta)
+    rows = []
+    python_jps = {}
+
+    def proc_for(batch):
+        horizon = float(batch.arrival.max())
+        return FailureProcess(mtbf=horizon / 4, mttr=horizon / 400,
+                              mode="drain").sample(
+                                  k, horizon, batch.reps, seed=seed)
+
+    if "python" in engines_sel:
+        py_batch = wl.sample_traces(python_jobs, 1, seed=seed)
+        fb_py = proc_for(py_batch)
+        for pol in engines.policies_for("jax"):
+            t0 = time.time()
+            engines.simulate(pol, py_batch, engine="python", wl=wl,
+                             failures=fb_py)
+            wall = time.time() - t0
+            python_jps[pol] = python_jobs / wall
+            rows.append(_row("python", pol, k, python_jobs, 1, wall,
+                             bench="failures"))
+    if any(label in engines_sel for _, label in ENGINE_LABELS):
+        batch = wl.sample_traces(jobs, reps, seed=seed)
+        rows += _registry_rows(batch, wl, k, jobs, reps, python_jps,
+                               bench="failures", engines_sel=engines_sel,
+                               failures=proc_for(batch))
+    return rows
+
+
 def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
         traces_k=512, engines_sel=ALL_ENGINES):
     rows = []
@@ -216,6 +270,9 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
     if scenario in ("traces", "all"):
         rows += bench_traces(jobs, reps, python_jobs, seed=seed,
                              k=traces_k, engines_sel=engines_sel)
+    if scenario in ("failures", "all"):
+        rows += bench_failures(jobs, reps, python_jobs, seed=seed,
+                               k=min(ks), engines_sel=engines_sel)
     return {"schema": SCHEMA,
             "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
                        "python_jobs": python_jobs, "seed": seed,
@@ -243,10 +300,13 @@ def main(argv=None):
                "--engine {python,jax,jax-shard,pallas} selection.")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, < 60 s on CPU")
-    ap.add_argument("--scenario", choices=("fig1", "traces", "all"),
+    ap.add_argument("--scenario",
+                    choices=("fig1", "traces", "failures", "all"),
                     default="all",
                     help="fig1 = synthetic critical-regime sweep; traces "
-                         "= SDSC-SP2 bootstrap batch (the Fig. 3 path)")
+                         "= SDSC-SP2 bootstrap batch (the Fig. 3 path); "
+                         "failures = fig1 workload with drain-mode "
+                         "MTBF/MTTR outages merged into the event stream")
     ap.add_argument("--engines", nargs="+", choices=ALL_ENGINES,
                     default=None,
                     help="subset of engines to time (default: all; rows "

@@ -51,7 +51,9 @@ def configure_scan_runtime(devices: int | None = None,
 def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
                      reps: int, seed: int = 0, policies=JAX_POLICIES,
                      engine: str = "jax", extra_cols=None,
-                     per_point_cols=None) -> list[dict]:
+                     per_point_cols=None, failures=None,
+                     ckpt_dir: str | None = None,
+                     resume: bool = False) -> list[dict]:
     """Batched-substrate counterpart of :func:`run_policies`.
 
     One ``sweep_many_server`` call over ``wl_factory(point)``; returns CSV
@@ -60,12 +62,16 @@ def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
     is ``"jax"`` (vmapped scans), ``"jax-shard"`` (replications sharded
     over the local device mesh) or ``"pallas"`` (fused step kernels —
     interpret mode off-TPU: bit-identical results, slower on CPU).
+    ``failures``/``ckpt_dir``/``resume`` pass straight through to
+    :func:`~repro.core.sim_batch.sweep_many_server` (fault injection and
+    crash-resumable per-cell checkpointing).
     """
     from repro.core.sim_batch import sweep_many_server
     configure_scan_runtime()
     sweep = sweep_many_server(wl_factory, points, num_jobs=num_jobs,
                               reps=reps, seed=seed, policies=policies,
-                              engine=engine)
+                              engine=engine, failures=failures,
+                              ckpt_dir=ckpt_dir, resume=resume)
     return sweep.rows(point_col, extra_cols=extra_cols,
                       per_point_cols=per_point_cols)
 

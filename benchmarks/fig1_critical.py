@@ -59,12 +59,14 @@ def run(ks=(256, 512, 1024, 2048), num_jobs=30_000, seed=0,
 
 
 def run_jax(ks=(256, 512, 1024, 2048), num_jobs=100_000, reps=8, seed=0,
-            theta=0.7, policies=JAX_POLICIES, engine="jax"):
+            theta=0.7, policies=JAX_POLICIES, engine="jax",
+            ckpt_dir=None, resume=False):
     """Batched-substrate sweep (FCFS + ModifiedBS-FCFS + BS-FCFS, CIs)."""
     return run_policies_jax(
         lambda k: figure1_workload(k, theta=theta), ks, "k",
         num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
-        engine=engine, per_point_cols=[_theory_cols(k, theta) for k in ks])
+        engine=engine, per_point_cols=[_theory_cols(k, theta) for k in ks],
+        ckpt_dir=ckpt_dir, resume=resume)
 
 
 def main(argv=None):
@@ -83,7 +85,14 @@ def main(argv=None):
                     help="host-platform device count (jax-shard sweeps)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent JAX compilation-cache dir")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write each (k, policy) cell atomically here "
+                         "(crash-resumable; batched engines only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already checkpointed in --ckpt-dir")
     args = ap.parse_args(argv)
+    if args.engine == "python" and (args.ckpt_dir or args.resume):
+        ap.error("--ckpt-dir/--resume need a batched engine (jax/...)")
     from .common import configure_scan_runtime
     configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
                            warn=True)
@@ -93,7 +102,8 @@ def main(argv=None):
     if args.engine != "python":
         rows = run_jax(ks=tuple(args.ks), num_jobs=jobs, reps=args.reps,
                        policies=tuple(args.policies or JAX_POLICIES),
-                       engine=args.engine)
+                       engine=args.engine, ckpt_dir=args.ckpt_dir,
+                       resume=args.resume)
     else:
         rows = run(ks=tuple(args.ks), num_jobs=jobs,
                    policies=tuple(args.policies or PAPER_POLICIES))

@@ -62,22 +62,25 @@ def run_subcritical(load=0.85, ks=(256, 512, 1024, 2048), num_jobs=20_000,
 
 def run_heavy_jax(k=512, loads=(0.5, 0.7, 0.8, 0.9, 0.95),
                   num_jobs=100_000, reps=8, seed=0, policies=JAX_POLICIES,
-                  engine="jax"):
+                  engine="jax", ckpt_dir=None, resume=False):
     return run_policies_jax(
         lambda load: figure2_workload(k, load), loads, "load",
         num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
-        engine=engine, extra_cols={"regime": "heavy", "k": k})
+        engine=engine, extra_cols={"regime": "heavy", "k": k},
+        ckpt_dir=ckpt_dir, resume=resume)
 
 
 def run_subcritical_jax(load=0.85, ks=(256, 512, 1024, 2048),
                         num_jobs=100_000, reps=8, seed=0,
-                        policies=JAX_POLICIES, engine="jax"):
+                        policies=JAX_POLICIES, engine="jax",
+                        ckpt_dir=None, resume=False):
     factory = _subcritical_factory(load)
     return run_policies_jax(
         factory, ks, "k", num_jobs=num_jobs, reps=reps, seed=seed,
         policies=policies, engine=engine,
         extra_cols={"regime": "subcritical"},
-        per_point_cols=[{"load": round(factory(k).load, 4)} for k in ks])
+        per_point_cols=[{"load": round(factory(k).load, 4)} for k in ks],
+        ckpt_dir=ckpt_dir, resume=resume)
 
 
 def main(argv=None):
@@ -93,7 +96,15 @@ def main(argv=None):
                     help="host-platform device count (jax-shard sweeps)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent JAX compilation-cache dir")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write each sweep cell atomically under "
+                         "<dir>/{heavy,subcritical} (crash-resumable; "
+                         "batched engines only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already checkpointed in --ckpt-dir")
     args = ap.parse_args(argv)
+    if args.engine == "python" and (args.ckpt_dir or args.resume):
+        ap.error("--ckpt-dir/--resume need a batched engine (jax/...)")
     from .common import configure_scan_runtime
     configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
                            warn=True)
@@ -101,11 +112,18 @@ def main(argv=None):
     jobs = args.jobs if args.jobs is not None \
         else (1_000_000 if args.full else default)
     if args.engine != "python":
+        import os
+        # one checkpoint namespace per sweep: cell ids are sweep-local
+        sub = {r: os.path.join(args.ckpt_dir, r) if args.ckpt_dir else None
+               for r in ("heavy", "subcritical")}
         pols = tuple(args.policies or JAX_POLICIES)
         rows = (run_heavy_jax(num_jobs=jobs, reps=args.reps, policies=pols,
-                              engine=args.engine)
+                              engine=args.engine, ckpt_dir=sub["heavy"],
+                              resume=args.resume)
                 + run_subcritical_jax(num_jobs=jobs, reps=args.reps,
-                                      policies=pols, engine=args.engine))
+                                      policies=pols, engine=args.engine,
+                                      ckpt_dir=sub["subcritical"],
+                                      resume=args.resume))
     else:
         pols = tuple(args.policies or PAPER_POLICIES)
         rows = (run_heavy(num_jobs=jobs, policies=pols)

@@ -39,19 +39,55 @@ _DATASETS = (("sdsc_sp2", sdsc_sp2_trace, sdsc_sp2_workload),
 
 def run(num_jobs=15_000, seed=0, ks=(512, 1024), loads=(0.5, 0.7, 0.85),
         policies=PAPER_POLICIES, engine="jax", reps=4,
-        bootstrap="iid") -> list[dict]:
-    """Table-2/3 synthesized traces, bootstrapped, through the registry."""
+        bootstrap="iid", ckpt_dir=None, resume=False) -> list[dict]:
+    """Table-2/3 synthesized traces, bootstrapped, through the registry.
+
+    With ``ckpt_dir`` every (dataset, k, load) cell's finished CSV rows
+    are published atomically (:mod:`repro.checkpoint`, rows ride in the
+    JSON manifest) and ``resume=True`` reloads completed cells instead of
+    re-simulating — a killed run resumes with byte-identical output (JSON
+    round-trips the float columns exactly).
+    """
+    done: set[int] = set()
+    if resume:
+        from repro.checkpoint import completed_steps
+        if ckpt_dir is None:
+            raise ValueError("resume=True needs a ckpt_dir")
+        done = set(completed_steps(ckpt_dir))
     rows = []
+    cell = 0
     for name, trace_fn, wl_fn in _DATASETS:
         for k in ks:
             for load in loads:
+                key = f"{name}/k={k}/load={load}"
+                if cell in done:
+                    from repro.checkpoint import restore_checkpoint
+                    import numpy as np
+                    _, _, extra = restore_checkpoint(
+                        ckpt_dir, {"ok": np.zeros(1)}, step=cell)
+                    if extra.get("cell_key") != key:
+                        raise ValueError(
+                            f"checkpoint cell {cell} holds "
+                            f"{extra.get('cell_key')!r}, sweep expects "
+                            f"{key!r} — stale ckpt_dir?")
+                    rows += extra["rows"]
+                    cell += 1
+                    continue
                 trace = trace_fn(num_jobs, k=k, load=load, seed=seed)
                 batch = BatchTrace.from_trace(trace, reps, seed=seed,
                                               method=bootstrap)
                 wl = wl_fn(k=k, load=load)
-                rows += run_policies_batch(
+                cell_rows = run_policies_batch(
                     batch, wl, policies, engine=engine,
                     extra_cols={"dataset": name, "k": k, "load": load})
+                if ckpt_dir is not None:
+                    from repro.checkpoint import save_checkpoint
+                    import numpy as np
+                    save_checkpoint(ckpt_dir, cell, {"ok": np.ones(1)},
+                                    extra={"cell_key": key,
+                                           "rows": cell_rows})
+                rows += cell_rows
+                cell += 1
     return rows
 
 
@@ -99,7 +135,14 @@ def main(argv=None):
                     help="host-platform device count (jax-shard rows)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent JAX compilation-cache dir")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write each (dataset, k, load) cell atomically "
+                         "here (crash-resumable)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already checkpointed in --ckpt-dir")
     args = ap.parse_args(argv)
+    if args.swf and (args.ckpt_dir or args.resume):
+        ap.error("--ckpt-dir/--resume apply to the synthesized-table sweep")
     from .common import configure_scan_runtime
     configure_scan_runtime(devices=args.devices, cache_dir=args.cache_dir,
                            warn=True)
@@ -113,7 +156,8 @@ def main(argv=None):
         return
     emit(run(num_jobs=jobs, seed=args.seed, ks=tuple(args.ks),
              loads=tuple(args.loads), policies=pols, engine=args.engine,
-             reps=args.reps, bootstrap=args.bootstrap or "iid"), COLS)
+             reps=args.reps, bootstrap=args.bootstrap or "iid",
+             ckpt_dir=args.ckpt_dir, resume=args.resume), COLS)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
-from .ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
+from .ckpt import (CheckpointManager, completed_steps, latest_step,
+                   restore_checkpoint, save_checkpoint)
 
-__all__ = ["CheckpointManager", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "completed_steps", "latest_step",
+           "restore_checkpoint", "save_checkpoint"]

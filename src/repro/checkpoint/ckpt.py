@@ -24,6 +24,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any
 
 import jax
@@ -86,13 +87,49 @@ def save_checkpoint(directory: str, step: int, tree, *,
     return final
 
 
+def _step_entries(directory: str, *,
+                  require_manifest: bool = True) -> list[tuple[int, str]]:
+    """Well-formed finalized ``step_<N>`` entries as (step, dirname) pairs.
+
+    Stray entries that merely share the prefix (``step_final``, editor
+    droppings) used to crash ``int()`` here — they are skipped with a
+    warning instead: a checkpoint directory is user-writable territory and
+    one malformed name must not brick every resume.
+    """
+    out = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            s = int(d[len("step_"):])
+        except ValueError:
+            warnings.warn(
+                f"ignoring malformed checkpoint entry {d!r} in "
+                f"{directory}", RuntimeWarning, stacklevel=3)
+            continue
+        if require_manifest and not os.path.exists(
+                os.path.join(directory, d, "manifest.json")):
+            continue
+        out.append((s, d))
+    return sorted(out)
+
+
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
+    steps = [s for s, _ in _step_entries(directory)]
     return max(steps) if steps else None
+
+
+def completed_steps(directory: str) -> list[int]:
+    """Sorted step ids with a finalized (manifest-bearing) checkpoint.
+
+    The unit of crash-resumable sweeps: each sweep cell saves under its own
+    step id, and ``--resume`` skips exactly this set.
+    """
+    if not os.path.isdir(directory):
+        return []
+    return [s for s, _ in _step_entries(directory)]
 
 
 def restore_checkpoint(directory: str, tree_like, *, step: int | None = None,
@@ -172,9 +209,7 @@ class CheckpointManager:
         return latest_step(self.directory)
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp"))
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+        entries = _step_entries(self.directory, require_manifest=False)
+        for _, d in entries[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, d),
                           ignore_errors=True)

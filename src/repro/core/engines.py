@@ -133,6 +133,54 @@ def get(policy: str, engine: str) -> Callable[..., "BatchSimResult"]:
                      f"registered engines: {list(engines_for(pol))}")
 
 
+def validate_batch(batch: "BatchTrace", *, partition=None,
+                   failures=None) -> None:
+    """Loud input validation shared by every engine.
+
+    The scan cores happily fold NaNs or time-travelling arrivals into
+    garbage outputs (and the Python oracle would diverge from them in
+    undefined ways), so malformed batches are rejected *before* dispatch
+    with a ``ValueError`` naming the first offending replication.
+    """
+    import numpy as np
+
+    def _first_bad(mask) -> int:
+        return int(np.argmax(mask.any(axis=1)))
+
+    if np.isnan(batch.arrival).any():
+        raise ValueError("batch.arrival contains NaN (first bad replication "
+                         f"{_first_bad(np.isnan(batch.arrival))})")
+    if np.isnan(batch.service).any():
+        raise ValueError("batch.service contains NaN (first bad replication "
+                         f"{_first_bad(np.isnan(batch.service))})")
+    gaps = np.diff(batch.arrival, axis=1)
+    if batch.arrival.size and (batch.arrival[:, 0] < 0).any():
+        raise ValueError("negative arrival times (first bad replication "
+                         f"{int(np.argmax(batch.arrival[:, 0] < 0))})")
+    if (gaps < 0).any():
+        raise ValueError("arrival times are not nondecreasing along the job "
+                         f"axis (first bad replication {_first_bad(gaps < 0)})")
+    if (batch.service < 0).any():
+        raise ValueError("negative service times (first bad replication "
+                         f"{_first_bad(batch.service < 0)})")
+    if (batch.need < 1).any():
+        raise ValueError("server needs must be >= 1 (first bad replication "
+                         f"{_first_bad(batch.need < 1)})")
+    if partition is not None:
+        C = partition.C
+        bad = (batch.cls < 0) | (batch.cls >= C)
+        if bad.any():
+            raise ValueError(
+                f"class ids outside the partition's [0, {C}) range (first "
+                f"bad replication {_first_bad(bad)})")
+    if failures is not None:
+        if getattr(failures, "k", batch.k) != batch.k:
+            raise ValueError(f"failures.k={failures.k} != batch.k={batch.k}")
+        if getattr(failures, "reps", batch.reps) != batch.reps:
+            raise ValueError(f"failures.reps={failures.reps} != "
+                             f"batch.reps={batch.reps}")
+
+
 def simulate(policy: str, batch: "BatchTrace", *, engine: str = "jax",
              partition=None, wl=None, **kw) -> "BatchSimResult":
     """Run ``batch`` through the registered ``(policy, engine)`` core.
@@ -140,6 +188,12 @@ def simulate(policy: str, batch: "BatchTrace", *, engine: str = "jax",
     The single dispatch point of the simulation stack: no caller branches
     on the engine name.  ``partition``/``wl`` are forwarded to the core
     (BSF policies need one of them for the eq.-2 partition); extra
-    keywords (e.g. ``queue_cap`` for ``bs-fcfs``) pass through.
+    keywords (e.g. ``queue_cap`` for ``bs-fcfs``) pass through.  Inputs
+    are validated (:func:`validate_batch`) before dispatch — malformed
+    batches fail loudly instead of folding NaNs through the scans.
     """
-    return get(policy, engine)(batch, partition=partition, wl=wl, **kw)
+    core = get(policy, engine)
+    fb = kw.get("failures")
+    validate_batch(batch, partition=partition,
+                   failures=fb if hasattr(fb, "k") else None)
+    return core(batch, partition=partition, wl=wl, **kw)

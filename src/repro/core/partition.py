@@ -137,16 +137,31 @@ class BalancedPartition:
         assert self.helpers >= 0
 
 
-def balanced_partition(wl: Workload) -> BalancedPartition:
-    """Eq. (2) applied to a workload."""
-    needs = wl.needs
-    demands = wl.demands
-    psi = compute_psi(wl.k, needs, demands)
-    total = demands.sum()
-    fracs = (wl.k / needs) * (demands / total)
+def balanced_partition_for(k: int, needs: Sequence[int],
+                           demands: Sequence[float]) -> BalancedPartition:
+    """Eq. (2) as a pure function of ``(k, needs, demands)``.
+
+    Demand is what the workload offers, capacity is what survives — the
+    elastic/kill-mode paths re-run this on every capacity change with the
+    *live* server count while the class demands stay fixed (the same split
+    ``sched/elastic.py`` performs on the gang-scheduler side).
+    """
+    needs_arr = np.asarray(needs, dtype=np.int64)
+    demands_arr = np.asarray(demands, dtype=np.float64)
+    if k < int(needs_arr.max()):
+        raise ValueError(
+            f"k={k} cannot host the largest job (need {int(needs_arr.max())})")
+    psi = compute_psi(k, needs_arr, demands_arr)
+    total = demands_arr.sum()
+    fracs = (k / needs_arr) * (demands_arr / total)
     counts = np.floor(psi * fracs + 1e-12).astype(np.int64)
-    a = tuple(int(c * n) for c, n in zip(counts, needs))
-    p = BalancedPartition(k=wl.k, needs=tuple(int(n) for n in needs),
+    a = tuple(int(c * n) for c, n in zip(counts, needs_arr))
+    p = BalancedPartition(k=k, needs=tuple(int(n) for n in needs_arr),
                           a=a, psi=psi)
     p.validate()
     return p
+
+
+def balanced_partition(wl: Workload) -> BalancedPartition:
+    """Eq. (2) applied to a workload."""
+    return balanced_partition_for(wl.k, wl.needs, wl.demands)

@@ -19,7 +19,8 @@ subsystems are then exactly independent M/GI/s_i/s_i loss queues
 
 from __future__ import annotations
 
-from ..partition import BalancedPartition, balanced_partition
+from ..partition import (BalancedPartition, balanced_partition,
+                         balanced_partition_for)
 from ..workload import Workload
 from .base import Policy, SystemView
 
@@ -30,21 +31,25 @@ class BalancedSplitting(Policy):
     size_aware = False
     pull_back = True  # Def. 1 rule 3; ModifiedBS-π sets False
 
-    def __init__(self, partition: BalancedPartition, aux: str = "fcfs"):
+    def __init__(self, partition: BalancedPartition, aux: str = "fcfs",
+                 demands=None):
         if aux not in ("fcfs", "backfill"):
             raise ValueError(f"unsupported auxiliary policy {aux!r}")
         self.partition = partition
+        self._partition0 = partition
         self.aux = aux
+        self.demands = None if demands is None else tuple(demands)
         self.name = f"{'bs' if self.pull_back else 'modbs'}-{aux}"
         self._reset_state()
 
     @classmethod
     def for_workload(cls, wl: Workload, aux: str = "fcfs"):
-        return cls(balanced_partition(wl), aux=aux)
+        return cls(balanced_partition(wl), aux=aux, demands=wl.demands)
 
     # -- internal state ------------------------------------------------------
 
     def _reset_state(self):
+        self.partition = self._partition0
         self.free_slots = list(self.partition.slots)
         self.helper_free = self.partition.helpers
         self.a_running: set[int] = set()       # jobs running in their A_i
@@ -127,6 +132,74 @@ class BalancedSplitting(Policy):
 
     def select(self, view: SystemView):
         return list(self.a_running) + list(self.h_running)
+
+    # -- kill-mode fault injection (see core.simulator / core.failures) ------
+
+    def on_capacity_change(self, view: SystemView, k_live: int):
+        """Re-run the eq.-2 split on the live server count.
+
+        Mirrors :func:`repro.sched.elastic.elastic_repartition`: the class
+        demands are fixed, the capacity is whatever survives, and every
+        block shrinks (or regrows) to its new eq.-2 size.  Jobs running
+        beyond the new block sizes are killed youngest-arrival-first (the
+        non-preemption trade: no checkpointing, a kill is a full restart)
+        and re-routed by rule 1 via :meth:`on_kill`.  Raises ValueError
+        when ``k_live`` cannot host the largest job — BS-π is undefined
+        without a helper set that can (see ``balanced_partition_for``).
+        """
+        if self.demands is None:
+            raise ValueError(
+                f"{self.name} cannot repartition on capacity changes "
+                f"without class demands (pass demands=... or build via "
+                f"for_workload)")
+        new = balanced_partition_for(k_live, self.partition.needs,
+                                     self.demands)
+        victims: list[int] = []
+        # class blocks: keep the oldest jobs up to the new slot counts
+        by_cls: dict[int, list[int]] = {}
+        for j in self.a_running:
+            by_cls.setdefault(view.cls(j), []).append(j)
+        for i in range(len(new.a)):
+            members = sorted(by_cls.get(i, []))
+            over = len(members) - new.slots[i]
+            if over > 0:
+                victims.extend(members[-over:])
+        # helper set: evict youngest helper jobs until the rest fit
+        h_used = sum(view.need(j) for j in self.h_running)
+        for j in sorted(self.h_running, reverse=True):
+            if h_used <= new.helpers:
+                break
+            victims.append(j)
+            h_used -= view.need(j)
+        for j in victims:
+            if j in self.a_running:
+                self.a_running.discard(j)
+            else:
+                self.h_running.discard(j)
+        self.partition = new
+        used = {i: 0 for i in range(len(new.a))}
+        for j in self.a_running:
+            used[view.cls(j)] += 1
+        self.free_slots = [new.slots[i] - used[i] for i in range(len(new.a))]
+        self.helper_free = new.helpers - sum(
+            view.need(j) for j in self.h_running)
+        # a regrown helper set may unblock the queue head right now
+        self._helper_schedule(view)
+        return victims
+
+    def on_kill(self, view: SystemView, j: int) -> None:
+        """Rule-1 re-route of a killed job (not a new arrival — the
+        ``n_arrivals`` denominator of P_H is untouched; a job killed out
+        of A_i and re-routed to H does count as routed/served)."""
+        i = view.cls(j)
+        if self.free_slots[i] > 0:
+            self.free_slots[i] -= 1
+            self.a_running.add(j)
+        else:
+            self.n_routed_helper += 1
+            self.routed_jobs.add(j)
+            self.h_wait.append(j)
+            self._helper_schedule(view)
 
     # -- observables -----------------------------------------------------------
 

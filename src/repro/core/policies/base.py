@@ -48,6 +48,20 @@ class Policy:
     def on_departure(self, view: SystemView, j: int) -> None:
         pass
 
+    # -- failure hooks (kill-mode fault injection, see core.simulator) -----
+
+    def on_capacity_change(self, view: SystemView,
+                           k_live: int) -> Sequence[int] | None:
+        """Fired on every breakdown/repair event, before the engine picks
+        kill victims.  Return job ids to kill (a breakdown may force
+        ``select`` to shrink), or None for the engine default (most
+        recently started first).  ``view.k`` already reports ``k_live``."""
+        return None
+
+    def on_kill(self, view: SystemView, j: int) -> None:
+        """Job ``j`` was killed mid-service and requeued (full restart)."""
+        pass
+
     def select(self, view: SystemView) -> Iterable[int]:
         raise NotImplementedError
 

@@ -71,10 +71,14 @@ except ImportError:               # ... experimental before (and removed
     from jax.experimental.shard_map import shard_map  # there after 0.6)
 
 from . import engines
-from .sim_batch import (_backends_initialized, _bs_result, _call,
-                        _class_inputs, _fcfs_inputs, _fcfs_result,
-                        _modbs_result, _partition_args)
-from .sim_jax import _bs_args, _bs_core, _fcfs_core, _modbs_core
+from . import failures as flr
+from .partition import balanced_partition
+from .sim_batch import (_backends_initialized, _bs_fail_args, _bs_result,
+                        _call, _class_inputs, _fcfs_inputs, _fcfs_result,
+                        _merged_fcfs_inputs, _modbs_result, _partition_args,
+                        _with_drain_obs)
+from .sim_jax import (_bs_args, _bs_core, _bs_fail_core, _fcfs_core,
+                      _fcfs_fail_core, _modbs_core, _modbs_fail_core)
 from .workload import BatchTrace
 
 _FLAG = "--xla_force_host_platform_device_count"
@@ -330,6 +334,42 @@ def _bs_shard_call(arrival, cls, need, service, slots, s_max: int, h: int,
         arrival, cls, need, service, slots)
 
 
+# Failure-aware variants: identical scan cores as engine="jax"
+# (sim_jax._*_fail_core), merged streams built host-side from the UNPADDED
+# batch, then replication-padded like every other input.
+
+
+@partial(jax.jit, static_argnums=(5, 6))
+def _fcfs_fail_shard_call(t, n, svc, t_up, is_fail, k: int, mesh: Mesh):
+    body = lambda a, b, c, d, e: jax.vmap(
+        lambda a1, b1, c1, d1, e1: _fcfs_fail_core(a1, b1, c1, d1, e1, k))(
+        a, b, c, d, e)
+    return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 5,
+                     out_specs=P("r"))(t, n, svc, t_up, is_fail)
+
+
+@partial(jax.jit, static_argnums=(7, 8, 9))
+def _modbs_fail_shard_call(t, c, n, svc, t_up, is_fail, slots, s_max: int,
+                           h: int, mesh: Mesh):
+    body = lambda a, b, cc, d, e, f, s: jax.vmap(
+        lambda a1, b1, c1, d1, e1, f1: _modbs_fail_core(
+            a1, b1, c1, d1, e1, f1, s, s_max, h))(a, b, cc, d, e, f)
+    return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 6 + (P(),),
+                     out_specs=(P("r"), P("r")))(
+        t, c, n, svc, t_up, is_fail, slots)
+
+
+@partial(jax.jit, static_argnums=(8, 9, 10, 11, 12))
+def _bs_fail_shard_call(arrival, cls, need, service, ft, ftgt, fup, slots,
+                        s_max: int, h: int, q_cap: int, length: int,
+                        mesh: Mesh):
+    body = lambda a, c, n, v, t, g, u, s: _bs_fail_core(
+        a, c, n, v, t, g, u, s, s_max, h, q_cap, length)
+    return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 7 + (P(),),
+                     out_specs=(P("r"), P("r"), P("r")))(
+        arrival, cls, need, service, ft, ftgt, fup, slots)
+
+
 # --------------------------------------------------------------------------
 # engine="jax-shard" registry cores.
 # --------------------------------------------------------------------------
@@ -340,39 +380,87 @@ def _bs_shard_call(arrival, cls, need, service, slots, s_max: int, h: int,
 
 
 @engines.register("fcfs", "jax-shard")
-def _fcfs_jax_shard(batch, *, partition=None, wl=None, devices=None):
+def _fcfs_jax_shard(batch, *, partition=None, wl=None, devices=None,
+                    failures=None):
     """FCFS with the replications axis sharded across the local mesh."""
     mesh = local_mesh(devices)
-    padded, R = _pad_batch(batch, mesh.size)
+    if failures is None:
+        padded, R = _pad_batch(batch, mesh.size)
+        with enable_x64():
+            starts = _call(_fcfs_shard_call, *_fcfs_inputs(padded), batch.k,
+                           mesh)
+        return _fcfs_result(batch, np.asarray(starts)[:R])
+    flr.require_drain(failures, "jax-shard")
+    ms = _merged_fcfs_inputs(batch, failures)
+    (t, n, svc, t_up, isf), R = _pad_reps(mesh.size, ms.t, ms.need,
+                                          ms.service, ms.t_up, ms.is_fail)
     with enable_x64():
-        starts = _call(_fcfs_shard_call, *_fcfs_inputs(padded), batch.k,
-                       mesh)
-    return _fcfs_result(batch, np.asarray(starts)[:R])
+        starts_m = _call(_fcfs_fail_shard_call, jnp.asarray(t, jnp.float64),
+                         jnp.asarray(n, jnp.int32),
+                         jnp.asarray(svc, jnp.float64),
+                         jnp.asarray(t_up, jnp.float64),
+                         jnp.asarray(isf != 0), batch.k, mesh)
+    starts = np.take_along_axis(np.asarray(starts_m)[:R], ms.job_pos, axis=1)
+    return _with_drain_obs(_fcfs_result(batch, starts), batch, failures)
 
 
 @engines.register("modbs-fcfs", "jax-shard")
-def _modbs_jax_shard(batch, *, partition=None, wl=None, devices=None):
+def _modbs_jax_shard(batch, *, partition=None, wl=None, devices=None,
+                     failures=None):
     """ModifiedBS-FCFS (Definition 2), replication-sharded."""
     slots, s_max, h = _partition_args(batch, partition, wl)
     mesh = local_mesh(devices)
-    padded, R = _pad_batch(batch, mesh.size)
+    if failures is None:
+        padded, R = _pad_batch(batch, mesh.size)
+        with enable_x64():
+            blocked, starts = _call(_modbs_shard_call, *_class_inputs(padded),
+                                    jnp.asarray(slots), s_max, h, mesh)
+        return _modbs_result(batch, np.asarray(blocked)[:R],
+                             np.asarray(starts)[:R])
+    flr.require_drain(failures, "jax-shard")
+    part = partition if partition is not None else balanced_partition(wl)
+    ft, ftgt, fup, count = flr.partition_targets(failures, part)
+    ms = flr.merge_failure_stream(batch, ft, ftgt, fup, count,
+                                  pad_cls=len(part.a))
+    (t, c, n, svc, t_up, isf), R = _pad_reps(
+        mesh.size, ms.t, ms.cls, ms.need, ms.service, ms.t_up, ms.is_fail)
     with enable_x64():
-        blocked, starts = _call(_modbs_shard_call, *_class_inputs(padded),
-                                jnp.asarray(slots), s_max, h, mesh)
-    return _modbs_result(batch, np.asarray(blocked)[:R],
-                         np.asarray(starts)[:R])
+        blocked_m, starts_m = _call(
+            _modbs_fail_shard_call, jnp.asarray(t, jnp.float64),
+            jnp.asarray(c, jnp.int32), jnp.asarray(n, jnp.int32),
+            jnp.asarray(svc, jnp.float64), jnp.asarray(t_up, jnp.float64),
+            jnp.asarray(isf != 0), jnp.asarray(slots), s_max, h, mesh)
+    starts = np.take_along_axis(np.asarray(starts_m)[:R], ms.job_pos, axis=1)
+    blocked = np.take_along_axis(np.asarray(blocked_m)[:R], ms.job_pos,
+                                 axis=1)
+    return _with_drain_obs(_modbs_result(batch, blocked, starts), batch,
+                           failures)
 
 
 @engines.register("bs-fcfs", "jax-shard")
 def _bs_jax_shard(batch, *, partition=None, wl=None, queue_cap=None,
-                  devices=None):
+                  devices=None, failures=None):
     """BS-FCFS (Definition 1) event scan, replication-sharded."""
     slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
     mesh = local_mesh(devices)
+    if failures is None:
+        padded, R = _pad_batch(batch, mesh.size)
+        with enable_x64():
+            tagged, rec_t, ovf = _call(_bs_shard_call, *_class_inputs(padded),
+                                       jnp.asarray(slots), s_max, h, q_cap,
+                                       mesh)
+        return _bs_result(batch, np.asarray(tagged)[:R],
+                          np.asarray(rec_t)[:R], np.asarray(ovf)[:R], q_cap)
+    flr.require_drain(failures, "jax-shard")
+    ft, ftgt, fup, length = _bs_fail_args(batch, failures, partition, wl)
     padded, R = _pad_batch(batch, mesh.size)
+    (ft, ftgt, fup), _ = _pad_reps(mesh.size, ft, ftgt, fup)
     with enable_x64():
-        tagged, rec_t, ovf = _call(_bs_shard_call, *_class_inputs(padded),
-                                   jnp.asarray(slots), s_max, h, q_cap,
-                                   mesh)
-    return _bs_result(batch, np.asarray(tagged)[:R], np.asarray(rec_t)[:R],
-                      np.asarray(ovf)[:R], q_cap)
+        tagged, rec_t, ovf = _call(
+            _bs_fail_shard_call, *_class_inputs(padded),
+            jnp.asarray(ft, jnp.float64), jnp.asarray(ftgt, jnp.int32),
+            jnp.asarray(fup, jnp.float64), jnp.asarray(slots), s_max, h,
+            q_cap, length, mesh)
+    return _with_drain_obs(
+        _bs_result(batch, np.asarray(tagged)[:R], np.asarray(rec_t)[:R],
+                   np.asarray(ovf)[:R], q_cap), batch, failures)

@@ -50,9 +50,11 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from . import engines
+from . import failures as flr
 from .partition import BalancedPartition, balanced_partition
-from .sim_jax import (_bs_args, _bs_core, _bs_scatter_events, _fcfs_core,
-                      _loss_core, _modbs_core)
+from .sim_jax import (_bs_args, _bs_core, _bs_fail_core, _bs_scatter_events,
+                      _fcfs_core, _fcfs_fail_core, _loss_core, _modbs_core,
+                      _modbs_fail_core)
 from .workload import BatchTrace, Workload
 
 #: waiting-time epsilon for P[wait > 0] — matches ``Simulation.wait_eps``
@@ -149,6 +151,34 @@ def _bs_scan_batch(arrival, cls, need, service, slots, s_max: int, h: int,
     return _bs_core(arrival, cls, need, service, slots, s_max, h, q_cap)
 
 
+# failure-aware variants: scans over the chronologically merged
+# arrival+failure streams of repro.core.failures (drain semantics)
+
+@partial(jax.jit, static_argnames=("k",), donate_argnums=(0, 1, 2, 3, 4))
+def _fcfs_fail_scan_batch(t, n, svc, t_up, is_fail, k: int):
+    return jax.vmap(
+        lambda a, b, c, d, e: _fcfs_fail_core(a, b, c, d, e, k))(
+        t, n, svc, t_up, is_fail)
+
+
+@partial(jax.jit, static_argnames=("s_max", "h"),
+         donate_argnums=(0, 1, 2, 3, 4, 5))
+def _modbs_fail_scan_batch(t, c, n, svc, t_up, is_fail, slots, s_max: int,
+                           h: int):
+    return jax.vmap(
+        lambda a, b, cc, d, e, f: _modbs_fail_core(a, b, cc, d, e, f, slots,
+                                                   s_max, h))(
+        t, c, n, svc, t_up, is_fail)
+
+
+@partial(jax.jit, static_argnames=("s_max", "h", "q_cap", "length"),
+         donate_argnums=(0, 1, 2, 3))
+def _bs_fail_scan_batch(arrival, cls, need, service, ft, ftgt, fup, slots,
+                        s_max: int, h: int, q_cap: int, length: int):
+    return _bs_fail_core(arrival, cls, need, service, ft, ftgt, fup, slots,
+                         s_max, h, q_cap, length)
+
+
 # --------------------------------------------------------------------------
 # Host wrappers.
 # --------------------------------------------------------------------------
@@ -165,6 +195,10 @@ class BatchSimResult:
     p_routed: np.ndarray | None = None  # [R] fraction routed to H on arrival
                                         # (> p_helper under Def.-1 pull-backs)
     start: np.ndarray | None = None     # [R, J] raw start times
+    # failure-scenario observables (None without fault injection):
+    kills: np.ndarray | None = None         # [R] jobs killed mid-service
+    requeues: np.ndarray | None = None      # [R] killed jobs requeued
+    availability: np.ndarray | None = None  # [R] time-avg live fraction
 
     @property
     def reps(self) -> int:
@@ -196,14 +230,28 @@ class BatchSimResult:
             start=None if self.start is None else self.start[r])
 
 
+def _dev(x, dtype) -> jnp.ndarray:
+    """Device array that never aliases caller-owned memory.
+
+    ``jnp.asarray`` zero-copies suitably aligned numpy float64/int
+    buffers on CPU (alignment depends on the allocator — run to run!),
+    and the batched entry points below *donate* their input buffers:
+    XLA writing into a donated zero-copy alias silently corrupts the
+    caller's ``BatchTrace`` arrays in place.  ``jnp.array`` copies by
+    default, which breaks the alias for the cost of one host memcpy —
+    noise next to the scan itself.
+    """
+    return jnp.array(x, dtype)
+
+
 def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
                          s: int) -> BatchSimResult:
     """Batched M/GI/s/s: [R, J] arrival/service arrays, R independent paths."""
     with enable_x64():
         blocked = np.asarray(_call(
             _loss_scan_batch,
-            jnp.asarray(arrival, jnp.float64),
-            jnp.asarray(service, jnp.float64), s))
+            _dev(arrival, jnp.float64),
+            _dev(service, jnp.float64), s))
     resp = np.where(blocked, 0.0, service)
     return BatchSimResult(response=resp, wait=np.zeros_like(resp),
                           p_helper=None, blocked=blocked)
@@ -215,17 +263,17 @@ def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
 
 def _fcfs_inputs(batch: BatchTrace) -> tuple:
     """(arrival f64, need i32, service f64) device arrays of a batch."""
-    return (jnp.asarray(batch.arrival, jnp.float64),
-            jnp.asarray(batch.need, jnp.int32),
-            jnp.asarray(batch.service, jnp.float64))
+    return (_dev(batch.arrival, jnp.float64),
+            _dev(batch.need, jnp.int32),
+            _dev(batch.service, jnp.float64))
 
 
 def _class_inputs(batch: BatchTrace) -> tuple:
     """(arrival f64, cls i32, need i32, service f64) device arrays."""
-    return (jnp.asarray(batch.arrival, jnp.float64),
-            jnp.asarray(batch.cls, jnp.int32),
-            jnp.asarray(batch.need, jnp.int32),
-            jnp.asarray(batch.service, jnp.float64))
+    return (_dev(batch.arrival, jnp.float64),
+            _dev(batch.cls, jnp.int32),
+            _dev(batch.need, jnp.int32),
+            _dev(batch.service, jnp.float64))
 
 
 def _partition_args(batch: BatchTrace, partition: BalancedPartition | None,
@@ -281,26 +329,87 @@ def _bs_result(batch: BatchTrace, tagged, rec_t, ovf,
 # -- engine="jax" cores (the vmapped lax.scan substrate) --------------------
 
 
+def _with_drain_obs(res: BatchSimResult, batch: BatchTrace,
+                    fb) -> BatchSimResult:
+    return dataclasses.replace(
+        res, **flr.drain_observables(fb, batch, res.response))
+
+
+def _merged_fcfs_inputs(batch: BatchTrace, fb) -> flr.MergedStream:
+    ft, ftgt, fup, count = flr.fcfs_targets(fb)
+    return flr.merge_failure_stream(batch, ft, ftgt, fup, count, pad_cls=0)
+
+
 @engines.register("fcfs", "jax")
-def _fcfs_jax(batch: BatchTrace, *, partition=None, wl=None):
+def _fcfs_jax(batch: BatchTrace, *, partition=None, wl=None, failures=None):
     """Batched multiserver-job FCFS over all replications at once."""
+    if failures is None:
+        with enable_x64():
+            starts = _call(_fcfs_scan_batch, *_fcfs_inputs(batch), batch.k)
+        return _fcfs_result(batch, starts)
+    flr.require_drain(failures, "jax")
+    ms = _merged_fcfs_inputs(batch, failures)
     with enable_x64():
-        starts = _call(_fcfs_scan_batch, *_fcfs_inputs(batch), batch.k)
-    return _fcfs_result(batch, starts)
+        starts_m = _call(_fcfs_fail_scan_batch,
+                         _dev(ms.t, jnp.float64),
+                         _dev(ms.need, jnp.int32),
+                         _dev(ms.service, jnp.float64),
+                         _dev(ms.t_up, jnp.float64),
+                         _dev(ms.is_fail != 0, jnp.bool_), batch.k)
+    starts = np.take_along_axis(np.asarray(starts_m), ms.job_pos, axis=1)
+    return _with_drain_obs(_fcfs_result(batch, starts), batch, failures)
 
 
 @engines.register("modbs-fcfs", "jax")
-def _modbs_jax(batch: BatchTrace, *, partition=None, wl=None):
+def _modbs_jax(batch: BatchTrace, *, partition=None, wl=None, failures=None):
     """Batched ModifiedBS-FCFS (Definition 2) over all replications."""
     slots, s_max, h = _partition_args(batch, partition, wl)
+    if failures is None:
+        with enable_x64():
+            blocked, starts = _call(_modbs_scan_batch, *_class_inputs(batch),
+                                    jnp.asarray(slots), s_max, h)
+        return _modbs_result(batch, blocked, starts)
+    flr.require_drain(failures, "jax")
+    part = partition if partition is not None else balanced_partition(wl)
+    ft, ftgt, fup, count = flr.partition_targets(failures, part)
+    ms = flr.merge_failure_stream(batch, ft, ftgt, fup, count,
+                                  pad_cls=len(part.a))
     with enable_x64():
-        blocked, starts = _call(_modbs_scan_batch, *_class_inputs(batch),
-                                jnp.asarray(slots), s_max, h)
-    return _modbs_result(batch, blocked, starts)
+        blocked_m, starts_m = _call(
+            _modbs_fail_scan_batch,
+            _dev(ms.t, jnp.float64), _dev(ms.cls, jnp.int32),
+            _dev(ms.need, jnp.int32),
+            _dev(ms.service, jnp.float64),
+            _dev(ms.t_up, jnp.float64),
+            _dev(ms.is_fail != 0, jnp.bool_), jnp.asarray(slots), s_max, h)
+    starts = np.take_along_axis(np.asarray(starts_m), ms.job_pos, axis=1)
+    blocked = np.take_along_axis(np.asarray(blocked_m), ms.job_pos, axis=1)
+    return _with_drain_obs(_modbs_result(batch, blocked, starts), batch,
+                           failures)
+
+
+def _bs_fail_args(batch: BatchTrace, failures, partition, wl):
+    """(ft, ftgt, fup, scan length) of a BS drain run.
+
+    Length = 2J + F + F_A: every failure event consumes a step, and each
+    *class-targeted* event may claim a free slot, adding one future
+    repair-completion event.
+    """
+    part = partition if partition is not None else balanced_partition(wl)
+    ft, ftgt, fup, count = flr.partition_targets(failures, part)
+    C = len(part.a)
+    F = max(1, ft.shape[1])
+    if ft.shape[1] == 0:
+        ft = np.full((batch.reps, 1), np.inf)
+        ftgt = np.full((batch.reps, 1), C, dtype=np.int32)
+        fup = np.zeros((batch.reps, 1))
+    fa = int((ftgt < C).sum(axis=1).max()) if ft.size else 0
+    return ft, ftgt, fup, 2 * batch.num_jobs + F + fa
 
 
 @engines.register("bs-fcfs", "jax")
-def _bs_jax(batch: BatchTrace, *, partition=None, wl=None, queue_cap=None):
+def _bs_jax(batch: BatchTrace, *, partition=None, wl=None, queue_cap=None,
+            failures=None):
     """Batched BS-FCFS (Definition 1, rule-3 pull-backs) over all reps.
 
     Runs the event-indexed 2J-step scan of ``sim_jax._bs_core`` with the
@@ -308,13 +417,25 @@ def _bs_jax(batch: BatchTrace, *, partition=None, wl=None, queue_cap=None):
     to ``bs_sim(batch.rep(r))``.  Raises if any replication overflowed the
     per-class helper-wait ring buffers (``queue_cap``, default
     ``min(J, 8192)``) — an overflow means the workload is unstable at this
-    load, not that the result is approximate.
+    load, not that the result is approximate.  With ``failures`` the scan
+    runs the drain-mode variant (``sim_jax._bs_fail_core``).
     """
     slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
+    if failures is None:
+        with enable_x64():
+            tagged, rec_t, ovf = _call(_bs_scan_batch, *_class_inputs(batch),
+                                       jnp.asarray(slots), s_max, h, q_cap)
+        return _bs_result(batch, tagged, rec_t, ovf, q_cap)
+    flr.require_drain(failures, "jax")
+    ft, ftgt, fup, length = _bs_fail_args(batch, failures, partition, wl)
     with enable_x64():
-        tagged, rec_t, ovf = _call(_bs_scan_batch, *_class_inputs(batch),
-                                   jnp.asarray(slots), s_max, h, q_cap)
-    return _bs_result(batch, tagged, rec_t, ovf, q_cap)
+        tagged, rec_t, ovf = _call(
+            _bs_fail_scan_batch, *_class_inputs(batch),
+            _dev(ft, jnp.float64), _dev(ftgt, jnp.int32),
+            _dev(fup, jnp.float64), jnp.asarray(slots), s_max, h,
+            q_cap, length)
+    return _with_drain_obs(_bs_result(batch, tagged, rec_t, ovf, q_cap),
+                           batch, failures)
 
 
 # -- public batched entry points (thin shims over the registry) -------------
@@ -405,12 +526,29 @@ def _ci95(per_rep: np.ndarray) -> float:
     return float(1.96 * per_rep.std(ddof=1) / np.sqrt(per_rep.size))
 
 
+def _sweep_failures(failures, wl: Workload, batch: BatchTrace, seed: int):
+    """Materialize the per-point FailureBatch of a faulty sweep.
+
+    ``failures`` is either a :class:`repro.core.failures.FailureProcess`
+    (sampled here with the point's k and the batch's arrival horizon, same
+    seed discipline as the traces) or a callable ``(wl, batch) ->
+    FailureBatch`` for full control.
+    """
+    if hasattr(failures, "sample"):
+        horizon = float(batch.arrival.max())
+        return failures.sample(wl.k, horizon, batch.reps, seed=seed)
+    return failures(wl, batch)
+
+
 def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
                       *, num_jobs: int = 100_000, reps: int = 8,
                       seed: int = 0,
                       policies: Sequence[str] = ("fcfs", "modbs-fcfs",
                                                  "bs-fcfs"),
                       engine: str = "jax",
+                      failures=None,
+                      ckpt_dir: str | None = None,
+                      resume: bool = False,
                       ) -> SweepResult:
     """Run the batched simulators over ``wl_factory(point)`` for each point.
 
@@ -428,6 +566,15 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
     interface).  Any ``(policy, engine)`` registry pair sweeps; unknown
     policies raise ``KeyError``.  Returns mean/CI arrays
     [policies, points].
+
+    ``failures`` injects degraded-capacity scenarios (see
+    :func:`_sweep_failures`).  ``ckpt_dir`` makes the sweep crash-
+    resumable: every (point, policy) cell is written atomically
+    (:mod:`repro.checkpoint`) as its own checkpoint step the moment it
+    completes, and ``resume=True`` restores completed cells — including
+    their recorded ``sim_s`` — instead of re-simulating, so a sweep killed
+    mid-run resumes from the last completed cell with bit-identical
+    output.
     """
     if engine not in engines.available_engines():
         raise ValueError(f"unknown engine {engine!r}; registered engines: "
@@ -437,6 +584,8 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
     if unknown:
         raise KeyError(f"no {engine!r} simulator for {sorted(unknown)}; "
                        f"available: {list(avail)}")
+    if resume and ckpt_dir is None:
+        raise ValueError("resume=True needs a ckpt_dir")
     P, N = len(policies), len(points)
     shape = (P, N)
     mean_r = np.zeros(shape); ci_r = np.zeros(shape)
@@ -444,13 +593,40 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
     ci_pw = np.zeros(shape)
     p_help = np.full(shape, np.nan)
     p95 = np.zeros(shape); util = np.zeros(shape); sim_s = np.zeros(shape)
+    cells = (mean_r, ci_r, mean_w, p_wait, ci_pw, p_help, p95, util, sim_s)
+    done: set[int] = set()
+    if resume:
+        from repro.checkpoint import completed_steps
+        done = set(completed_steps(ckpt_dir))
     for j, pt in enumerate(points):
-        wl = wl_factory(pt)
-        batch = wl.sample_traces(num_jobs, reps, seed=seed)
-        busy = (batch.need * batch.service).sum(axis=1)        # [R]
+        # a fully checkpointed point restores without sampling: the traces
+        # are only needed to simulate, not to read back cell metrics
+        todo = [i for i in range(P) if j * P + i not in done]
+        wl = batch = busy = fb = None
+        if todo:
+            wl = wl_factory(pt)
+            batch = wl.sample_traces(num_jobs, reps, seed=seed)
+            busy = (batch.need * batch.service).sum(axis=1)    # [R]
+            if failures is not None:
+                fb = _sweep_failures(failures, wl, batch, seed)
         for i, pol in enumerate(policies):
+            cell = j * P + i
+            if cell in done:
+                from repro.checkpoint import restore_checkpoint
+                tree, _, extra = restore_checkpoint(
+                    ckpt_dir, {"cell": np.zeros(len(cells))}, step=cell)
+                if extra.get("policy") != pol:
+                    raise ValueError(
+                        f"checkpoint cell {cell} was written for policy "
+                        f"{extra.get('policy')!r}, sweep has {pol!r} — "
+                        f"stale ckpt_dir?")
+                for arr, v in zip(cells, tree["cell"]):
+                    arr[i, j] = v
+                continue
             t0 = time.time()
-            res = engines.simulate(pol, batch, engine=engine, wl=wl)
+            res = engines.simulate(pol, batch, engine=engine, wl=wl,
+                                   **({} if fb is None
+                                      else {"failures": fb}))
             sim_s[i, j] = time.time() - t0
             mean_r[i, j] = res.mean_response.mean()
             ci_r[i, j] = _ci95(res.mean_response)
@@ -463,6 +639,12 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
             completion = batch.arrival + res.response
             horizon = completion.max(axis=1)                   # [R]
             util[i, j] = (busy / (wl.k * horizon)).mean()
+            if ckpt_dir is not None:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(
+                    ckpt_dir, cell,
+                    {"cell": np.array([a[i, j] for a in cells])},
+                    extra={"point": repr(pt), "policy": pol})
     return SweepResult(points=tuple(points), policies=tuple(policies),
                        num_jobs=num_jobs, reps=reps,
                        mean_response=mean_r, ci95_response=ci_r,

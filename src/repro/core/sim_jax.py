@@ -189,6 +189,44 @@ def _fcfs_scan_reference(arrival, need, service, k: int):
     return starts
 
 
+def _kw_drain(W, t_up):
+    """One drain event on a sorted Kiefer–Wolfowitz free-time vector.
+
+    A server breakdown claims the earliest-free capacity unit until
+    ``t_up``: the multiset update is ``W[0] := max(W[0], t_up)``, realized
+    as the same O(k) roll-and-insert as ``_fcfs_sorted_step`` with n = 1.
+    ``t_up = 0`` is the identity — the no-op padding row of the merged
+    failure stream.
+    """
+    k = W.shape[0]
+    comp_f = jnp.maximum(W[0], t_up)
+    p = jnp.searchsorted(W, comp_f, side="right") - 1
+    i = jnp.arange(k)
+    return jnp.where(i == p, comp_f, W[jnp.where(i < p, i + 1, i)])
+
+
+def _fcfs_fail_core(t, n, svc, t_up, is_fail, k: int):
+    """FCFS over a chronologically merged arrival+failure stream.
+
+    Rows with ``is_fail`` drain W (``_kw_drain``); arrival rows are the
+    ordinary Kiefer–Wolfowitz step.  Failures never touch ``t_prev`` —
+    running jobs are not preempted, a breakdown only defers future starts.
+    Start outputs of failure rows are garbage; the host gathers arrival
+    positions via ``MergedStream.job_pos``.
+    """
+    def step(carry, inp):
+        W, t_prev = carry
+        tt, nn, ss, tu, isf = inp
+        W_a, start = _fcfs_sorted_step(W, t_prev, tt, nn, ss)
+        W_new = jnp.where(isf, _kw_drain(W, tu), W_a)
+        return (W_new, jnp.where(isf, t_prev, start)), start
+
+    W0 = jnp.zeros(k, dtype=t.dtype)
+    (_, _), starts = jax.lax.scan(step, (W0, jnp.zeros((), t.dtype)),
+                                  (t, n, svc, t_up, is_fail))
+    return starts
+
+
 def _as_batch(trace: Trace) -> BatchTrace:
     """The trace as a one-replication batch (the registry cores' input)."""
     return BatchTrace(arrival=trace.arrival[None], cls=trace.cls[None],
@@ -247,6 +285,49 @@ def _modbs_core(arrival, cls, need, service, slots, s_max: int, h: int):
     (_, _, _), (blocked, starts) = jax.lax.scan(
         partial(_modbs_step, s_max=s_max), carry0,
         (arrival, cls, need, service))
+    return blocked, starts
+
+
+def _modbs_fail_step(carry, inp, *, s_max: int, C: int):
+    """One merged arrival-or-failure row of the ModBS drain scan.
+
+    Failure rows carry the target block in the class column: ``c < C``
+    extends the argmin completion entry of class row c to ``t_up`` (a
+    free slot has entry <= t, so argmin is the earliest-free unit either
+    way); ``c == C`` drains the helper W vector.  Padding rows are
+    helper drains with ``t_up = 0`` — the identity.
+    """
+    comp, W, t_prev = carry
+    t, c, n, svc, tu, isf = inp
+    helper_fail = isf & (c == C)
+    class_fail = isf & ~helper_fail
+    cc = jnp.minimum(c, C - 1)
+    row = comp[cc]
+    busy = jnp.sum(row > t)
+    blocked = busy >= s_max
+    idx = jnp.argmin(row)
+    new_val = jnp.where(class_fail, jnp.maximum(row[idx], tu),
+                        jnp.where(blocked, row[idx], t + svc))
+    touch = class_fail | ~isf
+    comp = comp.at[cc].set(row.at[idx].set(
+        jnp.where(touch, new_val, row[idx])))
+    W_upd, start_h = _fcfs_sorted_step(W, t_prev, t, n, svc)
+    engage = (~isf) & blocked
+    W_new = jnp.where(helper_fail, _kw_drain(W, tu),
+                      jnp.where(engage, W_upd, W))
+    t_prev_new = jnp.where(engage, start_h, t_prev)
+    start = jnp.where(blocked, start_h, t)
+    return (comp, W_new, t_prev_new), (blocked & ~isf, start)
+
+
+def _modbs_fail_core(t, c, n, svc, t_up, is_fail, slots, s_max: int,
+                     h: int):
+    """ModBS-FCFS over a merged arrival+failure stream (single lane)."""
+    C = slots.shape[0]
+    carry0 = _modbs_init(slots, s_max, h, t.dtype)
+    (_, _, _), (blocked, starts) = jax.lax.scan(
+        partial(_modbs_fail_step, s_max=s_max, C=C), carry0,
+        (t, c, n, svc, t_up, is_fail))
     return blocked, starts
 
 
@@ -495,6 +576,213 @@ def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
     return tagged.T, rec_t.T, ovf
 
 
+
+
+def _bs_fail_make_step(jobrec, failrec, C: int, s_max: int, h: int,
+                       q_cap: int):
+    """Failure-aware variant of ``_bs_make_step``.
+
+    ``failrec`` is the packed [R, F, 3] (t_down, target, t_up) event
+    array from :func:`repro.core.failures.partition_targets`, sorted
+    chronologically; the carry grows a per-lane failure cursor ``fi``.  A
+    failure event wins ties against every other candidate (it happened
+    first in the merged chronology) and claims the earliest-free capacity
+    unit of its target block:
+
+    * target == C — drain the helper W vector (``W[0] := max(W[0], t_up)``);
+    * target < C with a free A slot — occupy it until ``t_up``: decrement
+      the free counter and insert ``t_up`` at an empty ``_BIG`` entry,
+      which later fires as an ordinary A-completion (the *repair* event,
+      rule-3 pull included for free);
+    * target < C fully busy — extend the argmin completion entry to
+      ``t_up`` (non-preemption: the running gang finishes, the slot then
+      stays down until repair).
+
+    Because trailing steps past the per-lane event count are no-ops, the
+    event selectors carry guards the exact-length 2J scan never needed:
+    completions require ``Tc`` below the ``_BIG`` sentinel and arrivals
+    require ``ai < J``.
+    """
+    R, J, _ = jobrec.shape
+    F = failrec.shape[1]
+    dt = jobrec.dtype
+    INF = jnp.asarray(jnp.inf, dt)
+    GUARD = jnp.asarray(0.5 * _BIG, dt)
+    lanes = jnp.arange(R)
+    lanes1 = lanes[:, None]
+    ar = jnp.arange(h)[None, :]
+
+    def taa(a, idx):
+        return jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+
+    def rec(idx):
+        return jnp.take_along_axis(jobrec, idx[:, None, None], axis=1)[:, 0]
+
+    def frec(idx):
+        return jnp.take_along_axis(failrec, idx[:, None, None], axis=1)[:, 0]
+
+    def step(carry, _):
+        (ai, fi, st, comp, ring, heads, W, t_prev, t_hol, ovf) = carry
+
+        j_arr = jnp.minimum(ai, J - 1)
+        rec_a = rec(j_arr)
+        Ta = jnp.where(ai < J, rec_a[:, 0], INF)
+        cm = jnp.argmin(comp, axis=1).astype(jnp.int32)
+        Tc = taa(comp, cm)
+        gh_job = jnp.min(heads, axis=1)
+        has_head = gh_job < J
+        jh = jnp.minimum(gh_job, J - 1)
+        rec_h = rec(jh)
+        nh = rec_h[:, 3].astype(jnp.int32)
+        Wn = taa(W, nh - 1)
+        Th = jnp.where(has_head,
+                       jnp.maximum(jnp.maximum(rec_h[:, 0], t_hol),
+                                   jnp.maximum(t_prev, Wn)),
+                       INF)
+        rec_f = frec(jnp.minimum(fi, F - 1))
+        Tf = jnp.where(fi < F, rec_f[:, 0], INF)
+        fc = rec_f[:, 1].astype(jnp.int32)
+        fu = rec_f[:, 2]
+
+        is_fail = (Tf <= Ta) & (Tf <= Tc) & (Tf <= Th) & (Tf < INF)
+        is_commit = (~is_fail) & (Th <= Tc) & (Th <= Ta)
+        is_comp = (~is_fail) & (~is_commit) & (Tc < Ta) & (Tc < GUARD)
+        is_arr = (~is_fail) & (~is_commit) & (~is_comp) & (ai < J)
+        fi = fi + jnp.where(is_fail, 1, 0)
+
+        # --- arrival (rule 1), as in _bs_make_step
+        c_arr = rec_a[:, 2].astype(jnp.int32)
+        g = jnp.take_along_axis(
+            st, jnp.stack([c_arr, C + c_arr, 2 * C + c_arr], 1), axis=1)
+        free_c, head_c, tail_c = g[:, 0], g[:, 1], g[:, 2]
+        has_slot = is_arr & (free_c > 0)
+        enq = is_arr & ~has_slot
+        ring = ring.at[lanes,
+                       jnp.where(enq, c_arr * q_cap + tail_c % q_cap,
+                                 C * q_cap)].set(j_arr, mode="drop")
+        ovf = ovf | (enq & (tail_c + 1 - head_c > q_cap))
+        ai = ai + jnp.where(is_arr, 1, 0)
+
+        # --- A-completion: rule-3 pull
+        c_comp = cm // s_max
+        pull = taa(heads, c_comp)
+        can_pull = is_comp & (pull < J)
+        jp = jnp.minimum(pull, J - 1)
+        t_hol = jnp.where(can_pull & (pull == gh_job),
+                          jnp.maximum(t_hol, Tc), t_hol)
+
+        # --- failure target bookkeeping
+        fcc = jnp.minimum(fc, C - 1)
+        helper_fail = is_fail & (fc == C)
+        class_fail = is_fail & ~helper_fail
+        free_f = taa(st, fcc)
+        row_f = jnp.take_along_axis(
+            comp, fcc[:, None] * s_max + jnp.arange(s_max)[None, :], axis=1)
+        pos_free = jnp.argmax(row_f, axis=1).astype(jnp.int32)
+        cmf = jnp.argmin(row_f, axis=1).astype(jnp.int32)
+        vmin = taa(row_f, cmf)
+        fail_free = class_fail & (free_f > 0)
+        fail_busy = class_fail & ~(free_f > 0)
+
+        # --- comp update: the 2-entry scatter of _bs_make_step plus the
+        # failure entry (disjoint: under is_fail the first two drop OOB)
+        ins = has_slot | can_pull
+        j_ins = jnp.where(is_arr, j_arr, jp)
+        t_ins = jnp.where(is_arr, Ta, Tc)
+        svc_ins = rec(j_ins)[:, 1]
+        row = jnp.take_along_axis(
+            comp, c_arr[:, None] * s_max + jnp.arange(s_max)[None, :],
+            axis=1)
+        pos = jnp.argmax(row, axis=1).astype(jnp.int32)
+        OOBC = C * s_max
+        idx3 = jnp.stack(
+            [jnp.where(is_comp & ~can_pull, cm, OOBC),
+             jnp.where(has_slot, c_arr * s_max + pos,
+                       jnp.where(can_pull, cm, OOBC)),
+             jnp.where(fail_free, fcc * s_max + pos_free,
+                       jnp.where(fail_busy, fcc * s_max + cmf, OOBC))], 1)
+        val3 = jnp.stack([jnp.full(R, _BIG, dt), t_ins + svc_ins,
+                          jnp.where(fail_free, fu,
+                                    jnp.maximum(vmin, fu))], 1)
+        comp = comp.at[lanes1, idx3].set(val3, mode="drop")
+
+        # --- helper commit + helper drain (disjoint lane masks)
+        comp_h = Th + rec_h[:, 1]
+        p = (jnp.sum(W <= comp_h[:, None], axis=1).astype(jnp.int32)
+             - nh)[:, None]
+        nh_ = nh[:, None]
+        W_roll = jnp.take_along_axis(
+            W, jnp.minimum(jnp.where(ar < p, ar + nh_, ar), h - 1), axis=1)
+        W2 = jnp.where((ar >= p) & (ar < p + nh_), comp_h[:, None], W_roll)
+        comp_f = jnp.maximum(W[:, 0], fu)
+        pf = (jnp.sum(W <= comp_f[:, None], axis=1).astype(jnp.int32)
+              - 1)[:, None]
+        W_roll_f = jnp.take_along_axis(
+            W, jnp.minimum(jnp.where(ar < pf, ar + 1, ar), h - 1), axis=1)
+        Wf = jnp.where(ar == pf, comp_f[:, None], W_roll_f)
+        W = jnp.where(is_commit[:, None], W2,
+                      jnp.where(helper_fail[:, None], Wf, W))
+        t_prev = jnp.where(is_commit, Th, t_prev)
+
+        # --- counter updates: the 3-entry scatter-add of _bs_make_step
+        # plus the free-slot claim of a class drain
+        did_pop = can_pull | is_commit
+        pop_c = jnp.where(can_pull, c_comp, rec_h[:, 2].astype(jnp.int32))
+        OOBS = 3 * C
+        idx4 = jnp.stack(
+            [jnp.where(is_arr, c_arr, jnp.where(is_comp, c_comp, OOBS)),
+             jnp.where(enq, 2 * C + c_arr, OOBS),
+             jnp.where(did_pop, C + pop_c, OOBS),
+             jnp.where(fail_free, fcc, OOBS)], 1)
+        val4 = jnp.stack(
+            [jnp.where(has_slot, -1, 0) +
+             jnp.where(is_comp & ~can_pull, 1, 0),
+             jnp.ones(R, jnp.int32), jnp.ones(R, jnp.int32),
+             jnp.full(R, -1, jnp.int32)], 1)
+        st = st.at[lanes1, idx4].add(val4, mode="drop")
+
+        # --- per-class head refresh, as in _bs_make_step
+        gp = jnp.take_along_axis(
+            st, jnp.stack([C + pop_c, 2 * C + pop_c], 1), axis=1)
+        nxt = jnp.where(gp[:, 0] < gp[:, 1],
+                        taa(ring, pop_c * q_cap + gp[:, 0] % q_cap), J)
+        hidx = jnp.stack([jnp.where(enq & (head_c == tail_c), c_arr, C),
+                          jnp.where(did_pop, pop_c, C)], 1)
+        hval = jnp.stack([j_arr, nxt], 1)
+        heads = heads.at[lanes1, hidx].set(hval, mode="drop")
+
+        tagged = jnp.where(is_commit, jh + 2 * J,
+                           jnp.where(ins, j_ins,
+                                     jnp.where(enq, j_arr + J, -1)))
+        rec_t = jnp.where(is_commit, Th, t_ins)
+        out = (tagged, rec_t)
+        return (ai, fi, st, comp, ring, heads, W, t_prev, t_hol, ovf), out
+
+    return step
+
+
+def _bs_fail_core(arrival, cls, need, service, ft, ftgt, fup, slots,
+                  s_max: int, h: int, q_cap: int, length: int):
+    """BS-FCFS sample paths with drained-capacity failure events.
+
+    Same event semantics as ``_bs_core`` plus a fourth candidate event —
+    the next breakdown, which wins ties.  The scan runs ``length`` =
+    2J + F + F_A steps (F_A bounds the extra repair-completions created
+    by free-slot drains); lanes that exhaust their events no-op to the
+    end, guarded by the ``Tc < GUARD`` / ``ai < J`` selector terms.
+    """
+    R, J = arrival.shape
+    C = slots.shape[0]
+    dt = arrival.dtype
+    jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
+                       axis=2)
+    failrec = jnp.stack([ft, ftgt.astype(dt), fup], axis=2)  # [R, F, 3]
+    step = _bs_fail_make_step(jobrec, failrec, C, s_max, h, q_cap)
+    c0 = _bs_init(R, J, C, s_max, h, q_cap, slots, dt)
+    carry0 = (c0[0], jnp.zeros(R, jnp.int32)) + c0[1:]
+    (_, _, _, _, _, _, _, _, _, ovf), (tagged, rec_t) \
+        = jax.lax.scan(step, carry0, None, length=length)
+    return tagged.T, rec_t.T, ovf
 
 
 def _bs_scatter_events(J: int, tagged, rec_t):

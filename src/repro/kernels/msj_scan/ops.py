@@ -56,12 +56,25 @@ def bs_scan(arrival, cls, need, service, *, slots, s_max: int, h: int,
                        interpret=_interpret())
 
 
+
+
+def _no_failures(failures, policy: str):
+    """The fused kernels have no capacity-mask carry (ROADMAP: open item)."""
+    if failures is not None:
+        raise NotImplementedError(
+            f"engine='pallas' does not support fault injection yet "
+            f"(policy {policy!r}): the fused kernels carry no capacity "
+            f"mask — use engine='jax'/'jax-shard' (drain) or "
+            f"engine='python' (kill)")
+
+
 # -- engine="pallas" registry cores -----------------------------------------
 
 
 @engines.register("fcfs", "pallas")
-def _fcfs_pallas(batch, *, partition=None, wl=None):
+def _fcfs_pallas(batch, *, partition=None, wl=None, failures=None):
     """Fused-kernel FCFS core (replications axis = Pallas grid)."""
+    _no_failures(failures, "fcfs")
     with enable_x64():
         a, n, v = _fcfs_inputs(batch)
         starts = _call(lambda a, n, v: fcfs_scan(a, n, v, k=batch.k),
@@ -70,8 +83,9 @@ def _fcfs_pallas(batch, *, partition=None, wl=None):
 
 
 @engines.register("modbs-fcfs", "pallas")
-def _modbs_pallas(batch, *, partition=None, wl=None):
+def _modbs_pallas(batch, *, partition=None, wl=None, failures=None):
     """Fused-kernel ModifiedBS-FCFS core."""
+    _no_failures(failures, "modbs-fcfs")
     slots, s_max, h = _partition_args(batch, partition, wl)
     with enable_x64():
         blocked, starts = _call(
@@ -82,8 +96,10 @@ def _modbs_pallas(batch, *, partition=None, wl=None):
 
 
 @engines.register("bs-fcfs", "pallas")
-def _bs_pallas(batch, *, partition=None, wl=None, queue_cap=None):
+def _bs_pallas(batch, *, partition=None, wl=None, queue_cap=None,
+               failures=None):
     """Fused-kernel BS-FCFS (Definition 1) event-step core."""
+    _no_failures(failures, "bs-fcfs")
     slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
     with enable_x64():
         tagged, rec_t, ovf = _call(

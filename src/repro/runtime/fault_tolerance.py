@@ -64,8 +64,13 @@ def run_with_restarts(make_trainer: Callable[[], object], num_steps: int,
 
     ``make_trainer`` builds a fresh Trainer (simulating a restarted job);
     each failure loses all state except checkpoints — the resumed run must
-    continue from the last checkpoint.  Returns (result, restarts)."""
-    from ..train.trainer import FailureInjector
+    continue from the last checkpoint.  Returns (result, restarts).
+
+    Only :class:`~repro.train.trainer.InjectedFailure` triggers a restart:
+    a genuine RuntimeError out of the train step (NaN loss, shape bug)
+    propagates on the first attempt instead of burning ``max_restarts``
+    retries on a deterministic crash."""
+    from ..train.trainer import FailureInjector, InjectedFailure
     restarts = 0
     fail_iter = iter(sorted(failure_steps))
     next_fail = next(fail_iter, None)
@@ -76,7 +81,7 @@ def run_with_restarts(make_trainer: Callable[[], object], num_steps: int,
         try:
             result = trainer.run(num_steps, failure=inj)
             return result, restarts
-        except RuntimeError:
+        except InjectedFailure:
             restarts += 1
             if restarts > max_restarts:
                 raise

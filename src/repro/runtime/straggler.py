@@ -27,7 +27,6 @@ class StragglerMitigator:
         deadline peers).  Returns how many were promoted."""
         promoted = 0
         q = self.sched.helper_wait
-        i = 0
         items = list(q)
         for job in items:
             cls = self.sched.partition.classes[job.cls]

@@ -29,15 +29,25 @@ from ..parallel.sharding import DEFAULT_RULES, tree_shardings_sized
 from .step import make_train_step
 
 
+class InjectedFailure(RuntimeError):
+    """A deliberately injected failure (chaos tests, restart drills).
+
+    Subclasses RuntimeError for backward compatibility, but restart
+    harnesses catch *this* type: a genuine RuntimeError from the train
+    step (NaN loss, OOM, shape bug) must propagate, not be retried into
+    a restart loop that masks it.
+    """
+
+
 @dataclasses.dataclass
 class FailureInjector:
-    """Raises RuntimeError right after ``at_step`` completes (tests)."""
+    """Raises InjectedFailure right after ``at_step`` completes (tests)."""
 
     at_step: int = -1
 
     def check(self, step: int):
         if step == self.at_step:
-            raise RuntimeError(f"injected failure at step {step}")
+            raise InjectedFailure(f"injected failure at step {step}")
 
 
 @dataclasses.dataclass

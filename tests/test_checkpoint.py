@@ -64,6 +64,80 @@ def test_async_and_gc(tmp_path, tree):
     assert steps == [3, 4]
 
 
+def test_malformed_step_entries_skipped(tmp_path, tree):
+    """A stray ``step_final``-style name must not brick resume."""
+    from repro.checkpoint import completed_steps
+    save_checkpoint(str(tmp_path), 2, tree)
+    (tmp_path / "step_final").mkdir()
+    (tmp_path / "step_").mkdir()
+    with pytest.warns(RuntimeWarning, match="malformed checkpoint entry"):
+        assert latest_step(str(tmp_path)) == 2
+    with pytest.warns(RuntimeWarning, match="malformed checkpoint entry"):
+        assert completed_steps(str(tmp_path)) == [2]
+
+
+def test_gc_skips_malformed_entries(tmp_path, tree):
+    """GC removes only well-formed old steps; stray dirs stay untouched."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    stray = tmp_path / "step_notanumber"
+    stray.mkdir()
+    with pytest.warns(RuntimeWarning):
+        for s in (1, 2):
+            mgr.save(s, tree)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000002", "step_notanumber"]
+    assert stray.is_dir()
+
+
+def test_save_async_error_surfaces_on_wait(tmp_path, tree):
+    """A background-write failure must not vanish: the next ``wait()``
+    (or the next ``save_async``, which waits first) re-raises it."""
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("not a directory")
+    mgr = CheckpointManager(str(blocker))
+    mgr.save_async(1, tree)
+    with pytest.raises(OSError):
+        mgr.wait()
+    # the error is consumed — a second wait() is clean
+    mgr.wait()
+
+
+def test_genuine_runtime_error_propagates():
+    """Only InjectedFailure buys a restart: a real RuntimeError out of the
+    train step (NaN loss, shape bug) propagates on the FIRST attempt."""
+    from repro.runtime.fault_tolerance import run_with_restarts
+
+    calls = []
+
+    class Boom:
+        def run(self, n, failure=None):
+            calls.append(n)
+            raise RuntimeError("NaN loss at step 3")
+
+    with pytest.raises(RuntimeError, match="NaN loss"):
+        run_with_restarts(Boom, 10, failure_steps=[6])
+    assert calls == [10]            # no retries burned on a real crash
+
+
+def test_injected_failure_still_restarts():
+    from repro.runtime.fault_tolerance import run_with_restarts
+    from repro.train.trainer import InjectedFailure
+
+    attempts = []
+
+    class Flaky:
+        def run(self, n, failure=None):
+            attempts.append(failure.at_step)
+            if failure is not None and failure.at_step >= 0:
+                raise InjectedFailure(f"injected at {failure.at_step}")
+            return "done"
+
+    res, restarts = run_with_restarts(Flaky, 5, failure_steps=[2, 4])
+    assert res == "done"
+    assert restarts == 2
+    assert attempts == [2, 4, -1]
+
+
 def test_elastic_restore_different_mesh(tmp_path, tree):
     """Restore device_puts against the current mesh's shardings — the
     chip-loss path (mesh shape differs between save and restore)."""

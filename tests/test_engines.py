@@ -91,6 +91,74 @@ def test_explicit_partition_honored_on_every_engine():
             assert np.array_equal(out.p_helper, ref.p_helper), (pol, eng)
 
 
+# -- input validation ---------------------------------------------------------
+
+
+def test_simulate_rejects_malformed_batches():
+    """Malformed inputs fail loudly at the dispatch point (the scan cores
+    would silently fold NaNs / time-travelling arrivals into garbage),
+    naming the first offending replication."""
+    wl = small_workload()
+    batch = wl.sample_traces(20, 2, seed=0)
+
+    bad = batch.arrival.copy()
+    bad[1, 3] = np.nan
+    with pytest.raises(ValueError, match=r"arrival contains NaN.*replication 1"):
+        engines.simulate("fcfs", dataclasses.replace(batch, arrival=bad))
+
+    bad = batch.service.copy()
+    bad[0, 7] = np.nan
+    with pytest.raises(ValueError, match=r"service contains NaN.*replication 0"):
+        engines.simulate("fcfs", dataclasses.replace(batch, service=bad))
+
+    bad = batch.arrival.copy()
+    bad[1, 5] = bad[1, 4] - 1.0           # time-travelling arrival
+    with pytest.raises(ValueError, match=r"not nondecreasing.*replication 1"):
+        engines.simulate("fcfs", dataclasses.replace(batch, arrival=bad))
+
+    bad = batch.arrival - batch.arrival[:, :1] - 1.0  # negative, monotone
+    with pytest.raises(ValueError, match=r"negative arrival.*replication 0"):
+        engines.simulate("fcfs", dataclasses.replace(batch, arrival=bad))
+
+    bad = batch.service.copy()
+    bad[0, 2] = -0.5
+    with pytest.raises(ValueError, match=r"negative service.*replication 0"):
+        engines.simulate("fcfs", dataclasses.replace(batch, service=bad))
+
+    bad = batch.need.copy()
+    bad[1, 0] = 0
+    with pytest.raises(ValueError, match=r"needs must be >= 1.*replication 1"):
+        engines.simulate("fcfs", dataclasses.replace(batch, need=bad))
+
+
+def test_simulate_rejects_class_ids_outside_partition():
+    from repro.core.partition import balanced_partition
+
+    wl = small_workload()
+    part = balanced_partition(wl)
+    batch = wl.sample_traces(20, 2, seed=0)
+    bad = batch.cls.copy()
+    bad[1, 4] = len(wl.classes)           # one past the last class
+    with pytest.raises(ValueError, match=r"outside the partition.*replication 1"):
+        engines.simulate("modbs-fcfs", dataclasses.replace(batch, cls=bad),
+                         partition=part)
+
+
+def test_simulate_rejects_mismatched_failure_batch():
+    from repro.core.failures import FailureProcess
+
+    wl = small_workload()
+    batch = wl.sample_traces(20, 2, seed=0)
+    proc = FailureProcess(mtbf=50.0, mttr=5.0, mode="drain")
+    horizon = float(batch.arrival.max())
+    with pytest.raises(ValueError, match="failures.k"):
+        engines.simulate("fcfs", batch,
+                         failures=proc.sample(wl.k + 1, horizon, 2, seed=0))
+    with pytest.raises(ValueError, match="failures.reps"):
+        engines.simulate("fcfs", batch,
+                         failures=proc.sample(wl.k, horizon, 3, seed=0))
+
+
 # -- BatchTrace.from_trace (bootstrap resampling) -----------------------------
 
 
@@ -172,7 +240,7 @@ def test_from_trace_validation():
 
 
 _RESULT_FIELDS = ("response", "wait", "start", "blocked", "p_helper",
-                  "p_routed")
+                  "p_routed", "kills", "requeues", "availability")
 
 
 def test_every_registered_pair_matches_python_on_bootstrap_rep():

@@ -1,0 +1,275 @@
+"""Fault injection: MTBF/MTTR sampling, drain parity across engines,
+kill-and-requeue on the python oracle, BS-π dynamic repartition.
+
+The drain contract is the registry contract: on one FailureBatch the
+python reference loops and the scan cores must agree bit-for-bit (rtol=0)
+— same merged event chronology, same tie-breaks, same float expressions
+for the availability observable.  Kill mode is oracle-only (dynamic
+repartition breaks static scan shapes) and the scan engines must say so
+loudly.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import engines
+from repro.core.failures import (FailureBatch, FailureProcess,
+                                 failure_stream, partition_targets)
+from repro.core.workload import BatchTrace, Exp, JobClass, Workload
+
+DRAIN_POLICIES = ("fcfs", "modbs-fcfs", "bs-fcfs")
+FIELDS = ("response", "wait", "start", "blocked", "p_helper", "p_routed",
+          "kills", "requeues", "availability")
+
+
+def small_workload(k=32, load=0.8):
+    classes = (
+        JobClass("s", 1, Exp(1.0), 0.7),
+        JobClass("m", 4, Exp(4.0), 0.2),
+        JobClass("l", 8, Exp(8.0), 0.1),
+    )
+    return Workload(k=k, lam=1.0, classes=classes).with_load(load)
+
+
+def faulty_batch(wl, num_jobs=400, reps=2, seed=0, mode="drain",
+                 mtbf=40.0, mttr=6.0, pod_size=1):
+    batch = wl.sample_traces(num_jobs, reps, seed=seed)
+    proc = FailureProcess(mtbf=mtbf, mttr=mttr, pod_size=pod_size, mode=mode)
+    fb = proc.sample(wl.k, float(batch.arrival.max()), reps, seed=seed)
+    return batch, fb
+
+
+# -- FailureProcess sampling --------------------------------------------------
+
+
+def test_failure_process_validation():
+    with pytest.raises(ValueError, match="mtbf and mttr"):
+        FailureProcess(mtbf=0.0, mttr=1.0)
+    with pytest.raises(ValueError, match="pod_size"):
+        FailureProcess(mtbf=1.0, mttr=1.0, pod_size=0)
+    with pytest.raises(ValueError, match="unknown failure mode"):
+        FailureProcess(mtbf=1.0, mttr=1.0, mode="preempt")
+    proc = FailureProcess(mtbf=10.0, mttr=1.0)
+    with pytest.raises(ValueError, match="k must be"):
+        proc.sample(0, 100.0, 2)
+    with pytest.raises(ValueError, match="replication"):
+        proc.sample(4, 100.0, 0)
+    with pytest.raises(ValueError, match="horizon"):
+        proc.sample(4, np.inf, 2)
+
+
+def test_failure_process_philox_determinism():
+    proc = FailureProcess(mtbf=20.0, mttr=2.0)
+    a = proc.sample(16, 500.0, 3, seed=7)
+    b = proc.sample(16, 500.0, 3, seed=7)
+    assert np.array_equal(a.t_down, b.t_down)
+    assert np.array_equal(a.t_up, b.t_up)
+    assert np.array_equal(a.server, b.server)
+    # replication r draws from failure_stream(seed, r): a larger batch
+    # extends a smaller one without changing the shared prefix
+    big = proc.sample(16, 500.0, 5, seed=7)
+    for r in range(3):
+        n = int(a.count[r])
+        assert int(big.count[r]) == n
+        assert np.array_equal(big.t_down[r, :n], a.t_down[r, :n])
+    # distinct replications and seeds differ
+    assert not np.array_equal(a.t_down[0, :int(a.count[0])],
+                              a.t_down[1, :int(a.count[1])])
+    c = proc.sample(16, 500.0, 3, seed=8)
+    assert not np.array_equal(a.t_down, c.t_down)
+    # the failure stream is a jump past the trace stream, never the same
+    from repro.core.workload import replication_stream
+    tr = np.random.Generator(replication_stream(7, 0)).random(4)
+    fl = np.random.Generator(failure_stream(7, 0)).random(4)
+    assert not np.array_equal(tr, fl)
+
+
+def test_failure_batch_capacity_accounting():
+    proc = FailureProcess(mtbf=15.0, mttr=3.0, pod_size=4)
+    fb = proc.sample(16, 300.0, 2, seed=1)
+    assert fb.count.min() > 0          # mtbf << horizon: outages happened
+    for r in range(fb.reps):
+        n = int(fb.count[r])
+        assert (fb.t_up[r, :n] > fb.t_down[r, :n]).all()
+        assert (np.diff(fb.t_down[r, :n]) >= 0).all()
+        times, live = fb.capacity_trace(r)
+        assert live.min() >= 0 and live[-1] == fb.k  # all repairs fire
+        # k_live agrees with the step function after each distinct time
+        # (pod outages emit one step per member server, so ties resolve
+        # at the last entry of each equal-time run)
+        for t in np.unique(times)[:5]:
+            expect = live[np.searchsorted(times, t, side="right") - 1]
+            assert fb.k_live(r, float(t)) == expect
+    # pod outages coalesce into (t_down, t_up, m) groups of the pod size
+    groups = fb.grouped_events(0)
+    assert all(1 <= m <= 4 for _, _, m in groups)
+    assert any(m == 4 for _, _, m in groups)
+    # availability: no outage before the first t_down
+    first = float(fb.t_down[:, 0].min()) * 0.5
+    assert np.allclose(fb.availability(first), 1.0)
+    assert (fb.availability(300.0) < 1.0).all()
+
+
+def test_partition_targets_maps_servers_to_blocks():
+    wl = small_workload(k=32)
+    from repro.core.partition import balanced_partition
+    part = balanced_partition(wl)
+    proc = FailureProcess(mtbf=30.0, mttr=4.0)
+    fb = proc.sample(wl.k, 200.0, 2, seed=3)
+    t, tgt, tup, count = partition_targets(fb, part)
+    C = part.C
+    for r in range(fb.reps):
+        n = int(count[r])
+        assert (tgt[r, :n] <= C).all() and (tgt[r, :n] >= 0).all()
+        assert (np.diff(t[r, :n]) >= 0).all()      # chronological
+        assert (t[r, n:] == np.inf).all()          # pad sentinels
+    with pytest.raises(ValueError, match="k="):
+        partition_targets(proc.sample(wl.k + 1, 200.0, 2), part)
+
+
+# -- drain parity across the registry (the acceptance pin) --------------------
+
+
+@pytest.mark.parametrize("k", [32, 256])
+def test_drain_parity_across_registered_engines(k):
+    """Every scan engine registered under a drain-capable policy must match
+    the python reference bit-for-bit (rtol=0) on a failure scenario —
+    including the kills/requeues/availability observables."""
+    wl = small_workload(k=k)
+    batch, fb = faulty_batch(wl, num_jobs=400, reps=2, seed=k)
+    checked = 0
+    for policy, engine in engines.registered():
+        if policy not in DRAIN_POLICIES or engine in ("python", "pallas"):
+            continue
+        ref = engines.simulate(policy, batch, engine="python", wl=wl,
+                               failures=fb)
+        out = engines.simulate(policy, batch, engine=engine, wl=wl,
+                               failures=fb)
+        for f in FIELDS:
+            a, b = getattr(out, f), getattr(ref, f)
+            assert (a is None) == (b is None), (policy, engine, f)
+            if a is not None:
+                assert np.array_equal(a, b), (policy, engine, f)
+        assert ref.kills is not None and (ref.kills == 0).all()
+        assert (ref.availability > 0).all() and (ref.availability < 1).all()
+        checked += 1
+    assert checked >= 6    # fcfs/modbs-fcfs/bs-fcfs x jax/jax-shard
+
+
+def test_drain_degrades_response():
+    wl = small_workload(k=32)
+    batch, fb = faulty_batch(wl, num_jobs=600, reps=2, mtbf=25.0, mttr=8.0)
+    clean = engines.simulate("bs-fcfs", batch, engine="jax", wl=wl)
+    fault = engines.simulate("bs-fcfs", batch, engine="jax", wl=wl,
+                             failures=fb)
+    assert fault.response.mean() > clean.response.mean()
+
+
+def test_pallas_rejects_failures():
+    wl = small_workload(k=32)
+    batch, fb = faulty_batch(wl, num_jobs=50, reps=1)
+    with pytest.raises(NotImplementedError, match="capacity mask"):
+        engines.simulate("fcfs", batch, engine="pallas", wl=wl, failures=fb)
+
+
+def test_scan_engines_reject_kill_mode():
+    wl = small_workload(k=32)
+    batch, fb = faulty_batch(wl, num_jobs=50, reps=1, mode="kill")
+    for engine in ("jax", "jax-shard"):
+        with pytest.raises(NotImplementedError, match="mode='drain'"):
+            engines.simulate("fcfs", batch, engine=engine, wl=wl,
+                             failures=fb)
+
+
+# -- exact tiny scenarios (hand-checkable) ------------------------------------
+
+
+def _one_job_batch():
+    return BatchTrace(arrival=np.array([[0.0]]), cls=np.array([[0]]),
+                      service=np.array([[10.0]]), need=np.array([[1]]),
+                      k=1, C=1)
+
+
+def _one_outage(mode):
+    return FailureBatch(t_down=np.array([[5.0]]), t_up=np.array([[6.0]]),
+                        server=np.array([[0]]), count=np.array([1]), k=1,
+                        horizon=20.0, mode=mode)
+
+
+def test_kill_restarts_from_scratch():
+    """k=1, one job of service 10, outage [5, 6): the kill oracle loses
+    the 5 units of progress (remaining := service) and finishes at 16."""
+    res = engines.simulate("fcfs", _one_job_batch(), engine="python",
+                           failures=_one_outage("kill"))
+    assert res.response[0, 0] == 16.0
+    assert res.kills[0] == 1 and res.requeues[0] == 1
+    assert res.availability[0] == pytest.approx(1.0 - 1.0 / 16.0)
+
+
+def test_drain_never_preempts():
+    """Same scenario in drain mode: the failed server is already claimed
+    until t=10 > t_up, so the running job is untouched (the paper's
+    non-preemption trade)."""
+    res = engines.simulate("fcfs", _one_job_batch(), engine="python",
+                           failures=_one_outage("drain"))
+    assert res.response[0, 0] == 10.0
+    assert res.kills[0] == 0 and res.requeues[0] == 0
+    assert res.availability[0] == pytest.approx(1.0 - 1.0 / 10.0)
+
+
+# -- kill-and-requeue on the oracle -------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "bs-fcfs", "modbs-fcfs",
+                                    "serverfilling"])
+def test_kill_mode_runs_on_every_python_policy(policy):
+    wl = small_workload(k=32)
+    batch, fb = faulty_batch(wl, num_jobs=300, reps=2, mode="kill",
+                             mtbf=30.0, mttr=5.0)
+    res = engines.simulate(policy, batch, engine="python", wl=wl,
+                           failures=fb)
+    clean = engines.simulate(policy, batch, engine="python", wl=wl)
+    assert res.response.shape == batch.arrival.shape
+    assert np.isfinite(res.response).all()
+    assert (res.availability > 0).all() and (res.availability <= 1).all()
+    assert res.kills.sum() >= 0 and res.requeues.sum() >= res.kills.sum()
+    assert res.response.mean() >= clean.response.mean()
+    # determinism: the oracle replays the same event chronology
+    res2 = engines.simulate(policy, batch, engine="python", wl=wl,
+                            failures=fb)
+    assert np.array_equal(res.response, res2.response)
+    assert np.array_equal(res.kills, res2.kills)
+
+
+def test_kill_mode_bs_repartition_needs_demands():
+    """BS-π re-fits eq. (2) on capacity change, which needs the class
+    demands: an explicit partition without a workload must fail loudly."""
+    wl = small_workload(k=32)
+    from repro.core.partition import balanced_partition
+    part = balanced_partition(wl)
+    batch, fb = faulty_batch(wl, num_jobs=200, reps=1, mode="kill",
+                             mtbf=20.0, mttr=5.0)
+    via_wl = engines.simulate("bs-fcfs", batch, engine="python", wl=wl,
+                              failures=fb)
+    via_part = engines.simulate("bs-fcfs", batch, engine="python",
+                                partition=part, wl=wl, failures=fb)
+    assert np.array_equal(via_wl.response, via_part.response)
+    # a bare partition carries no demands — the re-fit must fail loudly
+    # (only if an outage actually fires, hence the aggressive mtbf above)
+    with pytest.raises(ValueError, match="demands"):
+        engines.simulate("bs-fcfs", batch, engine="python", partition=part,
+                         failures=fb)
+
+
+def test_failures_shape_mismatch_rejected():
+    wl = small_workload(k=32)
+    batch = wl.sample_traces(50, 2, seed=0)
+    proc = FailureProcess(mtbf=30.0, mttr=5.0)
+    with pytest.raises(ValueError, match="failures.k"):
+        engines.simulate("fcfs", batch, engine="python",
+                         failures=proc.sample(16, 100.0, 2))
+    with pytest.raises(ValueError, match="failures.reps"):
+        engines.simulate("fcfs", batch, engine="python",
+                         failures=proc.sample(32, 100.0, 1))

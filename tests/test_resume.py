@@ -1,0 +1,178 @@
+"""Crash-resumable sweeps: atomic per-cell checkpoints, --resume parity.
+
+The contract: killing a sweep at ANY instant (SIGKILL — no cleanup
+handlers) and re-running with ``--resume`` produces byte-identical output
+to an uninterrupted run.  Atomicity comes from ``step_<N>.tmp`` +
+``os.replace``; bit-identity from restoring every recorded cell value
+including ``sim_s`` instead of re-simulating.
+"""
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sim_batch import sweep_many_server
+from repro.core.workload import figure1_workload
+
+ARRAYS = ("mean_response", "ci95_response", "mean_wait", "p_wait",
+          "ci95_p_wait", "p_helper", "p95_response", "utilization", "sim_s")
+
+
+def small_sweep(**kw):
+    return sweep_many_server(
+        lambda k: figure1_workload(k, theta=0.7), (32, 64), num_jobs=200,
+        reps=2, seed=0, policies=("fcfs", "bs-fcfs"), engine="jax", **kw)
+
+
+def assert_sweeps_equal(a, b):
+    for f in ARRAYS:
+        assert np.array_equal(getattr(a, f), getattr(b, f),
+                              equal_nan=True), f
+
+
+def test_sweep_resume_restores_every_cell(tmp_path):
+    d = str(tmp_path / "ckpt")
+    ref = small_sweep(ckpt_dir=d)
+    from repro.checkpoint import completed_steps
+    assert completed_steps(d) == [0, 1, 2, 3]   # 2 points x 2 policies
+    # resume with everything done: no cell re-simulates (sim_s restored
+    # bit-for-bit proves it — a re-run could never reproduce a wall time)
+    res = small_sweep(ckpt_dir=d, resume=True)
+    assert_sweeps_equal(ref, res)
+
+
+def test_sweep_resume_completes_partial_checkpoint(tmp_path):
+    import shutil
+    d = str(tmp_path / "ckpt")
+    ref = small_sweep(ckpt_dir=d)
+    # drop the last two cells: simulates a kill mid-sweep
+    for cell in (2, 3):
+        shutil.rmtree(os.path.join(d, f"step_{cell:08d}"))
+    res = small_sweep(ckpt_dir=d, resume=True)
+    for f in ARRAYS:
+        if f == "sim_s":
+            continue                  # re-simulated cells re-time
+        assert np.array_equal(getattr(ref, f), getattr(res, f),
+                              equal_nan=True), f
+    assert np.array_equal(ref.sim_s[:, 0], res.sim_s[:, 0])  # restored point
+
+
+def test_sweep_resume_guards():
+    with pytest.raises(ValueError, match="needs a ckpt_dir"):
+        small_sweep(resume=True)
+
+
+def test_sweep_resume_rejects_stale_policy_layout(tmp_path):
+    d = str(tmp_path / "ckpt")
+    small_sweep(ckpt_dir=d)
+    with pytest.raises(ValueError, match="stale ckpt_dir"):
+        sweep_many_server(
+            lambda k: figure1_workload(k, theta=0.7), (32, 64),
+            num_jobs=200, reps=2, seed=0,
+            policies=("bs-fcfs", "fcfs"),     # swapped order
+            engine="jax", ckpt_dir=d, resume=True)
+
+
+def test_faulty_sweep_checkpoints_roundtrip(tmp_path):
+    """A degraded-capacity sweep is just as resumable."""
+    from repro.core.failures import FailureProcess
+    d = str(tmp_path / "ckpt")
+    proc = FailureProcess(mtbf=50.0, mttr=5.0, mode="drain")
+    kw = dict(num_jobs=200, reps=2, seed=0, policies=("fcfs",),
+              engine="jax", failures=proc)
+    ref = sweep_many_server(lambda k: figure1_workload(k, theta=0.7),
+                            (32,), ckpt_dir=d, **kw)
+    res = sweep_many_server(lambda k: figure1_workload(k, theta=0.7),
+                            (32,), ckpt_dir=d, resume=True, **kw)
+    assert_sweeps_equal(ref, res)
+
+
+def test_fig3_resume_byte_identical_rows(tmp_path):
+    from benchmarks import fig3_traces
+    d = str(tmp_path / "ckpt")
+    kw = dict(num_jobs=300, ks=(256,), loads=(0.7,), reps=2,
+              policies=("fcfs", "bs-fcfs"), engine="jax")
+    ref = fig3_traces.run(ckpt_dir=d, **kw)
+    res = fig3_traces.run(ckpt_dir=d, resume=True, **kw)
+    assert ref == res                 # JSON round-trips the floats exactly
+    with pytest.raises(ValueError, match="stale ckpt_dir"):
+        fig3_traces.run(ckpt_dir=d, resume=True,
+                        **{**kw, "loads": (0.85,)})
+
+
+# -- the acceptance pin: SIGKILL a real driver mid-sweep ----------------------
+
+
+def _fig1_cmd(ckpt_dir, resume=False):
+    cmd = [sys.executable, "-m", "benchmarks.fig1_critical",
+           "--engine", "jax", "--ks", "32", "64", "--jobs", "200",
+           "--reps", "2", "--policies", "fcfs", "bs-fcfs",
+           "--ckpt-dir", ckpt_dir]
+    return cmd + ["--resume"] if resume else cmd
+
+
+def _run(cmd):
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [os.path.join(os.path.dirname(__file__), "..", "src"),
+                os.path.join(os.path.dirname(__file__), ".."),
+                os.environ.get("PYTHONPATH", "")])}
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _strip_sim_s(csv_text):
+    """Drop the trailing sim_s column (wall time — honest per process)."""
+    return "\n".join(line.rsplit(",", 1)[0]
+                     for line in csv_text.splitlines())
+
+
+def test_fig1_sigkill_then_resume_byte_identical(tmp_path):
+    """SIGKILL the fig1 driver mid-sweep; ``--resume`` must complete it
+    with every metric column byte-identical to an uninterrupted run (the
+    trailing sim_s wall-time column is honest per process), and a second
+    ``--resume`` — now fully checkpointed — must reproduce the resumed
+    CSV byte-for-byte including sim_s."""
+    clean = _run(_fig1_cmd(str(tmp_path / "a")))
+    assert clean.returncode == 0, clean.stderr
+    assert clean.stdout.count("\n") == 5      # header + 2 ks x 2 policies
+
+    d = str(tmp_path / "b")
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [os.path.join(os.path.dirname(__file__), "..", "src"),
+                os.path.join(os.path.dirname(__file__), ".."),
+                os.environ.get("PYTHONPATH", "")])}
+    proc = subprocess.Popen(
+        _fig1_cmd(d), env=env, stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    # let it checkpoint at least one cell, then kill without any cleanup
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            break                     # finished before we could kill it
+        if os.path.isdir(d) and any(
+                e.startswith("step_") and not e.endswith(".tmp")
+                for e in os.listdir(d)):
+            proc.send_signal(signal.SIGKILL)
+            proc.wait()
+            break
+        time.sleep(0.05)
+    else:
+        proc.kill()
+        proc.wait()
+
+    resumed = _run(_fig1_cmd(d, resume=True))
+    assert resumed.returncode == 0, resumed.stderr
+    assert _strip_sim_s(resumed.stdout) == _strip_sim_s(clean.stdout)
+    # fully checkpointed now: a re-resume restores every cell, sim_s
+    # included — byte-identical stdout proves nothing re-simulated
+    again = _run(_fig1_cmd(d, resume=True))
+    assert again.returncode == 0, again.stderr
+    assert again.stdout == resumed.stdout

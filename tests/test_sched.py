@@ -84,6 +84,59 @@ def test_elastic_repartition_chip_loss():
     assert ref.slices == new_sched.partition.slices
 
 
+def _saturated_two_class_sched():
+    """Both slices and the helper block packed with long-running gangs, so
+    every further need-4 arrival lands in ``helper_wait``.  Class a has
+    mean service 1.0 (deadline 2.0 at multiple=2), class b 10.0 (20.0)."""
+    classes = (JobClass("a", 4, Exp(1.0), 0.5), JobClass("b", 4, Exp(10.0),
+                                                         0.5))
+    mp = BalancedMeshPartition.build(32, classes)
+    sched = GangScheduler(mp)
+    jid = 0
+    for c, sl in enumerate(mp.slices):
+        for _ in range(sl.slots):
+            sched.arrive(GangJob(jid, c, sl.need, 0.0, 1e3), 0.0)
+            jid += 1
+    for _ in range(mp.helper.size // 4):
+        sched.arrive(GangJob(jid, 0, 4, 0.0, 1e3), 0.0)
+        jid += 1
+    assert not sched.helper_wait and sched.helper_free < 4
+    return sched, jid
+
+
+def test_straggler_promotion_fcfs_among_peers():
+    """Deadline-blown gangs move ahead of patient ones but keep their own
+    arrival order (π stays FCFS among the promoted peers)."""
+    sched, jid = _saturated_two_class_sched()
+    slow = GangJob(jid, 1, 4, 0.0, 1.0)       # class b: deadline 20, safe
+    fast1 = GangJob(jid + 1, 0, 4, 1.0, 1.0)  # class a: deadline 2, blown
+    fast2 = GangJob(jid + 2, 0, 4, 2.0, 1.0)  # class a: blown, arrived later
+    for j in (slow, fast1, fast2):
+        sched.arrive(j, j.arrival)
+    assert [j.jid for j in sched.helper_wait] == [slow.jid, fast1.jid,
+                                                  fast2.jid]
+    mit = StragglerMitigator(sched, deadline_multiple=2.0)
+    assert mit.tick(now=10.0) == 2
+    assert [j.jid for j in sched.helper_wait] == [fast1.jid, fast2.jid,
+                                                  slow.jid]
+    assert mit.redirected == 2
+
+
+def test_straggler_tick_schedules_only_on_promotion():
+    """``_helper_schedule`` runs iff something was promoted — an idle tick
+    must not touch the queue (or pay the schedule pass)."""
+    sched, jid = _saturated_two_class_sched()
+    sched.arrive(GangJob(jid, 0, 4, 1.0, 1.0), 1.0)
+    calls = []
+    orig = sched._helper_schedule
+    sched._helper_schedule = lambda now: (calls.append(now), orig(now))[1]
+    mit = StragglerMitigator(sched, deadline_multiple=2.0)
+    assert mit.tick(now=1.5) == 0          # wait 0.5 < deadline 2.0
+    assert calls == [] and mit.redirected == 0
+    assert mit.tick(now=10.0) == 1         # wait 9.0 > deadline 2.0
+    assert calls == [10.0] and mit.redirected == 1
+
+
 def test_straggler_promotion():
     classes = (JobClass("a", 4, Exp(1.0), 0.5), JobClass("b", 4, Exp(1.0),
                                                          0.5))

@@ -276,9 +276,11 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     on_disk = json.loads(out.read_text())
     assert on_disk["schema"] == bench_sim.SCHEMA
     rows = on_disk["rows"]
-    # fig1: 5 engines x 3 policies per k; traces: 4 engines x 3 policies
-    assert len(rows) == 15 * len(on_disk["config"]["ks"]) + 12
-    assert {r["bench"] for r in rows} == {"fig1-critical", "traces"}
+    # fig1: 5 engines x 3 policies per k; traces: 4 engines x 3 policies;
+    # failures: 3 engines x 3 policies (no pallas — no capacity mask)
+    assert len(rows) == 15 * len(on_disk["config"]["ks"]) + 12 + 9
+    assert {r["bench"] for r in rows} == {"fig1-critical", "traces",
+                                          "failures"}
     for r in rows:
         assert set(bench_sim.ROW_KEYS) <= set(r)
         assert r["engine"] in bench_sim.ALL_ENGINES
@@ -289,7 +291,9 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
         else:
             assert r["speedup_vs_python"] > 0
     # the point of the substrate: batched beats the event engine — in the
-    # synthetic scenario and on the empirical bootstrap batch alike
+    # synthetic scenario, on the empirical bootstrap batch, and with the
+    # failure branch live in every scan step
     batched = [r for r in rows if r["engine"] == "jax-batch"]
-    assert {r["bench"] for r in batched} == {"fig1-critical", "traces"}
+    assert {r["bench"] for r in batched} == {"fig1-critical", "traces",
+                                             "failures"}
     assert all(r["speedup_vs_python"] > 1 for r in batched)
