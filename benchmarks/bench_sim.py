@@ -1,15 +1,20 @@
 """Simulation-substrate benchmark — tracks the hot-path perf trajectory.
 
-Three scenarios (``--scenario {fig1,traces,failures,all}``): the Fig. 1
-critical-regime synthetic workload (``bench="fig1-critical"``), the
-Fig. 3 empirical-trace path (``bench="traces"``: an SDSC-SP2 synthesized
-log, moving-block-bootstrapped into replications via
+Four scenarios (``--scenario {fig1,traces,failures,streaming,all}``):
+the Fig. 1 critical-regime synthetic workload (``bench="fig1-critical"``),
+the Fig. 3 empirical-trace path (``bench="traces"``: an SDSC-SP2
+synthesized log, moving-block-bootstrapped into replications via
 ``BatchTrace.from_trace`` and dispatched through the engine registry),
-and the degraded-capacity path (``bench="failures"``: the Fig. 1
+the degraded-capacity path (``bench="failures"``: the Fig. 1
 workload with drain-mode MTBF/MTTR outages merged into the event stream
 — the failure branch of every scan step is on the hot path, so a
 regression there is invisible to the clean scenarios; pallas has no
-capacity mask and ships no rows here).
+capacity mask and ships no rows here), and the constant-memory streaming
+path (``bench="streaming"``: ``engines.simulate_stream`` chunk-scanning
+an unbounded Poisson source at fixed ``chunk_jobs`` — rows carry a
+``peak_rss_mb`` column whose flatness between the 10^6- and 10^7-job
+fcfs cells is the O(R x chunk_jobs) memory claim; see
+:func:`bench_streaming`).
 Each times five engines (``--engines`` selects a subset):
 
 * ``python``    — the exact event-driven engine (the correctness oracle)
@@ -68,7 +73,7 @@ SCHEMA = "bench_sim/v1"
 #: required keys of every row — the tier-1 smoke test checks these
 ROW_KEYS = ("bench", "engine", "policy", "k", "jobs", "reps", "wall_s",
             "jobs_per_sec", "compile_s", "speedup_vs_python",
-            "device_count", "compile_warm_s")
+            "device_count", "compile_warm_s", "peak_rss_mb")
 
 #: row-label -> registry engine name of the timed substrates
 ENGINE_LABELS = (("jax", "jax-batch"), ("pallas", "pallas"),
@@ -80,7 +85,7 @@ ALL_ENGINES = ("python", "jax", "jax-batch", "pallas", "jax-shard")
 
 def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
          python_jps=None, bench="fig1-critical", device_count=1,
-         compile_warm_s=None):
+         compile_warm_s=None, peak_rss_mb=None):
     jps = jobs * reps / wall_s
     return {
         "bench": bench, "engine": engine, "policy": policy,
@@ -93,7 +98,15 @@ def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
         "device_count": device_count,
         "compile_warm_s": None if compile_warm_s is None
         else round(compile_warm_s, 3),
+        "peak_rss_mb": None if peak_rss_mb is None
+        else round(peak_rss_mb, 1),
     }
+
+
+def _peak_rss_mb() -> float:
+    """Process peak resident set in MB (ru_maxrss is KB on Linux)."""
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 def _warm_compile_s(fn, wall: float) -> float | None:
@@ -260,8 +273,62 @@ def bench_failures(jobs: int, reps: int, python_jobs: int, seed: int = 0,
     return rows
 
 
+#: (policy, total_jobs) streaming cells, smallest-state-first so the
+#: peak-RSS high-water comparison between the two fcfs rows stays clean
+STREAM_SMOKE = {"k": 64, "chunk_jobs": 20_000, "reps": 2,
+                "grid": (("fcfs", 200_000), ("modbs-fcfs", 200_000),
+                         ("bs-fcfs", 200_000))}
+STREAM_FULL = {"k": 256, "chunk_jobs": 100_000, "reps": 2,
+               # the k=256 critical-regime queue tops 1024 jobs at a
+               # chunk boundary; the backlog cap only bounds *carried*
+               # jobs, so raising it keeps memory O(chunk_jobs)
+               "backlog_cap": 8192,
+               "grid": (("fcfs", 1_000_000), ("fcfs", 10_000_000),
+                        ("modbs-fcfs", 10_000_000),
+                        ("bs-fcfs", 2_000_000))}
+
+
+def bench_streaming(grid, reps, chunk_jobs, k, seed=0, backlog_cap=None,
+                    engines_sel=ALL_ENGINES) -> list[dict]:
+    """The constant-memory scenario: ``simulate_stream`` over an unbounded
+    ``PoissonSource`` at fixed ``chunk_jobs`` (``bench="streaming"`` rows,
+    ``engine="jax-batch"`` — the streaming cores are the vmapped registry
+    scan path chunk-scanned with an explicit carry).  Each row records the
+    process **peak RSS** at its completion: within a standalone
+    ``--scenario streaming`` run (how the committed rows are produced and
+    how the CI lane runs it) the grid goes smallest-state-first, so a flat
+    ``peak_rss_mb`` between the 10^6- and 10^7-job fcfs rows *is* the
+    constant-memory claim — O(R x chunk_jobs), independent of the stream
+    length.  Under ``--scenario all`` the high-water is inherited from the
+    monolithic scenarios and the column is not meaningful.  Streams are
+    timed in one shot (per-chunk compiles amortize across the stream), so
+    ``compile_s`` is None and there is no python baseline row — the
+    regression guard keys these cells on their own committed minima."""
+    from repro.core.workload import PoissonSource
+
+    if "jax-batch" not in engines_sel:
+        return []
+    wl = figure1_workload(k, theta=0.7)
+    dc = jax.local_device_count()
+    rows = []
+    for pol, jobs in grid:
+        src = PoissonSource(wl, reps=reps, seed=seed)
+        kw = {} if backlog_cap is None or pol != "bs-fcfs" \
+            else {"backlog_cap": backlog_cap}
+        t0 = time.time()
+        engines.simulate_stream(pol, src, engine="jax",
+                                chunk_jobs=chunk_jobs, total_jobs=jobs,
+                                wl=wl, **kw)
+        wall = time.time() - t0
+        r = _row("jax-batch", pol, k, jobs, reps, wall, bench="streaming",
+                 device_count=dc, peak_rss_mb=_peak_rss_mb())
+        r["chunk_jobs"] = chunk_jobs      # streaming-only extra key
+        rows.append(r)
+    return rows
+
+
 def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
-        traces_k=512, engines_sel=ALL_ENGINES):
+        traces_k=512, engines_sel=ALL_ENGINES, streaming_cfg=None):
     rows = []
     if scenario in ("fig1", "all"):
         for k in ks:
@@ -273,6 +340,12 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
     if scenario in ("failures", "all"):
         rows += bench_failures(jobs, reps, python_jobs, seed=seed,
                                k=min(ks), engines_sel=engines_sel)
+    if scenario in ("streaming", "all"):
+        cfg = streaming_cfg or STREAM_SMOKE
+        rows += bench_streaming(cfg["grid"], cfg["reps"],
+                                cfg["chunk_jobs"], cfg["k"], seed=seed,
+                                backlog_cap=cfg.get("backlog_cap"),
+                                engines_sel=engines_sel)
     return {"schema": SCHEMA,
             "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
                        "python_jobs": python_jobs, "seed": seed,
@@ -301,12 +374,16 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, < 60 s on CPU")
     ap.add_argument("--scenario",
-                    choices=("fig1", "traces", "failures", "all"),
+                    choices=("fig1", "traces", "failures", "streaming",
+                             "all"),
                     default="all",
                     help="fig1 = synthetic critical-regime sweep; traces "
                          "= SDSC-SP2 bootstrap batch (the Fig. 3 path); "
                          "failures = fig1 workload with drain-mode "
-                         "MTBF/MTTR outages merged into the event stream")
+                         "MTBF/MTTR outages merged into the event stream; "
+                         "streaming = simulate_stream chunked-carry rows "
+                         "with the peak-RSS column (run standalone for a "
+                         "meaningful RSS high-water)")
     ap.add_argument("--engines", nargs="+", choices=ALL_ENGINES,
                     default=None,
                     help="subset of engines to time (default: all; rows "
@@ -329,16 +406,19 @@ def main(argv=None):
                            warn=True)   # loud if something beat us to init
     if args.smoke:
         ks, jobs, reps, pj, tk = (64,), 20_000, 4, 2_000, 256
+        stream_cfg = STREAM_SMOKE
     else:
         # 16 replications: the batched engines amortize the scan's fixed
         # per-step dispatch across lanes, and the CIs tighten for free
         ks, jobs, reps, pj, tk = (256, 1024), 100_000, 16, 100_000, 512
+        stream_cfg = STREAM_FULL
     ks = tuple(args.ks) if args.ks else ks
     jobs = args.jobs or jobs
     reps = args.reps or reps
     pj = args.python_jobs or pj
     report = run(ks, jobs, reps, pj, scenario=args.scenario, traces_k=tk,
-                 engines_sel=tuple(args.engines or ALL_ENGINES))
+                 engines_sel=tuple(args.engines or ALL_ENGINES),
+                 streaming_cfg=stream_cfg)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")

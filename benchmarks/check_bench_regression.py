@@ -3,10 +3,14 @@
 Compares a freshly generated ``bench_sim`` report (typically ``--smoke``)
 against the committed ``BENCH_sim.json``: for every (bench, engine,
 policy, device_count) cell present in both — the synthetic
-``fig1-critical`` scenario, the empirical-bootstrap ``traces`` scenario
-and the degraded-capacity ``failures`` scenario (drain-mode outages
+``fig1-critical`` scenario, the empirical-bootstrap ``traces`` scenario,
+the degraded-capacity ``failures`` scenario (drain-mode outages
 merged into the scan event stream; python + jax-batch + jax-shard rows,
-no pallas — the fused kernels carry no capacity mask) are guarded
+no pallas — the fused kernels carry no capacity mask) and the
+constant-memory ``streaming`` scenario (``simulate_stream`` chunked-carry
+rows; jax-batch only, no python baseline — their cells gate purely on
+their own committed jobs/sec minima, and the ``peak_rss_mb`` column is
+informational, not gated) are guarded
 independently, and cells measured on different
 device topologies are never compared with each other — the new
 ``jobs_per_sec`` must be at least ``1/factor`` of the *slowest* committed

@@ -60,11 +60,20 @@ def regenerate(topologies=(1, 2, 4), out="BENCH_sim.json",
                 parts.append(_run(f"{tmp}/bench_dc{n}_{i}.json",
                                   ["--devices", str(n), *sel, *scale],
                                   cache_dir))
-    report = parts[-1]           # full-config dc-max run's config block
+        report = dict(parts[-1])  # full-config dc-max run's config block
+        # the streaming scenario additionally runs standalone per scale:
+        # inside a '--scenario all' process the peak_rss_mb high-water is
+        # inherited from the monolithic scenarios, so the committed
+        # RSS-flatness rows need a dedicated process
+        for i, scale in enumerate((["--smoke"], [])):
+            parts.append(_run(f"{tmp}/bench_streaming_{i}.json",
+                              ["--devices", "1", "--scenario",
+                               "streaming", *scale], cache_dir))
     report["rows"] = [r for p in parts for r in p["rows"]]
     report["config"]["merged_runs"] = [
         {"devices": p["config"]["device_count"],
          "engines": p["config"]["engines"],
+         "scenario": p["config"]["scenario"],
          "smoke": p["config"]["ks"] == [64]} for p in parts]
     with open(out, "w") as f:
         json.dump(report, f, indent=1)

@@ -3,11 +3,15 @@
     PYTHONPATH=src python examples/serve_cluster.py
 
 Request classes = (model, context bucket) pairs with fixed chip needs —
-exactly the paper's multiserver-job classes.  The fleet is partitioned
-per eq. (2); requests are admitted per BS-pi; a handful are executed
-end-to-end (prefill + batched greedy decode) through the real model
-stack (reduced configs on CPU).  Watch P_H track the Erlang bound and
-the class-slice requests admit with zero wait.
+exactly the paper's multiserver-job classes.  The driver is the
+streaming rewrite of :mod:`repro.launch.serve`: an unbounded diurnal
+request stream runs through ``engines.simulate_stream`` in
+constant-memory chunk scans, the fleet is re-partitioned per eq. (2)
+between epochs (``BalancedMeshPartition.build`` +
+``elastic_repartition``) as the load forecast moves, and a couple of
+requests are executed end-to-end (prefill + batched greedy decode)
+through the real model stack (reduced configs on CPU).  Watch P_H track
+the Erlang bound and the fleet resize across the diurnal swing.
 """
 
 import sys
@@ -16,6 +20,6 @@ sys.path.insert(0, "src")
 
 from repro.launch.serve import main  # noqa
 
-sys.argv = [sys.argv[0], "--fleet", "512", "--requests", "400",
-            "--load", "0.8", "--execute", "2"]
-main()
+main(["--fleet", "512", "--epochs", "3", "--epoch-jobs", "3000",
+      "--chunk-jobs", "1000", "--reps", "2", "--load", "0.8",
+      "--period", "600", "--execute", "2"])

@@ -1,5 +1,5 @@
 from .ckpt import (CheckpointManager, completed_steps, latest_step,
-                   restore_checkpoint, save_checkpoint)
+                   require_layout, restore_checkpoint, save_checkpoint)
 
 __all__ = ["CheckpointManager", "completed_steps", "latest_step",
-           "restore_checkpoint", "save_checkpoint"]
+           "require_layout", "restore_checkpoint", "save_checkpoint"]

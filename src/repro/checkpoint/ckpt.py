@@ -132,6 +132,26 @@ def completed_steps(directory: str) -> list[int]:
     return [s for s, _ in _step_entries(directory)]
 
 
+def require_layout(extra: dict, expected: dict, *, context: str = "") -> None:
+    """Fail loudly when a checkpoint's layout disagrees with the caller's.
+
+    ``extra`` is the manifest ``extra`` dict of a restored checkpoint;
+    ``expected`` maps layout keys (policy, chunk_jobs, reps, k, ...) to
+    the values the resuming run is configured with.  Any disagreement
+    raises a :class:`ValueError` naming the first mismatched key — a
+    resumed stream with a changed ``chunk_jobs``/J layout must never
+    silently mix carries that were produced under a different layout.
+    """
+    for key in expected:
+        got, want = extra.get(key), expected[key]
+        if got != want:
+            where = f" {context}" if context else ""
+            raise ValueError(
+                f"checkpoint{where} was written with {key}={got!r} but "
+                f"this run is configured with {key}={want!r}; refusing to "
+                f"resume across a layout change — stale ckpt_dir?")
+
+
 def restore_checkpoint(directory: str, tree_like, *, step: int | None = None,
                        shardings=None) -> tuple[Any, int, dict]:
     """Restore into the structure of ``tree_like``.  With ``shardings``

@@ -42,6 +42,22 @@ Registry contract
   Providers are imported lazily on first dispatch (``_PROVIDERS``), so
   importing this module costs nothing and there are no import cycles —
   this module never imports the core modules at top level.
+
+Streaming registry
+------------------
+A parallel registry serves the constant-memory chunked path:
+:func:`simulate_stream` dispatches ``(policy, engine)`` to cores that
+consume a :class:`~repro.core.workload.ChunkSource` (chunk generator)
+instead of a materialized batch and return a
+:class:`~repro.core.sim_batch.StreamResult` of online-folded
+observables — peak memory O(R · chunk_jobs), independent of the stream
+length.  Streaming cores register via :func:`register_stream` under
+``"jax"`` and ``"jax-shard"``; on the replay path the result is
+bit-identical (rtol=0) to ``stream_fold(simulate(...))`` for every
+chunk schedule, and engines without a chunked carry (``pallas``,
+``python``) reject loudly naming the engines that stream
+(:func:`get_stream`).  Streams checkpoint mid-flight through
+``ckpt_dir=``/``resume=`` — see :mod:`repro.core.sim_batch`.
 """
 
 from __future__ import annotations
@@ -64,6 +80,16 @@ _PROVIDERS = (
 
 _REGISTRY: dict[tuple[str, str], Callable[..., "BatchSimResult"]] = {}
 
+#: streaming cores live in their own registry: a stream core consumes a
+#: ChunkSource (not a BatchTrace) and returns a StreamResult, so the two
+#: call signatures must never be confused by a registry lookup
+_STREAM_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+#: engines whose scan cores support the failure axis (``failures=``) —
+#: shared with :mod:`repro.kernels.msj_scan.ops` so the pallas rejection
+#: message names them without hardcoding the list in two places
+FAILURE_ENGINES = ("python", "jax", "jax-shard")
+
 #: short benchmark-CLI aliases -> canonical policy names (Policy.name)
 ALIASES = {
     "bs": "bs-fcfs", "balanced-splitting": "bs-fcfs",
@@ -83,6 +109,24 @@ def register(policy: str, engine: str):
         if key in _REGISTRY:
             raise ValueError(f"engine core {key} registered twice")
         _REGISTRY[key] = fn
+        return fn
+    return deco
+
+
+def register_stream(policy: str, engine: str):
+    """Decorator: register a *streaming* core under ``(policy, engine)``.
+
+    A stream core has the signature ``core(source, *, chunk_jobs,
+    total_jobs=None, partition=None, wl=None, **kw) -> StreamResult`` —
+    it pulls per-chunk :class:`~repro.core.workload.BatchTrace`\\ s from a
+    :class:`~repro.core.workload.ChunkSource` and folds observables
+    online, never materializing the full [R, J] batch.
+    """
+    def deco(fn: Callable):
+        key = (policy, engine)
+        if key in _STREAM_REGISTRY:
+            raise ValueError(f"stream core {key} registered twice")
+        _STREAM_REGISTRY[key] = fn
         return fn
     return deco
 
@@ -197,3 +241,97 @@ def simulate(policy: str, batch: "BatchTrace", *, engine: str = "jax",
     validate_batch(batch, partition=partition,
                    failures=fb if hasattr(fb, "k") else None)
     return core(batch, partition=partition, wl=wl, **kw)
+
+
+def stream_registered() -> tuple[tuple[str, str], ...]:
+    """All registered streaming ``(policy, engine)`` keys, sorted."""
+    _ensure_registered()
+    return tuple(sorted(_STREAM_REGISTRY))
+
+
+def stream_engines_for(policy: str) -> tuple[str, ...]:
+    """Engines with a streaming core for a policy (canonicalized), sorted."""
+    pol = canonical(policy)
+    return tuple(sorted(e for p, e in stream_registered() if p == pol))
+
+
+def get_stream(policy: str, engine: str) -> Callable:
+    """The registered streaming core for ``(policy, engine)``.
+
+    Engines without a chunked carry path (``pallas`` fuses the whole scan
+    into one kernel launch; ``python`` replays discrete events over the
+    full trace) reject loudly, naming the engines that *do* stream.
+    """
+    _ensure_registered()
+    pol = canonical(policy)
+    core = _STREAM_REGISTRY.get((pol, engine))
+    if core is not None:
+        return core
+    streaming = stream_engines_for(pol)
+    if streaming:
+        raise ValueError(
+            f"engine {engine!r} has no streaming core for policy {pol!r}; "
+            f"streaming engines: {list(streaming)}")
+    raise KeyError(
+        f"no streaming core for policy {policy!r}; registered streaming "
+        f"policies: {sorted({p for p, _ in _STREAM_REGISTRY})}")
+
+
+def simulate_stream(policy: str, source, *, engine: str = "jax",
+                    chunk_jobs: int, total_jobs: int | None = None,
+                    partition=None, wl=None, **kw):
+    """Stream ``source`` through the ``(policy, engine)`` chunked core.
+
+    The constant-memory counterpart of :func:`simulate`: instead of one
+    monolithic [R, J] batch, the simulation is a sequence of
+    ``chunk_jobs``-sized chunk scans, each resumed from the previous
+    chunk's carry, with observables (online Welford mean/M2 of response
+    and wait, queueing/helper/routing probabilities) folded into a
+    running accumulator — peak memory is O(R · chunk_jobs), independent
+    of the stream length.
+
+    ``source`` is a :class:`~repro.core.workload.ChunkSource` — replayed
+    (:class:`~repro.core.workload.TraceReplaySource`, or a ``BatchTrace``
+    which is wrapped automatically), bootstrap
+    (``BatchTrace.from_trace(..., stream=True)``), or generated
+    (:class:`~repro.core.workload.PoissonSource` and the non-stationary
+    :class:`~repro.core.workload.DiurnalSource` /
+    :class:`~repro.core.workload.FlashCrowdSource` /
+    :class:`~repro.core.workload.MMPPSource`).  ``total_jobs`` bounds an
+    unbounded source (required there; defaults to ``source.total_jobs``
+    for finite ones).
+
+    Determinism contract: on the replay path, the result equals
+    ``stream_fold(simulate(policy, batch, engine=...), ...)``
+    *bit-identically* (rtol=0) for every chunk size — the chunk
+    boundaries are purely an execution-shape choice.  Streaming cores
+    register via :func:`register_stream` under ``"jax"`` and
+    ``"jax-shard"``; ``pallas``/``python`` reject loudly
+    (:func:`get_stream`).
+
+    Checkpointing: pass ``ckpt_dir=`` to save the carry + accumulator +
+    source state after every chunk through :mod:`repro.checkpoint`;
+    ``resume=True`` restores the latest chunk and continues, failing
+    loudly (``checkpoint.require_layout``) if the stream layout
+    (``chunk_jobs``, ``reps``, ``k``, policy, ...) changed since the
+    checkpoint was written.  A 10^8-job stream is SIGKILL-resumable
+    mid-stream.  Extra keywords (``queue_cap``, ``backlog_cap``,
+    ``block``, ``seed`` ...) pass through to the core.
+    """
+    from .workload import BatchTrace, TraceReplaySource
+
+    if isinstance(source, BatchTrace):
+        source = TraceReplaySource(source)
+    core = get_stream(policy, engine)
+    if chunk_jobs < 1:
+        raise ValueError(f"chunk_jobs must be >= 1, got {chunk_jobs}")
+    if total_jobs is None:
+        total_jobs = source.total_jobs
+    if total_jobs is None:
+        raise ValueError(
+            "total_jobs is required for an unbounded source "
+            f"({type(source).__name__} has source.total_jobs=None)")
+    if total_jobs < 1:
+        raise ValueError(f"total_jobs must be >= 1, got {total_jobs}")
+    return core(source, chunk_jobs=chunk_jobs, total_jobs=total_jobs,
+                partition=partition, wl=wl, policy=policy, **kw)

@@ -74,11 +74,15 @@ from . import engines
 from . import failures as flr
 from .partition import balanced_partition
 from .sim_batch import (_backends_initialized, _bs_fail_args, _bs_result,
-                        _call, _class_inputs, _fcfs_inputs, _fcfs_result,
-                        _merged_fcfs_inputs, _modbs_result, _partition_args,
-                        _with_drain_obs)
-from .sim_jax import (_bs_args, _bs_core, _bs_fail_core, _fcfs_core,
-                      _fcfs_fail_core, _modbs_core, _modbs_fail_core)
+                        _BS_CARRY_DTYPES, _bs_stream_args, _bs_stream_drive,
+                        _call, _class_inputs, _dev, _fcfs_inputs,
+                        _fcfs_result, _fcfs_stream_init, _merged_fcfs_inputs,
+                        _modbs_result, _modbs_stream_init, _partition_args,
+                        _scan_stream, _slice_stream_result,
+                        _stream_partition, _with_drain_obs)
+from .sim_jax import (_bs_args, _bs_core, _bs_fail_core, _bs_stream_core,
+                      _fcfs_core, _fcfs_fail_core, _fcfs_stream_core,
+                      _modbs_core, _modbs_fail_core, _modbs_stream_core)
 from .workload import BatchTrace
 
 _FLAG = "--xla_force_host_platform_device_count"
@@ -464,3 +468,184 @@ def _bs_jax_shard(batch, *, partition=None, wl=None, queue_cap=None,
     return _with_drain_obs(
         _bs_result(batch, np.asarray(tagged)[:R], np.asarray(rec_t)[:R],
                    np.asarray(ovf)[:R], q_cap), batch, failures)
+
+
+# --------------------------------------------------------------------------
+# Streaming (chunked-carry) execution over the mesh.
+# --------------------------------------------------------------------------
+#
+# The same chunk loop as engine="jax" (the drivers of sim_batch are reused
+# verbatim), with the per-chunk scan dispatched through shard_map: the
+# carry and the chunk job buffers all shard along the replications axis.
+# The chunk source is wrapped so every chunk arrives pre-padded to a
+# mesh-size multiple (repeating the last lane — a valid sample path), the
+# drivers run at the padded lane count, and the folded StreamResult is
+# sliced back to the true replication count at the end.  Checkpoint
+# layouts record the *padded* count: a stream checkpointed under one mesh
+# size resumes on another only when the padded counts agree — anything
+# else fails loudly via require_layout.
+
+
+@partial(jax.jit, static_argnums=(4,))
+def _fcfs_stream_shard_call(carry, arrival, need, service, mesh: Mesh):
+    body = lambda c, a, n, v: jax.vmap(_fcfs_stream_core)(c, a, n, v)
+    return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 4,
+                     out_specs=(P("r"), P("r")))(carry, arrival, need,
+                                                 service)
+
+
+@partial(jax.jit, static_argnums=(5, 6))
+def _modbs_stream_shard_call(carry, arrival, cls, need, service, s_max: int,
+                             mesh: Mesh):
+    body = lambda c, a, cc, n, v: jax.vmap(
+        lambda c1, a1, cc1, n1, v1: _modbs_stream_core(
+            c1, a1, cc1, n1, v1, s_max))(c, a, cc, n, v)
+    return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 5,
+                     out_specs=(P("r"), P("r")))(
+        carry, arrival, cls, need, service)
+
+
+@partial(jax.jit, static_argnums=(6, 7, 8, 9, 10, 11))
+def _bs_stream_shard_call(carry, arrival, cls, need, service, horizon,
+                          C: int, s_max: int, h: int, q_cap: int,
+                          length: int, mesh: Mesh):
+    body = lambda c, a, cc, n, v, hz: _bs_stream_core(
+        a, cc, n, v, hz, c, C, s_max, h, q_cap, length)
+    return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 6,
+                     out_specs=(P("r"), P("r"), P("r")))(
+        carry, arrival, cls, need, service, horizon)
+
+
+class _PaddedChunkSource:
+    """A chunk source whose lanes are padded to a mesh-size multiple.
+
+    Every emitted chunk repeats its last replication lane up to the next
+    multiple of ``n_dev`` (``_pad_batch``); state handling passes through
+    to the inner source, so determinism and resume semantics are
+    untouched — the padded lanes are exact copies of a real lane.
+    """
+
+    def __init__(self, inner, n_dev: int):
+        self._inner = inner
+        self._n_dev = int(n_dev)
+        R = int(inner.reps)
+        self.reps = R + (-R) % self._n_dev
+
+    @property
+    def k(self):
+        return self._inner.k
+
+    @property
+    def C(self):
+        return self._inner.C
+
+    @property
+    def total_jobs(self):
+        return self._inner.total_jobs
+
+    def init_state(self):
+        return self._inner.init_state()
+
+    def next_chunk(self, state, n: int):
+        batch, state = self._inner.next_chunk(state, n)
+        padded, _ = _pad_batch(batch, self._n_dev)
+        return padded, state
+
+
+@engines.register_stream("fcfs", "jax-shard")
+def _fcfs_stream_shard(source, *, chunk_jobs, total_jobs, partition=None,
+                       wl=None, policy="fcfs", devices=None, block=4096,
+                       ckpt_dir=None, resume=False):
+    """Streaming FCFS with the replications axis sharded over the mesh."""
+    mesh = local_mesh(devices)
+    R = int(source.reps)
+    psrc = _PaddedChunkSource(source, mesh.size)
+
+    def chunk_fn(carry, batch):
+        with enable_x64():
+            carry, starts = _call(_fcfs_stream_shard_call, carry,
+                                  *_fcfs_inputs(batch), mesh)
+        starts = np.asarray(starts)
+        return (carry, starts + batch.service - batch.arrival,
+                starts - batch.arrival, None, None)
+
+    sr = _scan_stream(
+        psrc, policy=policy, chunk_jobs=chunk_jobs, total_jobs=total_jobs,
+        n_carry=2, init_fn=partial(_fcfs_stream_init, k=int(source.k)),
+        chunk_fn=chunk_fn, has_helper=False, block=block,
+        ckpt_dir=ckpt_dir, resume=resume)
+    return _slice_stream_result(sr, R)
+
+
+@engines.register_stream("modbs-fcfs", "jax-shard")
+def _modbs_stream_shard(source, *, chunk_jobs, total_jobs, partition=None,
+                        wl=None, policy="modbs-fcfs", devices=None,
+                        block=4096, ckpt_dir=None, resume=False):
+    """Streaming ModifiedBS-FCFS, replication-sharded."""
+    part = _stream_partition(partition, wl)
+    slots = np.asarray(part.slots, np.int32)
+    s_max = int(slots.max())
+    h = int(part.helpers)
+    mesh = local_mesh(devices)
+    R = int(source.reps)
+    psrc = _PaddedChunkSource(source, mesh.size)
+
+    def chunk_fn(carry, batch):
+        if h < int(batch.need.max()):
+            raise ValueError("helper set smaller than the largest "
+                             "server need")
+        with enable_x64():
+            carry, (blocked, starts) = _call(
+                _modbs_stream_shard_call, carry, *_class_inputs(batch),
+                s_max, mesh)
+        blocked = np.asarray(blocked)
+        starts = np.asarray(starts)
+        return (carry, starts + batch.service - batch.arrival,
+                starts - batch.arrival, blocked, blocked)
+
+    sr = _scan_stream(
+        psrc, policy=policy, chunk_jobs=chunk_jobs, total_jobs=total_jobs,
+        n_carry=3,
+        init_fn=partial(_modbs_stream_init, slots=slots, s_max=s_max, h=h),
+        chunk_fn=chunk_fn, has_helper=True, part=part, block=block,
+        ckpt_dir=ckpt_dir, resume=resume,
+        layout_extra={"C": int(slots.shape[0]), "s_max": s_max, "h": h})
+    return _slice_stream_result(sr, R)
+
+
+def _bs_chunk_scan_shard(C: int, s_max: int, h: int, q_cap: int,
+                         mesh: Mesh):
+    def scan(carry, rec, horizon, length):
+        arr, cl, nd, svc = rec
+        with enable_x64():
+            dev = tuple(jnp.asarray(c, d)
+                        for c, d in zip(carry, _BS_CARRY_DTYPES))
+            out, tagged, rec_t = _call(
+                _bs_stream_shard_call, dev,
+                _dev(arr, jnp.float64), _dev(cl, jnp.int32),
+                _dev(nd, jnp.int32), _dev(svc, jnp.float64),
+                _dev(horizon, jnp.float64), C, s_max, h, q_cap, length,
+                mesh)
+        return ([np.asarray(x) for x in out], np.asarray(tagged),
+                np.asarray(rec_t))
+    return scan
+
+
+@engines.register_stream("bs-fcfs", "jax-shard")
+def _bs_stream_shard(source, *, chunk_jobs, total_jobs, partition=None,
+                     wl=None, policy="bs-fcfs", queue_cap=None,
+                     backlog_cap=1024, devices=None, block=4096,
+                     ckpt_dir=None, resume=False):
+    """Streaming BS-FCFS (Definition 1), replication-sharded."""
+    part, slots, s_max, h, q_cap, B = _bs_stream_args(
+        partition, wl, chunk_jobs, queue_cap, backlog_cap)
+    mesh = local_mesh(devices)
+    R = int(source.reps)
+    psrc = _PaddedChunkSource(source, mesh.size)
+    sr = _bs_stream_drive(
+        psrc, policy=policy, chunk_jobs=chunk_jobs, total_jobs=total_jobs,
+        part=part, slots=slots, s_max=s_max, h=h, q_cap=q_cap, B=B,
+        scan_fn=_bs_chunk_scan_shard(int(slots.shape[0]), s_max, h, q_cap,
+                                     mesh),
+        block=block, ckpt_dir=ckpt_dir, resume=resume)
+    return _slice_stream_result(sr, R)

@@ -152,17 +152,34 @@ def _fcfs_sorted_step(W, t_prev, t, n, svc):
     return W_new, start
 
 
-def _fcfs_core(arrival, need, service, k: int):
-    """Start times of one FCFS sample path (un-jitted scan core)."""
-    def step(carry, inp):
-        W, t_prev = carry
+def _fcfs_carry0(k: int, dt):
+    """Empty-system FCFS carry: (W sorted free times, last start)."""
+    return jnp.zeros(k, dtype=dt), jnp.zeros((), dt)
+
+
+def _fcfs_stream_core(carry, arrival, need, service):
+    """One FCFS chunk scan resumed from ``carry`` (un-jitted, single lane).
+
+    The carry is the complete Kiefer–Wolfowitz state ``(W, t_prev)``: a
+    simulation over any trace is a sequence of these chunk scans, each
+    resumed from the previous chunk's carry — ``lax.scan`` is sequential,
+    so the chunked path is bit-identical to one monolithic scan by
+    construction.  :func:`_fcfs_core` is the one-chunk special case;
+    :mod:`repro.core.sim_batch` drives multi-chunk streams.
+    """
+    def step(c, inp):
+        W, t_prev = c
         t, n, svc = inp
         W_new, start = _fcfs_sorted_step(W, t_prev, t, n, svc)
         return (W_new, start), start
 
-    W0 = jnp.zeros(k, dtype=arrival.dtype)
-    (_, _), starts = jax.lax.scan(step, (W0, jnp.zeros((), arrival.dtype)),
-                                  (arrival, need, service))
+    return jax.lax.scan(step, carry, (arrival, need, service))
+
+
+def _fcfs_core(arrival, need, service, k: int):
+    """Start times of one FCFS sample path (un-jitted scan core)."""
+    _, starts = _fcfs_stream_core(_fcfs_carry0(k, arrival.dtype),
+                                  arrival, need, service)
     return starts
 
 
@@ -279,12 +296,23 @@ def _modbs_init(slots, s_max: int, h: int, dt):
     return comp0, jnp.zeros(h, dtype=dt), jnp.zeros((), dt)
 
 
+def _modbs_stream_core(carry, arrival, cls, need, service, s_max: int):
+    """One ModBS-FCFS chunk scan resumed from ``carry`` (single lane).
+
+    ``carry = (comp, W, t_prev)`` — per-class A-completion matrix, helper
+    free-time vector, last helper start — is the complete state, so chunked
+    resumption is bit-identical to the monolithic scan (:func:`_modbs_core`
+    is the one-chunk special case over the :func:`_modbs_init` carry).
+    """
+    return jax.lax.scan(partial(_modbs_step, s_max=s_max), carry,
+                        (arrival, cls, need, service))
+
+
 def _modbs_core(arrival, cls, need, service, slots, s_max: int, h: int):
     """Per-class loss queues (padded to s_max) + helper FCFS on h servers."""
     carry0 = _modbs_init(slots, s_max, h, arrival.dtype)
-    (_, _, _), (blocked, starts) = jax.lax.scan(
-        partial(_modbs_step, s_max=s_max), carry0,
-        (arrival, cls, need, service))
+    (_, _, _), (blocked, starts) = _modbs_stream_core(
+        carry0, arrival, cls, need, service, s_max)
     return blocked, starts
 
 
@@ -576,6 +604,177 @@ def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
     return tagged.T, rec_t.T, ovf
 
 
+
+
+def _bs_stream_make_step(jobrec, horizon, C: int, s_max: int, h: int,
+                         q_cap: int):
+    """Chunk-resumable variant of ``_bs_make_step`` (streaming execution).
+
+    Identical event semantics with two additions that make a *bounded*
+    scan over one chunk of the job stream exact:
+
+    * ``horizon`` [R] is the first arrival time of the *next* chunk (inf
+      on the last chunk).  Helper commits are only processed while
+      ``Th <= horizon`` and A-completions while ``Tc < horizon`` — every
+      later event is deferred, and because deferral leaves the carry
+      untouched, the next chunk's scan recomputes the identical candidate
+      times and processes the deferred events first, in the exact order
+      the monolithic scan would have (the tie asymmetry matches the
+      monolithic selectors: at ``t == horizon`` a commit still belongs to
+      this chunk while a completion yields to the next chunk's equal-time
+      arrival, which the monolithic ``Tc < Ta`` tie-break also orders
+      first).
+    * trailing steps past a chunk's true event count are no-ops, so the
+      selectors carry the guards of the failure scan (``Tc`` below the
+      ``_BIG`` sentinel, ``ai < J``), and the carry grows a per-lane
+      processed-event counter ``ne`` — each fed job contributes exactly
+      two events over the whole stream (arrival + A-completion-or-commit),
+      so the host driver knows precisely how many events remain at drain
+      time.
+    """
+    R, J, _ = jobrec.shape
+    dt = jobrec.dtype
+    INF = jnp.asarray(jnp.inf, dt)
+    GUARD = jnp.asarray(0.5 * _BIG, dt)
+    lanes = jnp.arange(R)
+    lanes1 = lanes[:, None]
+    ar = jnp.arange(h)[None, :]
+
+    def taa(a, idx):
+        return jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+
+    def rec(idx):
+        return jnp.take_along_axis(jobrec, idx[:, None, None], axis=1)[:, 0]
+
+    def step(carry, _):
+        (ai, st, comp, ring, heads, W, t_prev, t_hol, ovf, ne) = carry
+
+        j_arr = jnp.minimum(ai, J - 1)
+        rec_a = rec(j_arr)
+        Ta = jnp.where(ai < J, rec_a[:, 0], INF)
+        cm = jnp.argmin(comp, axis=1).astype(jnp.int32)
+        Tc = taa(comp, cm)
+        gh_job = jnp.min(heads, axis=1)
+        has_head = gh_job < J
+        jh = jnp.minimum(gh_job, J - 1)
+        rec_h = rec(jh)
+        nh = rec_h[:, 3].astype(jnp.int32)
+        Wn = taa(W, nh - 1)
+        Th = jnp.where(has_head,
+                       jnp.maximum(jnp.maximum(rec_h[:, 0], t_hol),
+                                   jnp.maximum(t_prev, Wn)),
+                       INF)
+
+        is_commit = (Th <= Tc) & (Th <= Ta) & (Th <= horizon)
+        is_comp = ((~is_commit) & (Tc < Ta) & (Tc < horizon)
+                   & (Tc < GUARD))
+        is_arr = (~is_commit) & (~is_comp) & (ai < J)
+        ne = ne + jnp.where(is_commit | is_comp | is_arr, 1, 0)
+
+        # --- arrival (rule 1), as in _bs_make_step
+        c_arr = rec_a[:, 2].astype(jnp.int32)
+        g = jnp.take_along_axis(
+            st, jnp.stack([c_arr, C + c_arr, 2 * C + c_arr], 1), axis=1)
+        free_c, head_c, tail_c = g[:, 0], g[:, 1], g[:, 2]
+        has_slot = is_arr & (free_c > 0)
+        enq = is_arr & ~has_slot
+        ring = ring.at[lanes,
+                       jnp.where(enq, c_arr * q_cap + tail_c % q_cap,
+                                 C * q_cap)].set(j_arr, mode="drop")
+        ovf = ovf | (enq & (tail_c + 1 - head_c > q_cap))
+        ai = ai + jnp.where(is_arr, 1, 0)
+
+        # --- A-completion: rule-3 pull
+        c_comp = cm // s_max
+        pull = taa(heads, c_comp)
+        can_pull = is_comp & (pull < J)
+        jp = jnp.minimum(pull, J - 1)
+        t_hol = jnp.where(can_pull & (pull == gh_job),
+                          jnp.maximum(t_hol, Tc), t_hol)
+
+        # --- comp update, as in _bs_make_step
+        ins = has_slot | can_pull
+        j_ins = jnp.where(is_arr, j_arr, jp)
+        t_ins = jnp.where(is_arr, Ta, Tc)
+        svc_ins = rec(j_ins)[:, 1]
+        row = jnp.take_along_axis(
+            comp, c_arr[:, None] * s_max + jnp.arange(s_max)[None, :],
+            axis=1)
+        pos = jnp.argmax(row, axis=1).astype(jnp.int32)
+        OOBC = C * s_max
+        idx2 = jnp.stack(
+            [jnp.where(is_comp & ~can_pull, cm, OOBC),
+             jnp.where(has_slot, c_arr * s_max + pos,
+                       jnp.where(can_pull, cm, OOBC))], 1)
+        val2 = jnp.stack([jnp.full(R, _BIG, dt), t_ins + svc_ins], 1)
+        comp = comp.at[lanes1, idx2].set(val2, mode="drop")
+
+        # --- helper commit (batched KW step), as in _bs_make_step
+        comp_h = Th + rec_h[:, 1]
+        p = (jnp.sum(W <= comp_h[:, None], axis=1).astype(jnp.int32)
+             - nh)[:, None]
+        nh_ = nh[:, None]
+        W_roll = jnp.take_along_axis(
+            W, jnp.minimum(jnp.where(ar < p, ar + nh_, ar), h - 1), axis=1)
+        W2 = jnp.where((ar >= p) & (ar < p + nh_), comp_h[:, None], W_roll)
+        W = jnp.where(is_commit[:, None], W2, W)
+        t_prev = jnp.where(is_commit, Th, t_prev)
+
+        # --- counter updates, as in _bs_make_step
+        did_pop = can_pull | is_commit
+        pop_c = jnp.where(can_pull, c_comp, rec_h[:, 2].astype(jnp.int32))
+        OOBS = 3 * C
+        idx3 = jnp.stack(
+            [jnp.where(is_arr, c_arr, jnp.where(is_comp, c_comp, OOBS)),
+             jnp.where(enq, 2 * C + c_arr, OOBS),
+             jnp.where(did_pop, C + pop_c, OOBS)], 1)
+        val3 = jnp.stack(
+            [jnp.where(has_slot, -1, 0) +
+             jnp.where(is_comp & ~can_pull, 1, 0),
+             jnp.ones(R, jnp.int32), jnp.ones(R, jnp.int32)], 1)
+        st = st.at[lanes1, idx3].add(val3, mode="drop")
+
+        # --- per-class head refresh, as in _bs_make_step
+        gp = jnp.take_along_axis(
+            st, jnp.stack([C + pop_c, 2 * C + pop_c], 1), axis=1)
+        nxt = jnp.where(gp[:, 0] < gp[:, 1],
+                        taa(ring, pop_c * q_cap + gp[:, 0] % q_cap), J)
+        hidx = jnp.stack([jnp.where(enq & (head_c == tail_c), c_arr, C),
+                          jnp.where(did_pop, pop_c, C)], 1)
+        hval = jnp.stack([j_arr, nxt], 1)
+        heads = heads.at[lanes1, hidx].set(hval, mode="drop")
+
+        tagged = jnp.where(is_commit, jh + 2 * J,
+                           jnp.where(ins, j_ins,
+                                     jnp.where(enq, j_arr + J, -1)))
+        rec_t = jnp.where(is_commit, Th, t_ins)
+        out = (tagged, rec_t)
+        return (ai, st, comp, ring, heads, W, t_prev, t_hol, ovf, ne), out
+
+    return step
+
+
+def _bs_stream_core(arrival, cls, need, service, horizon, carry,
+                    C: int, s_max: int, h: int, q_cap: int, length: int):
+    """One BS-FCFS chunk scan resumed from ``carry``, batched over lanes.
+
+    ``arrival``/``cls``/``need``/``service`` are the chunk's job records
+    [R, J] — the host driver prepends the still-queued jobs of earlier
+    chunks (re-based to local indices 0..B-1 in global-FIFO order, see
+    ``sim_batch._bs_rebase``) so every ring-buffer reference stays in
+    bounds.  ``horizon`` [R] is the first arrival of the next chunk (inf
+    when draining).  ``carry`` is the full event-scan state
+    ``(ai, st, comp, ring, heads, W, t_prev, t_hol, ovf, ne)``; the scan
+    runs ``length`` steps (enough for every event dated before the
+    horizon — trailing steps no-op) and returns the updated carry plus
+    the tagged per-event record streams of ``_bs_core``.
+    """
+    dt = arrival.dtype
+    jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
+                       axis=2)
+    step = _bs_stream_make_step(jobrec, horizon, C, s_max, h, q_cap)
+    carry, (tagged, rec_t) = jax.lax.scan(step, carry, None, length=length)
+    return carry, tagged.T, rec_t.T
 
 
 def _bs_fail_make_step(jobrec, failrec, C: int, s_max: int, h: int,

@@ -61,11 +61,13 @@ def bs_scan(arrival, cls, need, service, *, slots, s_max: int, h: int,
 def _no_failures(failures, policy: str):
     """The fused kernels have no capacity-mask carry (ROADMAP: open item)."""
     if failures is not None:
+        supported = ", ".join(f"engine={e!r}"
+                              for e in engines.FAILURE_ENGINES)
         raise NotImplementedError(
             f"engine='pallas' does not support fault injection yet "
             f"(policy {policy!r}): the fused kernels carry no capacity "
-            f"mask — use engine='jax'/'jax-shard' (drain) or "
-            f"engine='python' (kill)")
+            f"mask — engines that do support failures=: {supported} "
+            f"('python' kills in-flight jobs, 'jax'/'jax-shard' drain)")
 
 
 # -- engine="pallas" registry cores -----------------------------------------

@@ -176,3 +176,64 @@ def test_fig1_sigkill_then_resume_byte_identical(tmp_path):
     again = _run(_fig1_cmd(d, resume=True))
     assert again.returncode == 0, again.stderr
     assert again.stdout == resumed.stdout
+
+
+# -- PR 7: SIGKILL a simulate_stream driver mid-stream -----------------------
+
+
+_STREAM_DRIVER = """\
+import sys
+
+from repro.core import engines
+from repro.core.workload import DiurnalSource, figure1_workload
+
+ckpt = sys.argv[1]
+wl = figure1_workload(32)
+src = DiurnalSource(wl, reps=2, seed=7, period=30.0)
+res = engines.simulate_stream(
+    "modbs-fcfs", src, chunk_jobs=200, total_jobs=40_000, wl=wl,
+    ckpt_dir=ckpt, resume="--resume" in sys.argv)
+for f in ("mean_response", "var_response", "mean_wait", "var_wait",
+          "p_wait", "p_helper", "p_routed"):
+    print(f, getattr(res, f).tobytes().hex())
+"""
+
+
+def test_stream_sigkill_then_resume_byte_identical(tmp_path):
+    """SIGKILL a long simulate_stream mid-stream; ``resume=True`` must
+    finish it with every observable byte-identical to an uninterrupted
+    run — the carry, the Welford accumulator, and the *pre-fetch* source
+    state all ride the per-chunk checkpoint."""
+    driver = str(tmp_path / "driver.py")
+    with open(driver, "w") as f:
+        f.write(_STREAM_DRIVER)
+    cmd = lambda d, *a: [sys.executable, driver, d, *a]
+
+    clean = _run(cmd(str(tmp_path / "a")))
+    assert clean.returncode == 0, clean.stderr
+
+    d = str(tmp_path / "b")
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [os.path.join(os.path.dirname(__file__), "..", "src"),
+                os.environ.get("PYTHONPATH", "")])}
+    proc = subprocess.Popen(cmd(d), env=env, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            break                     # finished before we could kill it
+        if os.path.isdir(d) and any(
+                e.startswith("step_") and not e.endswith(".tmp")
+                for e in os.listdir(d)):
+            proc.send_signal(signal.SIGKILL)
+            proc.wait()
+            break
+        time.sleep(0.02)
+    else:
+        proc.kill()
+        proc.wait()
+
+    resumed = _run(cmd(d, "--resume"))
+    assert resumed.returncode == 0, resumed.stderr
+    assert resumed.stdout == clean.stdout

@@ -277,23 +277,31 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     assert on_disk["schema"] == bench_sim.SCHEMA
     rows = on_disk["rows"]
     # fig1: 5 engines x 3 policies per k; traces: 4 engines x 3 policies;
-    # failures: 3 engines x 3 policies (no pallas — no capacity mask)
-    assert len(rows) == 15 * len(on_disk["config"]["ks"]) + 12 + 9
+    # failures: 3 engines x 3 policies (no pallas — no capacity mask);
+    # streaming: jax-batch x 3 policies (no python baseline)
+    assert len(rows) == 15 * len(on_disk["config"]["ks"]) + 12 + 9 + 3
     assert {r["bench"] for r in rows} == {"fig1-critical", "traces",
-                                          "failures"}
+                                          "failures", "streaming"}
     for r in rows:
         assert set(bench_sim.ROW_KEYS) <= set(r)
         assert r["engine"] in bench_sim.ALL_ENGINES
         assert r["jobs_per_sec"] > 0 and r["wall_s"] > 0
         assert r["device_count"] >= 1
-        if r["engine"] == "python":
+        if r["engine"] == "python" or r["bench"] == "streaming":
             assert r["speedup_vs_python"] is None
         else:
             assert r["speedup_vs_python"] > 0
+    streaming = [r for r in rows if r["bench"] == "streaming"]
+    assert {r["policy"] for r in streaming} == {"fcfs", "modbs-fcfs",
+                                                "bs-fcfs"}
+    for r in streaming:
+        assert r["chunk_jobs"] >= 1     # streaming-only extra key
+        assert r["peak_rss_mb"] > 0
     # the point of the substrate: batched beats the event engine — in the
     # synthetic scenario, on the empirical bootstrap batch, and with the
     # failure branch live in every scan step
-    batched = [r for r in rows if r["engine"] == "jax-batch"]
+    batched = [r for r in rows if r["engine"] == "jax-batch"
+               and r["bench"] != "streaming"]
     assert {r["bench"] for r in batched} == {"fig1-critical", "traces",
                                              "failures"}
     assert all(r["speedup_vs_python"] > 1 for r in batched)

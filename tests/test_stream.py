@@ -1,0 +1,274 @@
+"""Streaming chunked-scan engine: the PR-7 contract tests.
+
+The pins, in registry-iterating form:
+
+* **Bit-identity** — on the replay path (``TraceReplaySource``),
+  ``simulate_stream`` equals ``stream_fold(simulate(...))`` with rtol=0
+  for every registered streaming ``(policy, engine)``, at k in {32, 256},
+  across chunk schedules {one chunk, J/4, ragged last chunk}.  Chunk
+  boundaries are an execution-shape choice, not a model choice.
+* **Determinism + exact resume** — generator sources (diurnal λ(t),
+  flash crowd, MMPP) are *chunk-schedule-dependent by design* (each chunk
+  draws from a per-chunk-index Philox substream) but rerun-deterministic,
+  and a checkpointed stream resumed mid-way is byte-identical to the
+  uninterrupted run.
+* **Loud failure** — non-streaming engines reject naming the streaming
+  ones; stale checkpoint layouts name the mismatched key; a backlog
+  bigger than ``backlog_cap`` at a chunk boundary raises instead of
+  silently dropping jobs.
+"""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import engines
+from repro.core.sim_batch import StreamAccumulator, stream_fold
+from repro.core.workload import (Det, DiurnalSource, Exp, FlashCrowdSource,
+                                 Hyperexp, JobClass, LogNormal, MMPPSource,
+                                 PoissonSource, TraceReplaySource, Workload,
+                                 figure1_workload)
+
+POLICIES = ("fcfs", "modbs-fcfs", "bs-fcfs")
+FIELDS = ("mean_response", "var_response", "mean_wait", "var_wait",
+          "p_wait", "p_helper", "p_routed")
+
+
+def assert_stream_equal(a, b):
+    for f in FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None or y is None:
+            assert x is None and y is None, f
+        else:
+            assert np.array_equal(np.asarray(x), np.asarray(y)), f
+
+
+# -- the acceptance pin: chunked == monolithic, every engine, rtol=0 ---------
+
+
+def test_stream_registry_covers_scan_engines():
+    # every policy streams on exactly the scan engines; pallas/python
+    # reject via get_stream (tested below)
+    for pol in POLICIES:
+        assert engines.stream_engines_for(pol) == ("jax", "jax-shard")
+    assert len(engines.stream_registered()) == len(POLICIES) * 2
+
+
+@pytest.mark.parametrize("k", (32, 256))
+def test_stream_bit_identical_to_simulate(k):
+    wl = figure1_workload(k, theta=0.7)
+    J, R = 240, 2
+    batch = wl.sample_traces(J, R, seed=3)
+    for pol in POLICIES:
+        ref = stream_fold(engines.simulate(pol, batch, engine="jax", wl=wl))
+        for eng in engines.stream_engines_for(pol):
+            # one chunk / J divided evenly / ragged last chunk (100+100+40)
+            for chunk in (J, J // 4, 100):
+                sr = engines.simulate_stream(
+                    pol, TraceReplaySource(batch), engine=eng,
+                    chunk_jobs=chunk, total_jobs=J, wl=wl)
+                assert_stream_equal(ref, sr)
+
+
+def test_stream_accepts_bare_batch():
+    wl = figure1_workload(32)
+    batch = wl.sample_traces(120, 2, seed=1)
+    a = engines.simulate_stream("fcfs", TraceReplaySource(batch),
+                                chunk_jobs=50, wl=wl)
+    b = engines.simulate_stream("fcfs", batch, chunk_jobs=50, wl=wl)
+    assert_stream_equal(a, b)
+    assert a.jobs == 120              # total_jobs defaulted from the source
+
+
+# -- the online accumulator ---------------------------------------------------
+
+
+def test_accumulator_push_granularity_invariant(rng):
+    """Chan merges happen at fixed *global* block boundaries, so the split
+    into pushes cannot change a single bit of the folded moments."""
+    R, N = 3, 1000
+    resp = rng.gamma(2.0, size=(R, N))
+    wait = rng.gamma(1.0, size=(R, N))
+    served = rng.random((R, N)) < 0.3
+    one = StreamAccumulator(R, block=64)
+    one.push(resp, wait, served, served)
+    many = StreamAccumulator(R, block=64)
+    cuts = [0, 1, 8, 63, 64, 65, 200, 512, N]
+    for lo, hi in zip(cuts, cuts[1:]):
+        many.push(resp[:, lo:hi], wait[:, lo:hi],
+                  served[:, lo:hi], served[:, lo:hi])
+    (ca, ma, va), (cb, mb, vb) = one.finalize(), many.finalize()
+    assert ca == cb == N
+    assert np.array_equal(ma, mb) and np.array_equal(va, vb)
+    for f in ("n_wait", "n_served", "n_routed"):
+        assert np.array_equal(getattr(one, f), getattr(many, f)), f
+
+
+def test_accumulator_state_roundtrip(rng):
+    R = 2
+    acc = StreamAccumulator(R, block=32)
+    acc.push(rng.random((R, 50)), rng.random((R, 50)))
+    fresh = StreamAccumulator(R, block=32)
+    fresh.load_state(acc.state())
+    (ca, ma, va), (cb, mb, vb) = acc.finalize(), fresh.finalize()
+    assert ca == cb and acc.count == fresh.count
+    assert np.array_equal(ma, mb) and np.array_equal(va, vb)
+
+
+# -- generator sources: determinism and exact mid-stream resume --------------
+
+
+GENERATORS = (
+    lambda wl: PoissonSource(wl, reps=2, seed=5),
+    lambda wl: DiurnalSource(wl, reps=2, seed=5, period=40.0, amplitude=0.6),
+    lambda wl: FlashCrowdSource(wl, reps=2, seed=5, at=10.0, duration=20.0,
+                                factor=2.5),
+    lambda wl: MMPPSource(wl, reps=2, rates=(0.5, 3.0), stay=(8.0, 4.0),
+                          seed=5),
+)
+
+
+@pytest.mark.parametrize("make", GENERATORS)
+def test_generator_sources_rerun_deterministic(make):
+    wl = figure1_workload(32)
+    run = lambda: engines.simulate_stream("fcfs", make(wl), chunk_jobs=80,
+                                          total_jobs=320, wl=wl)
+    assert_stream_equal(run(), run())
+
+
+def test_generator_chunks_prefix_stable():
+    """Chunk i is drawn from its own Philox substream: re-fetching chunk i
+    from the saved pre-fetch state reproduces it bit-for-bit."""
+    wl = figure1_workload(32)
+    src = DiurnalSource(wl, reps=2, seed=9, period=40.0)
+    st = src.init_state()
+    chunks, states = [], [st]
+    for _ in range(3):
+        c, st = src.next_chunk(st, 50)
+        chunks.append(c)
+        states.append(st)
+    c1b, _ = src.next_chunk(states[1], 50)   # replay chunk 1 from its state
+    assert np.array_equal(chunks[1].arrival, c1b.arrival)
+    assert np.array_equal(chunks[1].service, c1b.service)
+    assert np.array_equal(chunks[1].cls, c1b.cls)
+
+
+# -- checkpoint / resume -----------------------------------------------------
+
+
+def _latest_steps(d):
+    return sorted(e for e in os.listdir(d)
+                  if e.startswith("step_") and not e.endswith(".tmp"))
+
+
+@pytest.mark.parametrize("pol", POLICIES)
+def test_stream_mid_resume_byte_identical(pol, tmp_path):
+    """Delete the final checkpoint of a finished stream and resume: the
+    driver re-fetches and re-scans the tail chunks, and every observable
+    comes out byte-identical to the uninterrupted run."""
+    wl = figure1_workload(32)
+    d = str(tmp_path / "ckpt")
+    kw = dict(chunk_jobs=60, total_jobs=300, wl=wl)
+    src = lambda: DiurnalSource(wl, reps=2, seed=4, period=30.0)
+    ref = engines.simulate_stream(pol, src(), **kw)
+    full = engines.simulate_stream(pol, src(), ckpt_dir=d, **kw)
+    assert_stream_equal(ref, full)
+    shutil.rmtree(os.path.join(d, _latest_steps(d)[-1]))   # "kill" late
+    res = engines.simulate_stream(pol, src(), ckpt_dir=d, resume=True, **kw)
+    assert_stream_equal(ref, res)
+
+
+def test_stream_resume_rejects_stale_chunk_layout(tmp_path):
+    wl = figure1_workload(32)
+    d = str(tmp_path / "ckpt")
+    src = lambda: PoissonSource(wl, reps=2, seed=4)
+    engines.simulate_stream("fcfs", src(), chunk_jobs=60, total_jobs=240,
+                            wl=wl, ckpt_dir=d)
+    with pytest.raises(ValueError, match="chunk_jobs"):
+        engines.simulate_stream("fcfs", src(), chunk_jobs=40,
+                                total_jobs=240, wl=wl, ckpt_dir=d,
+                                resume=True)
+    with pytest.raises(ValueError, match="stale ckpt_dir"):
+        engines.simulate_stream("fcfs", src(), chunk_jobs=40,
+                                total_jobs=240, wl=wl, ckpt_dir=d,
+                                resume=True)
+
+
+def test_stream_resume_needs_ckpt_dir():
+    wl = figure1_workload(32)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        engines.simulate_stream("fcfs", PoissonSource(wl, reps=2),
+                                chunk_jobs=60, total_jobs=120, wl=wl,
+                                resume=True)
+
+
+# -- loud failure modes ------------------------------------------------------
+
+
+def test_non_streaming_engines_reject_naming_streaming_ones():
+    wl = figure1_workload(32)
+    batch = wl.sample_traces(50, 2, seed=0)
+    for eng in ("pallas", "python"):
+        with pytest.raises(ValueError, match="jax.*jax-shard"):
+            engines.simulate_stream("fcfs", batch, engine=eng,
+                                    chunk_jobs=25, wl=wl)
+
+
+def test_pallas_failure_rejection_names_capable_engines():
+    """Satellite: the pallas failures= error must point at the engines
+    that DO support fault injection."""
+    from repro.core.failures import FailureProcess
+    wl = figure1_workload(32)
+    batch = wl.sample_traces(50, 2, seed=0)
+    proc = FailureProcess(mtbf=50.0, mttr=5.0, mode="drain")
+    with pytest.raises(NotImplementedError) as ei:
+        engines.simulate("fcfs", batch, engine="pallas", wl=wl,
+                         failures=proc)
+    msg = str(ei.value)
+    for eng in engines.FAILURE_ENGINES:
+        assert f"engine={eng!r}" in msg
+    assert ("python", "jax", "jax-shard") == engines.FAILURE_ENGINES
+
+
+def test_bs_stream_backlog_overflow_is_loud():
+    # heavily overloaded: the queue grows without bound, so a 1-job
+    # backlog cap must blow up at the first chunk boundary
+    wl = Workload(k=4, lam=8.0, classes=(JobClass("a", 2, Exp(1.0), 1.0),))
+    src = PoissonSource(wl, reps=2, seed=0)
+    with pytest.raises(RuntimeError, match="streaming backlog overflow"):
+        engines.simulate_stream("bs-fcfs", src, chunk_jobs=40,
+                                total_jobs=160, wl=wl, backlog_cap=1)
+
+
+def test_stream_source_exhaustion_is_loud():
+    wl = figure1_workload(32)
+    batch = wl.sample_traces(100, 2, seed=0)
+    with pytest.raises(ValueError, match="exhausted"):
+        engines.simulate_stream("fcfs", TraceReplaySource(batch),
+                                chunk_jobs=60, total_jobs=200, wl=wl)
+
+
+# -- satellite: Hyperexp constructor round-trip ------------------------------
+
+
+def test_hyperexp_mean_scv_roundtrip():
+    d = Hyperexp(0.25, 4.0, 0.5)
+    assert d.mean == pytest.approx(0.25 * 4.0 + 0.75 * 0.5)
+    second = 2 * (0.25 * 4.0**2 + 0.75 * 0.5**2)
+    assert d.scv() == pytest.approx(second / d.mean**2 - 1.0)
+    assert d.scv() > 1.0              # hyperexponential: scv >= 1
+    assert Hyperexp(0.5, 1.0, 1.0).scv() == pytest.approx(1.0)  # degenerate
+    rng = np.random.default_rng(0)
+    s = d.sample(rng, size=200_000)
+    assert s.mean() == pytest.approx(d.mean, rel=0.02)
+    assert s.var() / s.mean() ** 2 == pytest.approx(d.scv(), rel=0.05)
+    with pytest.raises(ValueError, match="p must be in"):
+        Hyperexp(1.5, 1.0, 2.0)
+    with pytest.raises(ValueError, match="positive"):
+        Hyperexp(0.5, -1.0, 2.0)
+    # sits next to the other constructors and streams through a workload
+    assert {Exp(1.0).kind, Det(1.0).kind, LogNormal(1.0, 0.5).kind,
+            d.kind} == {"exponential", "deterministic", "lognormal",
+                        "hyperexp"}
