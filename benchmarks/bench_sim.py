@@ -1,6 +1,6 @@
 """Simulation-substrate benchmark — tracks the hot-path perf trajectory.
 
-Four scenarios (``--scenario {fig1,traces,failures,streaming,all}``):
+Five scenarios (``--scenario {fig1,traces,failures,grid,streaming,all}``):
 the Fig. 1 critical-regime synthetic workload (``bench="fig1-critical"``),
 the Fig. 3 empirical-trace path (``bench="traces"``: an SDSC-SP2
 synthesized log, moving-block-bootstrapped into replications via
@@ -9,12 +9,16 @@ the degraded-capacity path (``bench="failures"``: the Fig. 1
 workload with drain-mode MTBF/MTTR outages merged into the event stream
 — the failure branch of every scan step is on the hot path, so a
 regression there is invisible to the clean scenarios; pallas has no
-capacity mask and ships no rows here), and the constant-memory streaming
-path (``bench="streaming"``: ``engines.simulate_stream`` chunk-scanning
-an unbounded Poisson source at fixed ``chunk_jobs`` — rows carry a
-``peak_rss_mb`` column whose flatness between the 10^6- and 10^7-job
-fcfs cells is the O(R x chunk_jobs) memory claim; see
-:func:`bench_streaming`).
+capacity mask and ships no rows here), the grid-native path
+(``bench="grid"``: a dense Fig.-1-workload k-grid as one k/J-padded
+compiled program per policy via ``engines.simulate_grid``, timed
+against the per-cell dispatch loop — ``compile_count`` must be 1 and
+``grid_speedup`` records the whole-grid win; see :func:`bench_grid`),
+and the constant-memory streaming path (``bench="streaming"``:
+``engines.simulate_stream`` chunk-scanning an unbounded Poisson source
+at fixed ``chunk_jobs`` — rows carry a ``peak_rss_mb`` column whose
+flatness between the 10^6- and 10^7-job fcfs cells is the
+O(R x chunk_jobs) memory claim; see :func:`bench_streaming`).
 Each times five engines (``--engines`` selects a subset):
 
 * ``python``    — the exact event-driven engine (the correctness oracle)
@@ -41,8 +45,10 @@ does this automatically in CI).  ``--smoke`` shrinks the config to
 finish in well under a minute on CPU (used by the tier-1 test).
 
 JAX engines are timed on a steady-state call (after one compile call,
-whose cost is reported separately as ``compile_s``); jobs/sec for the
-batched engines counts all replications.  With ``--cache-dir`` the
+whose cost is reported separately as ``compile_s`` and whose number of
+XLA program compiles — counted via ``jax.monitoring`` — lands in
+``compile_count``); jobs/sec for the batched engines counts all
+replications.  With ``--cache-dir`` the
 persistent compilation cache is enabled and each jitted cell additionally
 reports ``compile_warm_s`` — the retrace-plus-cache-load cost measured by
 clearing the in-memory jit caches and re-dispatching — so a compile-cache
@@ -73,7 +79,22 @@ SCHEMA = "bench_sim/v1"
 #: required keys of every row — the tier-1 smoke test checks these
 ROW_KEYS = ("bench", "engine", "policy", "k", "jobs", "reps", "wall_s",
             "jobs_per_sec", "compile_s", "speedup_vs_python",
-            "device_count", "compile_warm_s", "peak_rss_mb")
+            "device_count", "compile_warm_s", "peak_rss_mb",
+            "compile_count")
+
+#: process-wide XLA program-compile counter: every backend_compile event
+#: jax.monitoring emits bumps it, and ``_time_engine`` samples it around
+#: the first (compiling) call of each cell — the grid rows pin this at 1,
+#: the "one compiled program per figure grid" claim in executable form
+_COMPILES = [0]
+
+
+def _count_compile(event: str, duration: float, **_) -> None:
+    if "backend_compile" in event:
+        _COMPILES[0] += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_count_compile)
 
 #: row-label -> registry engine name of the timed substrates
 ENGINE_LABELS = (("jax", "jax-batch"), ("pallas", "pallas"),
@@ -85,7 +106,7 @@ ALL_ENGINES = ("python", "jax", "jax-batch", "pallas", "jax-shard")
 
 def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
          python_jps=None, bench="fig1-critical", device_count=1,
-         compile_warm_s=None, peak_rss_mb=None):
+         compile_warm_s=None, peak_rss_mb=None, compile_count=None):
     jps = jobs * reps / wall_s
     return {
         "bench": bench, "engine": engine, "policy": policy,
@@ -100,6 +121,7 @@ def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
         else round(compile_warm_s, 3),
         "peak_rss_mb": None if peak_rss_mb is None
         else round(peak_rss_mb, 1),
+        "compile_count": compile_count,
     }
 
 
@@ -127,10 +149,15 @@ def _warm_compile_s(fn, wall: float) -> float | None:
 
 
 def _time_engine(fn):
-    """(wall_s, compile_s, compile_warm_s) of a jitted engine call."""
+    """(wall_s, compile_s, compile_warm_s, compile_count) of a jitted
+    engine call — ``compile_count`` is the number of XLA program compiles
+    the first (compiling) call triggered (jax.monitoring)."""
+    c0 = _COMPILES[0]
     t0 = time.time(); fn(); first = time.time() - t0
+    n_compiles = _COMPILES[0] - c0
     t0 = time.time(); fn(); wall = time.time() - t0
-    return wall, max(0.0, first - wall), _warm_compile_s(fn, wall)
+    return wall, max(0.0, first - wall), _warm_compile_s(fn, wall), \
+        n_compiles
 
 
 def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
@@ -157,12 +184,12 @@ def bench_point(k: int, jobs: int, reps: int, python_jobs: int,
                          ("modbs-fcfs",
                           lambda: modified_bs_sim(trace, wl=wl)),
                          ("bs-fcfs", lambda: bs_sim(trace, wl=wl))):
-            wall, compile_s, warm = _time_engine(fn)
+            wall, compile_s, warm, nc = _time_engine(fn)
             rows.append(_row("jax", name, k, jobs, 1, wall,
                              compile_s=compile_s,
                              python_jps=python_jps.get(name),
                              device_count=jax.local_device_count(),
-                             compile_warm_s=warm))
+                             compile_warm_s=warm, compile_count=nc))
 
     if any(label in engines_sel for _, label in ENGINE_LABELS):
         batch = wl.sample_traces(jobs, reps, seed=seed)
@@ -191,11 +218,12 @@ def _registry_rows(batch, wl, k, jobs, reps, python_jps,
                 return engines.simulate(
                     n, batch, engine=e, wl=wl,
                     **({} if failures is None else {"failures": failures}))
-            wall, compile_s, warm = _time_engine(fn)
+            wall, compile_s, warm, nc = _time_engine(fn)
             rows.append(_row(label, name, k, jobs, reps, wall,
                              compile_s=compile_s,
                              python_jps=python_jps.get(name), bench=bench,
-                             device_count=dc, compile_warm_s=warm))
+                             device_count=dc, compile_warm_s=warm,
+                             compile_count=nc))
     return rows
 
 
@@ -273,6 +301,54 @@ def bench_failures(jobs: int, reps: int, python_jobs: int, seed: int = 0,
     return rows
 
 
+def bench_grid(ks, jobs, reps, seed=0, theta=0.7,
+               engines_sel=ALL_ENGINES) -> list[dict]:
+    """The grid-native scenario (``bench="grid"`` rows): a dense
+    Fig.-1-workload k-grid as ONE compiled, k/J-padded program per policy
+    (``engines.simulate_grid``) versus the per-cell dispatch loop the
+    sweeps used to run (one ``engines.simulate`` per k — one compile per
+    distinct shape).  The committed topology sits in the dispatch-bound
+    regime (many small cells, few reps) where whole-grid execution pays;
+    at fig1's compute-bound scale the same program is merely break-even
+    on one device, so throughput-scale knobs live in ``grid_cfg``, not
+    the global ``ks``/``jobs``/``reps``.  Each grid row's ``jobs_per_sec`` counts every
+    cell's jobs, its ``compile_count`` must be exactly 1 (the single
+    grid program — the eager-op plumbing compiles nothing), and the
+    extra ``percell_jobs_per_sec``/``grid_speedup`` keys record the
+    per-cell baseline measured in the same process, so the committed
+    rows carry the whole-grid-vs-dispatch win alongside the regression
+    floor.  Pallas ships no rows — it has no grid core (``simulate_grid``
+    would just fall back to the same per-cell loop)."""
+    cells = []
+    for k in ks:
+        wl = figure1_workload(k, theta=theta)
+        cells.append((wl.sample_traces(jobs, reps, seed=seed), wl))
+    gcells = [engines.GridCell(b, wl=wl) for b, wl in cells]
+    grid_jobs = jobs * len(ks)
+    rows = []
+    for engine, label in ENGINE_LABELS:
+        if label not in engines_sel or engine == "pallas":
+            continue
+        dc = jax.local_device_count()
+        for name in engines.policies_for(engine):
+            def per_cell(e=engine, n=name):
+                for b, wl in cells:
+                    engines.simulate(n, b, engine=e, wl=wl)
+            cell_wall, _, _, _ = _time_engine(per_cell)
+
+            def fn(e=engine, n=name):
+                return engines.simulate_grid(n, gcells, engine=e)
+            wall, compile_s, warm, nc = _time_engine(fn)
+            r = _row(label, name, max(ks), grid_jobs, reps, wall,
+                     compile_s=compile_s, bench="grid", device_count=dc,
+                     compile_warm_s=warm, compile_count=nc)
+            r["percell_jobs_per_sec"] = round(grid_jobs * reps / cell_wall,
+                                              1)
+            r["grid_speedup"] = round(cell_wall / wall, 2)
+            rows.append(r)
+    return rows
+
+
 #: (policy, total_jobs) streaming cells, smallest-state-first so the
 #: peak-RSS high-water comparison between the two fcfs rows stays clean
 STREAM_SMOKE = {"k": 64, "chunk_jobs": 20_000, "reps": 2,
@@ -315,20 +391,23 @@ def bench_streaming(grid, reps, chunk_jobs, k, seed=0, backlog_cap=None,
         src = PoissonSource(wl, reps=reps, seed=seed)
         kw = {} if backlog_cap is None or pol != "bs-fcfs" \
             else {"backlog_cap": backlog_cap}
+        c0 = _COMPILES[0]
         t0 = time.time()
         engines.simulate_stream(pol, src, engine="jax",
                                 chunk_jobs=chunk_jobs, total_jobs=jobs,
                                 wl=wl, **kw)
         wall = time.time() - t0
         r = _row("jax-batch", pol, k, jobs, reps, wall, bench="streaming",
-                 device_count=dc, peak_rss_mb=_peak_rss_mb())
+                 device_count=dc, peak_rss_mb=_peak_rss_mb(),
+                 compile_count=_COMPILES[0] - c0)
         r["chunk_jobs"] = chunk_jobs      # streaming-only extra key
         rows.append(r)
     return rows
 
 
 def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
-        traces_k=512, engines_sel=ALL_ENGINES, streaming_cfg=None):
+        traces_k=512, engines_sel=ALL_ENGINES, streaming_cfg=None,
+        grid_cfg=None):
     rows = []
     if scenario in ("fig1", "all"):
         for k in ks:
@@ -340,6 +419,10 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
     if scenario in ("failures", "all"):
         rows += bench_failures(jobs, reps, python_jobs, seed=seed,
                                k=min(ks), engines_sel=engines_sel)
+    if scenario in ("grid", "all"):
+        gks, gjobs, greps = grid_cfg or (ks, jobs, reps)
+        rows += bench_grid(gks, gjobs, greps, seed=seed,
+                           engines_sel=engines_sel)
     if scenario in ("streaming", "all"):
         cfg = streaming_cfg or STREAM_SMOKE
         rows += bench_streaming(cfg["grid"], cfg["reps"],
@@ -349,6 +432,10 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
     return {"schema": SCHEMA,
             "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
                        "python_jobs": python_jobs, "seed": seed,
+                       "grid": (None if grid_cfg is None else
+                                {"ks": list(grid_cfg[0]),
+                                 "jobs": grid_cfg[1],
+                                 "reps": grid_cfg[2]}),
                        "scenario": scenario, "traces_k": traces_k,
                        "engines": list(engines_sel),
                        "device_count": jax.local_device_count()},
@@ -374,13 +461,16 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, < 60 s on CPU")
     ap.add_argument("--scenario",
-                    choices=("fig1", "traces", "failures", "streaming",
-                             "all"),
+                    choices=("fig1", "traces", "failures", "grid",
+                             "streaming", "all"),
                     default="all",
                     help="fig1 = synthetic critical-regime sweep; traces "
                          "= SDSC-SP2 bootstrap batch (the Fig. 3 path); "
                          "failures = fig1 workload with drain-mode "
                          "MTBF/MTTR outages merged into the event stream; "
+                         "grid = the whole fig1 k-grid as one compiled "
+                         "program per policy vs the per-cell dispatch "
+                         "loop (compile_count pins 1 program per grid); "
                          "streaming = simulate_stream chunked-carry rows "
                          "with the peak-RSS column (run standalone for a "
                          "meaningful RSS high-water)")
@@ -407,18 +497,30 @@ def main(argv=None):
     if args.smoke:
         ks, jobs, reps, pj, tk = (64,), 20_000, 4, 2_000, 256
         stream_cfg = STREAM_SMOKE
+        # two cells so the smoke grid actually stacks and k-pads
+        grid_cfg = ((64, 128), 2_000, 2)
     else:
         # 16 replications: the batched engines amortize the scan's fixed
         # per-step dispatch across lanes, and the CIs tighten for free
         ks, jobs, reps, pj, tk = (256, 1024), 100_000, 16, 100_000, 512
         stream_cfg = STREAM_FULL
+        # the committed grid topology: a *dense* 12-point k-grid in the
+        # dispatch-bound regime (small cells, few reps) — exactly the
+        # shape the scaling-regime sweeps of ROADMAP item 5 run, and the
+        # regime where one-program-per-figure pays (per-cell dispatch
+        # and XLA loop trips amortize across cells; at fig1's
+        # compute-bound scale the same grid is merely break-even)
+        grid_cfg = ((16, 20, 24, 28, 32, 40, 48, 56, 64, 72, 80, 96),
+                    2_000, 2)
     ks = tuple(args.ks) if args.ks else ks
     jobs = args.jobs or jobs
     reps = args.reps or reps
     pj = args.python_jobs or pj
+    grid_cfg = (tuple(args.ks) if args.ks else grid_cfg[0],
+                args.jobs or grid_cfg[1], args.reps or grid_cfg[2])
     report = run(ks, jobs, reps, pj, scenario=args.scenario, traces_k=tk,
                  engines_sel=tuple(args.engines or ALL_ENGINES),
-                 streaming_cfg=stream_cfg)
+                 streaming_cfg=stream_cfg, grid_cfg=grid_cfg)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")

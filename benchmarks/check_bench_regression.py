@@ -42,7 +42,17 @@ code, while a real >factor regression in any jitted engine — a lost
 fusion, an accidental vmap of the BS scatter path, a dropped runtime
 pin — still trips the guard.
 
-Exit status 0 = no regression, 1 = at least one pair regressed >factor.
+The guard also fails **loudly on missing cells**: a committed (bench,
+engine, policy, device_count) cell that the fresh run was configured to
+reproduce (its scenario, engine selection, and device topology — read
+from the fresh report's ``config`` block — all cover it) but that is
+absent from the regenerated rows.  Without this, deleting a scenario or
+dropping an engine from a bench silently shrinks the comparison set and
+the check passes forever; with it, retiring a cell requires editing the
+committed baseline in the same change.
+
+Exit status 0 = no regression, 1 = at least one pair regressed >factor
+or at least one expected committed cell went missing.
 """
 
 from __future__ import annotations
@@ -54,6 +64,14 @@ import sys
 
 #: cell key: (bench, engine, policy, device_count)
 Key = tuple
+
+#: --scenario value -> the bench labels its rows carry; used to decide
+#: which committed cells a fresh report was *configured* to reproduce
+SCENARIO_BENCHES = {"fig1": ("fig1-critical",), "traces": ("traces",),
+                    "failures": ("failures",), "grid": ("grid",),
+                    "streaming": ("streaming",),
+                    "all": ("fig1-critical", "traces", "failures", "grid",
+                            "streaming")}
 
 
 def _min_jps_by_key(report: dict) -> dict[Key, float]:
@@ -77,10 +95,55 @@ def _machine_ratio(fresh: dict, base: dict) -> float:
     return min(1.0, ratios[len(ratios) // 2])
 
 
+def missing_cells(new: dict, baseline: dict,
+                  host_cpus: int | None = None) -> list[str]:
+    """Committed cells the fresh run was configured to reproduce but did
+    not emit — a silently dropped scenario/engine/policy would otherwise
+    *pass* the regression check forever (no shared cell, no comparison).
+
+    Scoped by the fresh report's ``config``: a committed cell is only
+    required when the fresh run's ``--scenario`` covers its bench, its
+    engine was selected, and its ``device_count`` matches the topology
+    the fresh run was launched under (``python`` rows are pinned to
+    ``device_count=1``, so they are required whenever the engine is
+    selected).  Over-subscribed topologies are skipped like in
+    :func:`check`.  Reports without a ``config`` (pre-schema files) skip
+    this guard entirely.
+    """
+    cfg = new.get("config") or {}
+    scenario = cfg.get("scenario")
+    if not scenario:
+        return []
+    if host_cpus is None:
+        host_cpus = os.cpu_count() or 1
+    benches = SCENARIO_BENCHES.get(scenario, ())
+    selected = set(cfg.get("engines") or [])
+    run_dc = int(cfg.get("device_count") or 1)
+    fresh = _min_jps_by_key(new)
+    failures = []
+    for key in sorted(_min_jps_by_key(baseline)):
+        bench, engine, policy, dc = key
+        if key in fresh:
+            continue
+        if bench not in benches or engine not in selected:
+            continue  # the fresh run was not asked to produce this cell
+        if dc != (1 if engine == "python" else run_dc):
+            continue  # measured under a different device topology
+        if dc > host_cpus:
+            continue  # committed topology over-subscribes this host
+        dcs = f" [devices={dc}]" if dc != 1 else ""
+        failures.append(
+            f"{bench}:{engine}/{policy}{dcs}: committed cell missing "
+            f"from the regenerated report (scenario={scenario}, "
+            f"engines={sorted(selected)}) — dropped row?")
+    return failures
+
+
 def check(new: dict, baseline: dict, factor: float = 2.0,
           host_cpus: int | None = None) -> list[str]:
     """Failure messages for every (bench, engine, policy, device_count)
-    cell regressed more than ``factor``.
+    cell regressed more than ``factor``, plus every committed cell the
+    fresh run should have reproduced but did not (:func:`missing_cells`).
 
     Cells whose device topology over-subscribes this host
     (``device_count > host_cpus``, default ``os.cpu_count()``) are
@@ -92,7 +155,7 @@ def check(new: dict, baseline: dict, factor: float = 2.0,
     base = _min_jps_by_key(baseline)
     fresh = _min_jps_by_key(new)
     machine = _machine_ratio(fresh, base)
-    failures = []
+    failures = missing_cells(new, baseline, host_cpus=host_cpus)
     for key, jps in sorted(fresh.items()):
         if key not in base:
             continue  # new scenario/engine/policy/topology, no baseline yet
@@ -129,8 +192,8 @@ def main(argv=None) -> int:
         print(f"REGRESSION {msg}", file=sys.stderr)
     if not failures:
         print(f"ok: no (bench, engine, policy, device_count) cell "
-              f"regressed more than {args.factor}x vs {args.baseline}",
-              file=sys.stderr)
+              f"regressed more than {args.factor}x vs {args.baseline}, "
+              f"no expected committed cell missing", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -50,8 +50,8 @@ def configure_scan_runtime(devices: int | None = None,
 
 def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
                      reps: int, seed: int = 0, policies=JAX_POLICIES,
-                     engine: str = "jax", extra_cols=None,
-                     per_point_cols=None, failures=None,
+                     engine: str = "jax", grid: bool = True,
+                     extra_cols=None, per_point_cols=None, failures=None,
                      ckpt_dir: str | None = None,
                      resume: bool = False) -> list[dict]:
     """Batched-substrate counterpart of :func:`run_policies`.
@@ -62,6 +62,10 @@ def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
     is ``"jax"`` (vmapped scans), ``"jax-shard"`` (replications sharded
     over the local device mesh) or ``"pallas"`` (fused step kernels —
     interpret mode off-TPU: bit-identical results, slower on CPU).
+    ``grid=True`` (default) runs the sweep grid-natively — one
+    ``engines.simulate_grid`` launch per policy over every
+    not-yet-checkpointed point — and ``grid=False`` forces per-cell
+    dispatch; results are bit-identical either way.
     ``failures``/``ckpt_dir``/``resume`` pass straight through to
     :func:`~repro.core.sim_batch.sweep_many_server` (fault injection and
     crash-resumable per-cell checkpointing).
@@ -70,7 +74,7 @@ def run_policies_jax(wl_factory, points, point_col: str, *, num_jobs: int,
     configure_scan_runtime()
     sweep = sweep_many_server(wl_factory, points, num_jobs=num_jobs,
                               reps=reps, seed=seed, policies=policies,
-                              engine=engine, failures=failures,
+                              engine=engine, grid=grid, failures=failures,
                               ckpt_dir=ckpt_dir, resume=resume)
     return sweep.rows(point_col, extra_cols=extra_cols,
                       per_point_cols=per_point_cols)
@@ -112,9 +116,43 @@ def run_policies(wl: Workload, num_jobs: int, seed: int,
     return rows
 
 
+def grid_precompute(cells, policies=JAX_POLICIES,
+                    engine: str = "jax") -> dict:
+    """One ``engines.simulate_grid`` launch per scan policy over ``cells``.
+
+    ``cells`` is a sequence of ``(batch, wl)`` pairs (uniform ``reps``).
+    Returns ``{policy: (results, wall_per_cell)}`` for every canonical
+    policy with a ``(policy, engine)`` registration; the per-cell wall is
+    the grid wall amortised evenly.  Policies the scan substrate does not
+    cover are absent (callers dispatch them per-cell as before), and a
+    grid launch that raises ``RuntimeError`` (an unstable/overflowing
+    cell poisons the whole grid) is also dropped so the per-cell path's
+    inf-row error handling can take over.  Feed the result to
+    :func:`run_policies_batch` via ``precomputed=`` with the matching
+    ``cell`` index.
+    """
+    from repro.core import engines
+    if engine == "python" or not cells:
+        return {}
+    configure_scan_runtime()
+    gcells = [engines.GridCell(batch, wl=wl) for batch, wl in cells]
+    out = {}
+    for name in dict.fromkeys(engines.canonical(p) for p in policies):
+        if (name, engine) not in engines.registered():
+            continue
+        t0 = time.time()
+        try:
+            results = engines.simulate_grid(name, gcells, engine=engine)
+        except RuntimeError:            # unstable cell — per-cell fallback
+            continue
+        out[name] = (results, (time.time() - t0) / len(gcells))
+    return out
+
+
 def run_policies_batch(batch: BatchTrace, wl: Workload | None,
                        policies=PAPER_POLICIES, engine: str = "jax",
-                       extra_cols=None) -> list[dict]:
+                       extra_cols=None, precomputed: dict | None = None,
+                       cell: int = 0) -> list[dict]:
     """Registry-dispatched rows: one per policy on a shared batch.
 
     Every policy goes through ``engines.simulate`` on the *same*
@@ -124,7 +162,9 @@ def run_policies_batch(batch: BatchTrace, wl: Workload | None,
     bit-identical CSV rows.  Policies without a core under ``engine``
     (SF-SRPT, FF-SRPT, MSF, ... on the scan substrates) fall back to
     ``engine="python"``; the row's ``engine`` column records which core
-    actually ran.
+    actually ran.  ``precomputed`` (from :func:`grid_precompute`) short-
+    circuits covered policies with the grid launch's result for ``cell``
+    — same numpy row assembly, so rows stay bit-identical.
     """
     from repro.core import engines
     if engine != "python":
@@ -133,6 +173,15 @@ def run_policies_batch(batch: BatchTrace, wl: Workload | None,
     for name in policies:
         pol = engines.canonical(name)
         use = engine if (pol, engine) in engines.registered() else "python"
+        pre = (precomputed or {}).get(pol)
+        if pre is not None:
+            row = _batch_row(pol, batch, pre[0][cell])
+            row["engine"] = use
+            row["sim_s"] = round(pre[1], 2)
+            if extra_cols:
+                row.update(extra_cols)
+            rows.append(row)
+            continue
         t0 = time.time()
         try:
             res = engines.simulate(pol, batch, engine=use, wl=wl)

@@ -59,13 +59,19 @@ def run(ks=(256, 512, 1024, 2048), num_jobs=30_000, seed=0,
 
 
 def run_jax(ks=(256, 512, 1024, 2048), num_jobs=100_000, reps=8, seed=0,
-            theta=0.7, policies=JAX_POLICIES, engine="jax",
+            theta=0.7, policies=JAX_POLICIES, engine="jax", grid=True,
             ckpt_dir=None, resume=False):
-    """Batched-substrate sweep (FCFS + ModifiedBS-FCFS + BS-FCFS, CIs)."""
+    """Batched-substrate sweep (FCFS + ModifiedBS-FCFS + BS-FCFS, CIs).
+
+    ``grid=True`` (default) runs the whole k sweep as one k-padded
+    compiled program per policy (``engines.simulate_grid``); results are
+    bit-identical to the per-cell path (``grid=False``).
+    """
     return run_policies_jax(
         lambda k: figure1_workload(k, theta=theta), ks, "k",
         num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
-        engine=engine, per_point_cols=[_theory_cols(k, theta) for k in ks],
+        engine=engine, grid=grid,
+        per_point_cols=[_theory_cols(k, theta) for k in ks],
         ckpt_dir=ckpt_dir, resume=resume)
 
 
@@ -81,6 +87,9 @@ def main(argv=None):
                     help="subset of the engine's policy set")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 10^6 arrivals")
+    ap.add_argument("--no-grid", action="store_true",
+                    help="dispatch each (k, policy) cell separately "
+                         "instead of one compiled grid per policy")
     ap.add_argument("--devices", type=int, default=None,
                     help="host-platform device count (jax-shard sweeps)")
     ap.add_argument("--cache-dir", default=None,
@@ -102,8 +111,8 @@ def main(argv=None):
     if args.engine != "python":
         rows = run_jax(ks=tuple(args.ks), num_jobs=jobs, reps=args.reps,
                        policies=tuple(args.policies or JAX_POLICIES),
-                       engine=args.engine, ckpt_dir=args.ckpt_dir,
-                       resume=args.resume)
+                       engine=args.engine, grid=not args.no_grid,
+                       ckpt_dir=args.ckpt_dir, resume=args.resume)
     else:
         rows = run(ks=tuple(args.ks), num_jobs=jobs,
                    policies=tuple(args.policies or PAPER_POLICIES))

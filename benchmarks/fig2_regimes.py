@@ -62,22 +62,22 @@ def run_subcritical(load=0.85, ks=(256, 512, 1024, 2048), num_jobs=20_000,
 
 def run_heavy_jax(k=512, loads=(0.5, 0.7, 0.8, 0.9, 0.95),
                   num_jobs=100_000, reps=8, seed=0, policies=JAX_POLICIES,
-                  engine="jax", ckpt_dir=None, resume=False):
+                  engine="jax", grid=True, ckpt_dir=None, resume=False):
     return run_policies_jax(
         lambda load: figure2_workload(k, load), loads, "load",
         num_jobs=num_jobs, reps=reps, seed=seed, policies=policies,
-        engine=engine, extra_cols={"regime": "heavy", "k": k},
+        engine=engine, grid=grid, extra_cols={"regime": "heavy", "k": k},
         ckpt_dir=ckpt_dir, resume=resume)
 
 
 def run_subcritical_jax(load=0.85, ks=(256, 512, 1024, 2048),
                         num_jobs=100_000, reps=8, seed=0,
-                        policies=JAX_POLICIES, engine="jax",
+                        policies=JAX_POLICIES, engine="jax", grid=True,
                         ckpt_dir=None, resume=False):
     factory = _subcritical_factory(load)
     return run_policies_jax(
         factory, ks, "k", num_jobs=num_jobs, reps=reps, seed=seed,
-        policies=policies, engine=engine,
+        policies=policies, engine=engine, grid=grid,
         extra_cols={"regime": "subcritical"},
         per_point_cols=[{"load": round(factory(k).load, 4)} for k in ks],
         ckpt_dir=ckpt_dir, resume=resume)
@@ -92,6 +92,9 @@ def main(argv=None):
     ap.add_argument("--policies", nargs="+", default=None,
                     help="subset of the engine's policy set")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-grid", action="store_true",
+                    help="dispatch each sweep cell separately instead of "
+                         "one compiled grid per policy")
     ap.add_argument("--devices", type=int, default=None,
                     help="host-platform device count (jax-shard sweeps)")
     ap.add_argument("--cache-dir", default=None,
@@ -118,10 +121,11 @@ def main(argv=None):
                for r in ("heavy", "subcritical")}
         pols = tuple(args.policies or JAX_POLICIES)
         rows = (run_heavy_jax(num_jobs=jobs, reps=args.reps, policies=pols,
-                              engine=args.engine, ckpt_dir=sub["heavy"],
-                              resume=args.resume)
+                              engine=args.engine, grid=not args.no_grid,
+                              ckpt_dir=sub["heavy"], resume=args.resume)
                 + run_subcritical_jax(num_jobs=jobs, reps=args.reps,
                                       policies=pols, engine=args.engine,
+                                      grid=not args.no_grid,
                                       ckpt_dir=sub["subcritical"],
                                       resume=args.resume))
     else:

@@ -27,7 +27,7 @@ from repro.core.workload import (BatchTrace, kit_fh2_workload,
 from repro.data.swf import kit_fh2_trace, sdsc_sp2_trace
 
 from .common import ENGINES, ENGINE_HELP, PAPER_POLICIES, emit, \
-    run_policies_batch
+    grid_precompute, run_policies_batch
 
 COLS = ["dataset", "k", "load", "engine", "policy", "jobs", "reps",
         "mean_response", "ci95_response", "mean_wait", "p_wait", "p_helper",
@@ -38,9 +38,17 @@ _DATASETS = (("sdsc_sp2", sdsc_sp2_trace, sdsc_sp2_workload),
 
 
 def run(num_jobs=15_000, seed=0, ks=(512, 1024), loads=(0.5, 0.7, 0.85),
-        policies=PAPER_POLICIES, engine="jax", reps=4,
-        bootstrap="iid", ckpt_dir=None, resume=False) -> list[dict]:
+        policies=PAPER_POLICIES, engine="jax", reps=4, bootstrap="iid",
+        grid=True, ckpt_dir=None, resume=False) -> list[dict]:
     """Table-2/3 synthesized traces, bootstrapped, through the registry.
+
+    With ``grid=True`` (default, scan engines only) every scan policy
+    first runs *all* not-yet-checkpointed (dataset, k, load) cells as one
+    k/J-padded compiled grid (:func:`grid_precompute`); the per-cell row
+    assembly then reuses those results, so rows stay bit-identical to
+    ``grid=False`` per-cell dispatch (``sim_s`` becomes the grid wall
+    amortised evenly over its cells).  Python-fallback policies are
+    untouched either way.
 
     With ``ckpt_dir`` every (dataset, k, load) cell's finished CSV rows
     are published atomically (:mod:`repro.checkpoint`, rows ride in the
@@ -54,40 +62,51 @@ def run(num_jobs=15_000, seed=0, ks=(512, 1024), loads=(0.5, 0.7, 0.85),
         if ckpt_dir is None:
             raise ValueError("resume=True needs a ckpt_dir")
         done = set(completed_steps(ckpt_dir))
+    specs = list(enumerate([(name, trace_fn, wl_fn, k, load)
+                            for name, trace_fn, wl_fn in _DATASETS
+                            for k in ks for load in loads]))
+    # sample every pending cell up front so the grid pre-pass can cover
+    # them all in one compiled launch per scan policy
+    sampled = {}
+    for cell, (name, trace_fn, wl_fn, k, load) in specs:
+        if cell in done:
+            continue
+        trace = trace_fn(num_jobs, k=k, load=load, seed=seed)
+        batch = BatchTrace.from_trace(trace, reps, seed=seed,
+                                      method=bootstrap)
+        sampled[cell] = (batch, wl_fn(k=k, load=load))
+    pre, pre_idx = {}, {}
+    if grid and sampled:
+        todo = sorted(sampled)
+        pre = grid_precompute([sampled[c] for c in todo],
+                              policies=policies, engine=engine)
+        pre_idx = {c: i for i, c in enumerate(todo)}
     rows = []
-    cell = 0
-    for name, trace_fn, wl_fn in _DATASETS:
-        for k in ks:
-            for load in loads:
-                key = f"{name}/k={k}/load={load}"
-                if cell in done:
-                    from repro.checkpoint import restore_checkpoint
-                    import numpy as np
-                    _, _, extra = restore_checkpoint(
-                        ckpt_dir, {"ok": np.zeros(1)}, step=cell)
-                    if extra.get("cell_key") != key:
-                        raise ValueError(
-                            f"checkpoint cell {cell} holds "
-                            f"{extra.get('cell_key')!r}, sweep expects "
-                            f"{key!r} — stale ckpt_dir?")
-                    rows += extra["rows"]
-                    cell += 1
-                    continue
-                trace = trace_fn(num_jobs, k=k, load=load, seed=seed)
-                batch = BatchTrace.from_trace(trace, reps, seed=seed,
-                                              method=bootstrap)
-                wl = wl_fn(k=k, load=load)
-                cell_rows = run_policies_batch(
-                    batch, wl, policies, engine=engine,
-                    extra_cols={"dataset": name, "k": k, "load": load})
-                if ckpt_dir is not None:
-                    from repro.checkpoint import save_checkpoint
-                    import numpy as np
-                    save_checkpoint(ckpt_dir, cell, {"ok": np.ones(1)},
-                                    extra={"cell_key": key,
-                                           "rows": cell_rows})
-                rows += cell_rows
-                cell += 1
+    for cell, (name, trace_fn, wl_fn, k, load) in specs:
+        key = f"{name}/k={k}/load={load}"
+        if cell in done:
+            from repro.checkpoint import restore_checkpoint
+            import numpy as np
+            _, _, extra = restore_checkpoint(
+                ckpt_dir, {"ok": np.zeros(1)}, step=cell)
+            if extra.get("cell_key") != key:
+                raise ValueError(
+                    f"checkpoint cell {cell} holds "
+                    f"{extra.get('cell_key')!r}, sweep expects "
+                    f"{key!r} — stale ckpt_dir?")
+            rows += extra["rows"]
+            continue
+        batch, wl = sampled[cell]
+        cell_rows = run_policies_batch(
+            batch, wl, policies, engine=engine,
+            extra_cols={"dataset": name, "k": k, "load": load},
+            precomputed=pre or None, cell=pre_idx.get(cell, 0))
+        if ckpt_dir is not None:
+            from repro.checkpoint import save_checkpoint
+            import numpy as np
+            save_checkpoint(ckpt_dir, cell, {"ok": np.ones(1)},
+                            extra={"cell_key": key, "rows": cell_rows})
+        rows += cell_rows
     return rows
 
 
@@ -126,6 +145,10 @@ def main(argv=None):
                          "for --swf logs — real arrivals are bursty)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-grid", action="store_true",
+                    help="dispatch each (dataset, k, load) cell "
+                         "separately instead of one compiled grid per "
+                         "scan policy")
     ap.add_argument("--swf", default=None, help="real SWF log path")
     ap.add_argument("--k", type=int, default=512,
                     help="server count for the --swf path")
@@ -157,7 +180,8 @@ def main(argv=None):
     emit(run(num_jobs=jobs, seed=args.seed, ks=tuple(args.ks),
              loads=tuple(args.loads), policies=pols, engine=args.engine,
              reps=args.reps, bootstrap=args.bootstrap or "iid",
-             ckpt_dir=args.ckpt_dir, resume=args.resume), COLS)
+             grid=not args.no_grid, ckpt_dir=args.ckpt_dir,
+             resume=args.resume), COLS)
 
 
 if __name__ == "__main__":

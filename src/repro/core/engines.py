@@ -58,12 +58,47 @@ chunk schedule, and engines without a chunked carry (``pallas``,
 ``python``) reject loudly naming the engines that stream
 (:func:`get_stream`).  Streams checkpoint mid-flight through
 ``ckpt_dir=``/``resume=`` — see :mod:`repro.core.sim_batch`.
+
+Grid registry
+-------------
+A third registry serves whole-figure grids: :func:`simulate_grid` takes a
+sequence of :class:`GridCell`\\ s — each a ``BatchTrace`` plus its own
+partition/workload/failures context, with *heterogeneous* k, J, and class
+counts — and returns one ``BatchSimResult`` per cell.  Grid-native cores
+(``register_grid``; ``"jax"`` and ``"jax-shard"``) stack every cell onto
+one flattened (cells × reps) lane axis and run **one jit-compiled
+program per policy**:
+
+* *Padding rules*: per-cell batches are J-padded to the grid max via
+  ``BatchTrace.pad_jobs`` (sentinel no-op jobs at the horizon; the BS
+  event cores additionally guard arrivals with a per-lane ``j_live``
+  count so padding never enters the rings); heterogeneous k/C/s_max/h
+  share one static shape via *dead capacity* in the per-lane initial
+  carries — ``_BIG`` entries in the FCFS/helper free-time vectors and
+  permanently-busy A-slots, the same masking the drain-mode failure
+  machinery uses, so every per-cell state is scan *data*, not a static.
+* *Mesh layout* (``jax-shard``): cells × reps shard over a 2-D
+  ``("c", "r")`` device mesh (:func:`repro.core.shard.grid_mesh`); both
+  axes pad up to the mesh shape by repeating their last entry, so grids
+  never need to divide the device count.
+* *Determinism*: every grid cell is bit-identical (rtol=0) to the
+  per-cell :func:`simulate` path on every engine — pinned by
+  ``tests/test_grid.py``.
+* Engines without a grid-native core (``python``, ``pallas``) fall back
+  to a per-cell :func:`simulate` loop behind the same call, so
+  ``sweep_many_server`` runs on :func:`simulate_grid` for all engines.
+
+Checkpoint granularity: grid callers (``sweep_many_server``, the fig
+drivers) launch one grid per policy and write the extracted per-cell
+results as individual atomic checkpoints — old per-cell checkpoints
+resume forward, new runs pay one compile per policy.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import importlib
-from typing import TYPE_CHECKING, Callable
+from typing import TYPE_CHECKING, Callable, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
     from .sim_batch import BatchSimResult
@@ -84,6 +119,10 @@ _REGISTRY: dict[tuple[str, str], Callable[..., "BatchSimResult"]] = {}
 #: ChunkSource (not a BatchTrace) and returns a StreamResult, so the two
 #: call signatures must never be confused by a registry lookup
 _STREAM_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+#: grid cores consume a sequence of GridCells and return one
+#: BatchSimResult per cell — again a distinct signature, distinct registry
+_GRID_REGISTRY: dict[tuple[str, str], Callable] = {}
 
 #: engines whose scan cores support the failure axis (``failures=``) —
 #: shared with :mod:`repro.kernels.msj_scan.ops` so the pallas rejection
@@ -127,6 +166,25 @@ def register_stream(policy: str, engine: str):
         if key in _STREAM_REGISTRY:
             raise ValueError(f"stream core {key} registered twice")
         _STREAM_REGISTRY[key] = fn
+        return fn
+    return deco
+
+
+def register_grid(policy: str, engine: str):
+    """Decorator: register a *grid* core under ``(policy, engine)``.
+
+    A grid core has the signature ``core(cells, **kw) ->
+    list[BatchSimResult]`` — ``cells`` is a tuple of :class:`GridCell`\\ s
+    (already validated, uniform ``reps``, homogeneous failure axis) and
+    the returned list is index-aligned with it.  The contract: cell ``g``
+    of the list is bit-identical (rtol=0) to
+    ``simulate(policy, cells[g].batch, engine=engine, ...)``.
+    """
+    def deco(fn: Callable):
+        key = (policy, engine)
+        if key in _GRID_REGISTRY:
+            raise ValueError(f"grid core {key} registered twice")
+        _GRID_REGISTRY[key] = fn
         return fn
     return deco
 
@@ -335,3 +393,90 @@ def simulate_stream(policy: str, source, *, engine: str = "jax",
         raise ValueError(f"total_jobs must be >= 1, got {total_jobs}")
     return core(source, chunk_jobs=chunk_jobs, total_jobs=total_jobs,
                 partition=partition, wl=wl, policy=policy, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridCell:
+    """One cell of a simulation grid: a batch plus its per-cell context.
+
+    ``partition``/``wl`` feed the eq.-2 balanced partition exactly as the
+    matching :func:`simulate` keywords would; ``failures`` injects the
+    cell's drain-mode :class:`~repro.core.failures.FailureBatch`;
+    ``queue_cap`` bounds the BS-FCFS helper-wait rings (``None`` = the
+    per-cell default ``min(J, 8192)``).  Cells of one grid may differ in
+    k, J, class count, partition, and load — the grid cores pad them to a
+    shared shape without changing any cell's result.
+    """
+
+    batch: "BatchTrace"
+    partition: object = None
+    wl: object = None
+    failures: object = None
+    queue_cap: int | None = None
+
+
+def grid_registered() -> tuple[tuple[str, str], ...]:
+    """All registered grid-native ``(policy, engine)`` keys, sorted."""
+    _ensure_registered()
+    return tuple(sorted(_GRID_REGISTRY))
+
+
+def grid_engines_for(policy: str) -> tuple[str, ...]:
+    """Engines with a grid-native core for a policy, sorted."""
+    pol = canonical(policy)
+    return tuple(sorted(e for p, e in grid_registered() if p == pol))
+
+
+def simulate_grid(policy: str, cells: Sequence[GridCell], *,
+                  engine: str = "jax", **kw) -> list:
+    """Run every grid cell under one policy; one ``BatchSimResult`` each.
+
+    Grid-native engines (:func:`grid_engines_for`; ``"jax"`` and
+    ``"jax-shard"``) stack the cells onto one flattened (cells × reps)
+    lane axis and execute a *single* jit-compiled program — one compile
+    and one dispatch for the whole grid, however many (k, load) cells it
+    has.  Engines without a grid core fall back to a per-cell
+    :func:`simulate` loop, so every registered engine accepts the same
+    call.  Either way, cell ``g`` of the returned list is bit-identical
+    (rtol=0) to ``simulate(policy, cells[g].batch, engine=engine, ...)``.
+
+    Constraints: at least one cell; every cell the same ``reps`` (the
+    lane axis is cells × reps); failures all-or-none across cells (split
+    mixed grids into two calls).  Extra keywords (e.g. ``devices`` for
+    ``jax-shard``) pass through to the core.
+    """
+    cells = tuple(cells)
+    if not cells:
+        raise ValueError("simulate_grid needs at least one cell")
+    core = get(policy, engine)  # loud unknown-policy/engine errors first
+    R = cells[0].batch.reps
+    for g, cell in enumerate(cells):
+        if cell.batch.reps != R:
+            raise ValueError(
+                f"grid cells must share one replication count; cell {g} "
+                f"has reps={cell.batch.reps}, cell 0 has reps={R}")
+        fb = cell.failures
+        try:
+            validate_batch(cell.batch, partition=cell.partition,
+                           failures=fb if hasattr(fb, "k") else None)
+        except ValueError as e:
+            raise ValueError(f"grid cell {g}: {e}") from None
+    n_fail = sum(1 for c in cells if c.failures is not None)
+    if n_fail not in (0, len(cells)):
+        raise ValueError(
+            "mixed failure/no-failure cells in one grid — split into one "
+            "simulate_grid call per failure axis")
+    pol = canonical(policy)
+    grid_core = _GRID_REGISTRY.get((pol, engine))
+    if grid_core is not None:
+        return grid_core(cells, **kw)
+    out = []           # fallback: per-cell dispatch, same results
+    for cell in cells:
+        ckw = dict(kw)
+        if cell.queue_cap is not None:
+            ckw["queue_cap"] = cell.queue_cap
+        if cell.failures is not None:
+            ckw["failures"] = cell.failures
+        out.append(core(cell.batch, partition=cell.partition, wl=cell.wl,
+                        **ckw))
+    return out

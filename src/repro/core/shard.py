@@ -73,16 +73,24 @@ except ImportError:               # ... experimental before (and removed
 from . import engines
 from . import failures as flr
 from .partition import balanced_partition
-from .sim_batch import (_backends_initialized, _bs_fail_args, _bs_result,
-                        _BS_CARRY_DTYPES, _bs_stream_args, _bs_stream_drive,
-                        _call, _class_inputs, _dev, _fcfs_inputs,
-                        _fcfs_result, _fcfs_stream_init, _merged_fcfs_inputs,
-                        _modbs_result, _modbs_stream_init, _partition_args,
-                        _scan_stream, _slice_stream_result,
-                        _stream_partition, _with_drain_obs)
-from .sim_jax import (_bs_args, _bs_core, _bs_fail_core, _bs_stream_core,
-                      _fcfs_core, _fcfs_fail_core, _fcfs_stream_core,
-                      _modbs_core, _modbs_fail_core, _modbs_stream_core)
+from .sim_batch import (_backends_initialized, _bs_fail_args,
+                        _bs_fail_grid_plan, _bs_grid_carry, _bs_grid_extract,
+                        _bs_grid_plan, _bs_result, _BS_CARRY_DTYPES,
+                        _bs_stream_args, _bs_stream_drive, _call,
+                        _class_inputs, _dev, _fcfs_fail_grid_extract,
+                        _fcfs_fail_grid_plan, _fcfs_grid_extract,
+                        _fcfs_grid_plan, _fcfs_inputs, _fcfs_result,
+                        _fcfs_stream_init, _merged_fcfs_inputs,
+                        _modbs_fail_grid_extract, _modbs_fail_grid_plan,
+                        _modbs_grid_extract, _modbs_grid_plan, _modbs_result,
+                        _modbs_stream_init, _partition_args, _scan_stream,
+                        _slice_stream_result, _stream_partition,
+                        _with_drain_obs)
+from .sim_jax import (_bs_args, _bs_core, _bs_fail_core,
+                      _bs_fail_stream_core, _bs_stream_core, _fcfs_core,
+                      _fcfs_fail_core, _fcfs_fail_stream_core,
+                      _fcfs_stream_core, _modbs_core, _modbs_fail_core,
+                      _modbs_fail_stream_core, _modbs_stream_core)
 from .workload import BatchTrace
 
 _FLAG = "--xla_force_host_platform_device_count"
@@ -153,6 +161,27 @@ def local_mesh(devices: int | None = None) -> Mesh:
         raise ValueError(f"requested {devices} devices, "
                          f"{len(avail)} available")
     return Mesh(np.array(avail[:n]), ("r",))
+
+
+def grid_mesh(n_cells: int, devices: int | None = None) -> Mesh:
+    """A 2-D ``("c", "r")`` mesh over the local devices for grid sweeps.
+
+    The cell axis gets the largest divisor of the device count that does
+    not exceed ``n_cells`` (a grid smaller than the device count still
+    uses every device — the remainder shards replications), the
+    replications axis the rest.  Grid and replication counts need not
+    divide the mesh sizes: callers pad both axes (repeating the last
+    cell / replication) and slice the outputs back.
+    """
+    if n_cells < 1:
+        raise ValueError(f"need at least one grid cell, got {n_cells}")
+    avail = jax.devices()
+    n = len(avail) if devices is None else devices
+    if not 1 <= n <= len(avail):
+        raise ValueError(f"requested {devices} devices, "
+                         f"{len(avail)} available")
+    dc = max(d for d in range(1, n + 1) if n % d == 0 and d <= n_cells)
+    return Mesh(np.array(avail[:n]).reshape(dc, n // dc), ("c", "r"))
 
 
 # --------------------------------------------------------------------------
@@ -283,16 +312,14 @@ def _pad_reps(n_dev: int, *arrays: np.ndarray):
 def _pad_batch(batch: BatchTrace, n_dev: int) -> tuple[BatchTrace, int]:
     """``batch`` with its replications padded to a multiple of ``n_dev``.
 
-    Returns a :class:`BatchTrace` (not raw arrays) so the sharded cores
-    feed the *same* input-prep helpers (``_fcfs_inputs``/``_class_inputs``)
-    as every other engine — bit-identical dtype handling by construction.
+    Delegates to :meth:`BatchTrace.pad_reps` (repeat the last replication
+    — always a valid sample path) and returns a :class:`BatchTrace` so the
+    sharded cores feed the *same* input-prep helpers
+    (``_fcfs_inputs``/``_class_inputs``) as every other engine —
+    bit-identical dtype handling by construction.
     """
-    (a, c, n, v), R = _pad_reps(n_dev, batch.arrival, batch.cls,
-                                batch.need, batch.service)
-    if a is batch.arrival:
-        return batch, R
-    return dataclasses.replace(batch, arrival=a, cls=c, need=n,
-                               service=v), R
+    R = batch.reps
+    return batch.pad_reps(R + (-R) % n_dev), R
 
 
 # --------------------------------------------------------------------------
@@ -649,3 +676,235 @@ def _bs_stream_shard(source, *, chunk_jobs, total_jobs, partition=None,
                                      mesh),
         block=block, ckpt_dir=ckpt_dir, resume=resume)
     return _slice_stream_result(sr, R)
+
+
+# --------------------------------------------------------------------------
+# Grid-native sharded execution: the 2-D (cells, reps) mesh.
+# --------------------------------------------------------------------------
+#
+# The ``engine="jax-shard"`` grid cores reuse the host-side grid plans and
+# extraction helpers of :mod:`repro.core.sim_batch` verbatim — the only
+# difference from the ``engine="jax"`` grid cores is the execution layout:
+# instead of flattening (cells x reps) to one lane axis on one device, the
+# [G, R, ...] stacks keep both axes and shard them over the
+# :func:`grid_mesh` ``("c", "r")`` mesh.  Each device block vmaps the same
+# per-lane stream cores over its (G/dc_c, R/dc_r) tile; lanes never
+# interact, so the results are bit-identical to every other engine of the
+# policy.  Neither axis needs to divide its mesh size: :func:`_pad_gr`
+# edge-repeats the last cell / replication (always valid lanes) and the
+# outputs are sliced back to [:G, :R] before extraction.
+
+
+def _pad_gr(a: np.ndarray, g_pad: int, r_pad: int) -> np.ndarray:
+    """Edge-repeat the leading (cells, reps) axes up to (g_pad, r_pad)."""
+    G, R = a.shape[:2]
+    if g_pad > G:
+        a = np.concatenate(
+            [a, np.broadcast_to(a[-1:], (g_pad - G,) + a.shape[1:])], axis=0)
+    if r_pad > R:
+        a = np.concatenate(
+            [a, np.broadcast_to(a[:, -1:],
+                                (a.shape[0], r_pad - R) + a.shape[2:])],
+            axis=1)
+    return np.ascontiguousarray(a)
+
+
+@partial(jax.jit, static_argnums=(4,))
+def _fcfs_grid_shard_call(carry, arrival, need, service, mesh: Mesh):
+    body = lambda c, a, n, v: jax.vmap(jax.vmap(_fcfs_stream_core))(
+        c, a, n, v)
+    return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 4,
+                     out_specs=(P("c", "r"), P("c", "r")))(
+        carry, arrival, need, service)
+
+
+@partial(jax.jit, static_argnums=(5, 6))
+def _modbs_grid_shard_call(carry, arrival, cls, need, service, s_max: int,
+                           mesh: Mesh):
+    body = lambda c, a, cc, n, v: jax.vmap(jax.vmap(
+        lambda c1, a1, cc1, n1, v1: _modbs_stream_core(
+            c1, a1, cc1, n1, v1, s_max)))(c, a, cc, n, v)
+    return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 5,
+                     out_specs=(P("c", "r"), P("c", "r")))(
+        carry, arrival, cls, need, service)
+
+
+@partial(jax.jit, static_argnums=(6, 7, 8, 9, 10, 11))
+def _bs_grid_shard_call(carry, arrival, cls, need, service, j_live,
+                        C: int, s_max: int, h: int, q_cap: int, length: int,
+                        mesh: Mesh):
+    # _bs_stream_core carries its lane (reps) axis natively; vmap adds the
+    # per-tile cell axis on top.
+    def body(c, a, cc, n, v, jl):
+        f = lambda c1, a1, cc1, n1, v1, jl1: _bs_stream_core(
+            a1, cc1, n1, v1, jnp.full(a1.shape[0], jnp.inf, a1.dtype), c1,
+            C, s_max, h, q_cap, length, j_live=jl1)
+        return jax.vmap(f)(c, a, cc, n, v, jl)
+    return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 6,
+                     out_specs=(P("c", "r"),) * 3)(
+        carry, arrival, cls, need, service, j_live)
+
+
+@partial(jax.jit, static_argnums=(6,))
+def _fcfs_fail_grid_shard_call(carry, t, n, svc, t_up, is_fail, mesh: Mesh):
+    body = lambda c, a, b, d, e, f: jax.vmap(jax.vmap(
+        _fcfs_fail_stream_core))(c, a, b, d, e, f)
+    return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 6,
+                     out_specs=(P("c", "r"), P("c", "r")))(
+        carry, t, n, svc, t_up, is_fail)
+
+
+@partial(jax.jit, static_argnums=(7, 8, 9))
+def _modbs_fail_grid_shard_call(carry, t, c, n, svc, t_up, is_fail,
+                                s_max: int, C: int, mesh: Mesh):
+    body = lambda cr, a, b, nn, v, tu, isf: jax.vmap(jax.vmap(
+        lambda cr1, a1, b1, n1, v1, tu1, isf1: _modbs_fail_stream_core(
+            cr1, a1, b1, n1, v1, tu1, isf1, s_max, C)))(
+        cr, a, b, nn, v, tu, isf)
+    return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 7,
+                     out_specs=(P("c", "r"), P("c", "r")))(
+        carry, t, c, n, svc, t_up, is_fail)
+
+
+@partial(jax.jit, static_argnums=(9, 10, 11, 12, 13, 14))
+def _bs_fail_grid_shard_call(carry, arrival, cls, need, service, ft, ftgt,
+                             fup, j_live, C: int, s_max: int, h: int,
+                             q_cap: int, length: int, mesh: Mesh):
+    def body(c, a, cc, n, v, t, g, u, jl):
+        f = lambda c1, a1, cc1, n1, v1, t1, g1, u1, jl1: \
+            _bs_fail_stream_core(a1, cc1, n1, v1, t1, g1, u1, c1,
+                                 C, s_max, h, q_cap, length, j_live=jl1)
+        return jax.vmap(f)(c, a, cc, n, v, t, g, u, jl)
+    return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 9,
+                     out_specs=(P("c", "r"),) * 3)(
+        carry, arrival, cls, need, service, ft, ftgt, fup, j_live)
+
+
+def _grid_mesh_pads(cells, devices):
+    """(mesh, G, R, G_pad, R_pad) for a grid of ``cells``."""
+    G, R = len(cells), cells[0].batch.reps
+    mesh = grid_mesh(G, devices)
+    return (mesh, G, R, G + (-G) % mesh.shape["c"],
+            R + (-R) % mesh.shape["r"])
+
+
+@engines.register_grid("fcfs", "jax-shard")
+def _fcfs_grid_shard(cells, devices=None):
+    mesh, G, R, Gp, Rp = _grid_mesh_pads(cells, devices)
+    pg = lambda a: _pad_gr(a, Gp, Rp)
+    if cells[0].failures is not None:
+        for c in cells:
+            flr.require_drain(c.failures, "jax-shard")
+        p = _fcfs_fail_grid_plan(cells)
+        with enable_x64():
+            carry = (_dev(pg(p["W0"]), jnp.float64),
+                     _dev(pg(p["t0"]), jnp.float64))
+            _, starts_m = _call(
+                _fcfs_fail_grid_shard_call, carry,
+                _dev(pg(p["t"]), jnp.float64), _dev(pg(p["n"]), jnp.int32),
+                _dev(pg(p["svc"]), jnp.float64),
+                _dev(pg(p["t_up"]), jnp.float64),
+                _dev(pg(p["isf"]), jnp.bool_), mesh)
+        return _fcfs_fail_grid_extract(cells, p["mss"],
+                                       np.asarray(starts_m)[:G, :R])
+    p = _fcfs_grid_plan(cells)
+    with enable_x64():
+        carry = (_dev(pg(p["W0"]), jnp.float64),
+                 _dev(pg(p["t0"]), jnp.float64))
+        _, starts = _call(
+            _fcfs_grid_shard_call, carry,
+            _dev(pg(p["arrival"]), jnp.float64),
+            _dev(pg(p["need"]), jnp.int32),
+            _dev(pg(p["service"]), jnp.float64), mesh)
+    return _fcfs_grid_extract(cells, np.asarray(starts)[:G, :R])
+
+
+@engines.register_grid("modbs-fcfs", "jax-shard")
+def _modbs_grid_shard(cells, devices=None):
+    mesh, G, R, Gp, Rp = _grid_mesh_pads(cells, devices)
+    pg = lambda a: _pad_gr(a, Gp, Rp)
+    if cells[0].failures is not None:
+        for c in cells:
+            flr.require_drain(c.failures, "jax-shard")
+        p = _modbs_fail_grid_plan(cells)
+        with enable_x64():
+            carry = (_dev(pg(p["comp0"]), jnp.float64),
+                     _dev(pg(p["W0"]), jnp.float64),
+                     _dev(pg(p["t0"]), jnp.float64))
+            _, (blocked_m, starts_m) = _call(
+                _modbs_fail_grid_shard_call, carry,
+                _dev(pg(p["t"]), jnp.float64),
+                _dev(pg(p["cls"]), jnp.int32),
+                _dev(pg(p["need"]), jnp.int32),
+                _dev(pg(p["svc"]), jnp.float64),
+                _dev(pg(p["t_up"]), jnp.float64),
+                _dev(pg(p["isf"]), jnp.bool_),
+                p["s_max_pad"], p["C_pad"], mesh)
+        return _modbs_fail_grid_extract(
+            cells, p["mss"], np.asarray(blocked_m)[:G, :R],
+            np.asarray(starts_m)[:G, :R])
+    p = _modbs_grid_plan(cells)
+    with enable_x64():
+        carry = (_dev(pg(p["comp0"]), jnp.float64),
+                 _dev(pg(p["W0"]), jnp.float64),
+                 _dev(pg(p["t0"]), jnp.float64))
+        _, (blocked, starts) = _call(
+            _modbs_grid_shard_call, carry,
+            _dev(pg(p["arrival"]), jnp.float64),
+            _dev(pg(p["cls"]), jnp.int32),
+            _dev(pg(p["need"]), jnp.int32),
+            _dev(pg(p["service"]), jnp.float64), p["s_max_pad"], mesh)
+    return _modbs_grid_extract(cells, np.asarray(blocked)[:G, :R],
+                               np.asarray(starts)[:G, :R])
+
+
+@engines.register_grid("bs-fcfs", "jax-shard")
+def _bs_grid_shard(cells, devices=None):
+    mesh, G, R, Gp, Rp = _grid_mesh_pads(cells, devices)
+    pg = lambda a: _pad_gr(a, Gp, Rp)
+    if cells[0].failures is not None:
+        for c in cells:
+            flr.require_drain(c.failures, "jax-shard")
+        p = _bs_fail_grid_plan(cells)
+        pp = dict(p, **{k: pg(p[k])
+                        for k in ("st0", "comp0", "ring0", "heads0", "W0")})
+        with enable_x64():
+            c0 = _bs_grid_carry(pp, (Gp, Rp))
+            carry = (c0[0], _dev(np.zeros((Gp, Rp)), jnp.int32)) + c0[1:]
+            carry, tagged, rec_t = _call(
+                _bs_fail_grid_shard_call, carry,
+                _dev(pg(p["arrival"]), jnp.float64),
+                _dev(pg(p["cls"]), jnp.int32),
+                _dev(pg(p["need"]), jnp.int32),
+                _dev(pg(p["service"]), jnp.float64),
+                _dev(pg(p["ft"]), jnp.float64),
+                _dev(pg(p["ftgt"]), jnp.int32),
+                _dev(pg(p["fup"]), jnp.float64),
+                _dev(pg(p["j_live"]), jnp.int32),
+                p["C_pad"], p["s_max_pad"], p["h_pad"], p["q_cap_pad"],
+                p["length"], mesh)
+            ovf = carry[9]
+        return _bs_grid_extract(cells, p, np.asarray(tagged)[:G, :R],
+                                np.asarray(rec_t)[:G, :R],
+                                np.asarray(ovf)[:G, :R])
+    p = _bs_grid_plan(cells)
+    pp = dict(p, **{k: pg(p[k])
+                    for k in ("st0", "comp0", "ring0", "heads0", "W0")})
+    with enable_x64():
+        c0 = _bs_grid_carry(pp, (Gp, Rp))
+        carry = c0 + (_dev(np.zeros((Gp, Rp)), jnp.int32),)
+        carry, tagged, rec_t = _call(
+            _bs_grid_shard_call, carry,
+            _dev(pg(p["arrival"]), jnp.float64),
+            _dev(pg(p["cls"]), jnp.int32),
+            _dev(pg(p["need"]), jnp.int32),
+            _dev(pg(p["service"]), jnp.float64),
+            _dev(pg(p["j_live"]), jnp.int32),
+            p["C_pad"], p["s_max_pad"], p["h_pad"], p["q_cap_pad"],
+            2 * p["J_pad"], mesh)
+        ovf, ne = carry[8], carry[9]
+    assert (np.asarray(ne) == 2 * pg(p["j_live"])).all(), \
+        "BS grid scan under-ran its event budget"
+    return _bs_grid_extract(cells, p, np.asarray(tagged)[:G, :R],
+                            np.asarray(rec_t)[:G, :R],
+                            np.asarray(ovf)[:G, :R])

@@ -53,9 +53,11 @@ from . import engines
 from . import failures as flr
 from .partition import BalancedPartition, balanced_partition
 from .sim_jax import (_BIG, _bs_args, _bs_core, _bs_fail_core,
-                      _bs_scatter_events, _bs_stream_core, _fcfs_core,
-                      _fcfs_fail_core, _fcfs_stream_core, _loss_core,
-                      _modbs_core, _modbs_fail_core, _modbs_stream_core)
+                      _bs_fail_stream_core, _bs_scatter_events,
+                      _bs_stream_core, _fcfs_core, _fcfs_fail_core,
+                      _fcfs_fail_stream_core, _fcfs_stream_core, _loss_core,
+                      _modbs_core, _modbs_fail_core,
+                      _modbs_fail_stream_core, _modbs_stream_core)
 from .workload import BatchTrace, Workload
 
 #: waiting-time epsilon for P[wait > 0] — matches ``Simulation.wait_eps``
@@ -238,11 +240,16 @@ def _dev(x, dtype) -> jnp.ndarray:
     buffers on CPU (alignment depends on the allocator — run to run!),
     and the batched entry points below *donate* their input buffers:
     XLA writing into a donated zero-copy alias silently corrupts the
-    caller's ``BatchTrace`` arrays in place.  ``jnp.array`` copies by
-    default, which breaks the alias for the cost of one host memcpy —
-    noise next to the scan itself.
+    caller's ``BatchTrace`` arrays in place.  ``np.array`` copies
+    unconditionally, which breaks the alias for the cost of one host
+    memcpy — noise next to the scan itself — and ``jax.device_put`` of
+    the private copy transfers without compiling anything (``jnp.array``
+    builds a tiny per-shape convert executable, which would pollute the
+    one-program-per-grid ``compile_count`` the bench rows pin).  The
+    put must run under ``enable_x64`` — outside it the dtype is
+    canonicalized — and every caller already is.
     """
-    return jnp.array(x, dtype)
+    return jax.device_put(np.array(x, dtype))
 
 
 def loss_queue_sim_batch(arrival: np.ndarray, service: np.ndarray,
@@ -309,22 +316,32 @@ def _modbs_result(batch: BatchTrace, blocked, starts) -> BatchSimResult:
                           p_routed=blocked.mean(axis=1), start=starts)
 
 
-def _bs_result(batch: BatchTrace, tagged, rec_t, ovf,
-               q_cap: int) -> BatchSimResult:
+def _bs_check_ovf(ovf, q_cap: int, cell: str = "") -> None:
     ovf = np.asarray(ovf)
     if ovf.any():
         raise RuntimeError(
             f"helper-wait ring buffer overflow (queue_cap={q_cap}) in "
-            f"replication(s) {np.flatnonzero(ovf).tolist()} — workload "
-            f"unstable at this load, or raise queue_cap")
-    # one vectorized event->job scatter for the whole batch (no per-rep
-    # Python loop: host post-processing must not scale with R)
-    starts, served, routed = _bs_scatter_events(batch.num_jobs, tagged,
-                                                rec_t)
+            f"{cell}replication(s) {np.flatnonzero(ovf).tolist()} — "
+            f"workload unstable at this load, or raise queue_cap")
+
+
+def _bs_assemble(batch: BatchTrace, starts, served,
+                 routed) -> BatchSimResult:
+    """Per-job event arrays -> BatchSimResult (one shared op order)."""
     return BatchSimResult(response=starts + batch.service - batch.arrival,
                           wait=starts - batch.arrival,
                           p_helper=served.mean(axis=1), blocked=None,
                           p_routed=routed.mean(axis=1), start=starts)
+
+
+def _bs_result(batch: BatchTrace, tagged, rec_t, ovf,
+               q_cap: int) -> BatchSimResult:
+    _bs_check_ovf(ovf, q_cap)
+    # one vectorized event->job scatter for the whole batch (no per-rep
+    # Python loop: host post-processing must not scale with R)
+    starts, served, routed = _bs_scatter_events(batch.num_jobs, tagged,
+                                                rec_t)
+    return _bs_assemble(batch, starts, served, routed)
 
 
 # -- engine="jax" cores (the vmapped lax.scan substrate) --------------------
@@ -467,6 +484,460 @@ def bs_sim_batch(batch: BatchTrace,
 
 
 # --------------------------------------------------------------------------
+# Grid-native execution: a whole figure grid as ONE compiled program.
+#
+# A grid stacks heterogeneous (k, load) cells — each its own BatchTrace,
+# partition, and failure batch — onto one flattened (cells x reps) lane
+# axis and runs a single jitted scan program per policy.  Two padding
+# mechanisms make the shapes uniform without changing any cell's result:
+#
+# * J-padding: per-cell batches pad to the grid max J with the sentinel
+#   no-op jobs of ``BatchTrace.pad_jobs``.  The arrival-indexed scans
+#   (FCFS, ModBS) process them strictly after every real job, so slicing
+#   outputs to [:J_cell] recovers the unpadded path bit-for-bit; the
+#   event-indexed BS cores instead carry a per-lane ``j_live`` admission
+#   guard so padding never enters the rings.
+# * k-padding (dead capacity): heterogeneous k / C / s_max / h share one
+#   static shape by moving every per-cell size into the *initial carry* —
+#   dead servers are ``_BIG`` entries at the tail of the sorted free-time
+#   vectors (no finite completion ever undercuts them, so searchsorted
+#   positions and n-th-smallest reads see exactly the live prefix), and
+#   dead A-slots are permanently-busy ``_BIG`` completion entries (the
+#   same masking ``_modbs_init`` uses for ragged slot counts, and the
+#   drain-mode failure machinery uses for outages).
+#
+# The plans below build the stacked [G, R, ...] host arrays + per-lane
+# carries; the jax cores flatten to [G*R, ...] lanes and call the jitted
+# chunk entries; :mod:`repro.core.shard` reuses the same plans over a 2-D
+# (cells, reps) device mesh.  Every cell extracts through the same
+# ``_*_result`` helpers as the per-cell path — bit-identity (rtol=0) is
+# by construction and pinned in ``tests/test_grid.py``.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=(6, 7, 8, 9, 10),
+         donate_argnums=(1, 2, 3, 4))
+def _bs_grid_chunk(carry, arrival, cls, need, service, j_live,
+                   C: int, s_max: int, h: int, q_cap: int, length: int):
+    horizon = jnp.full(arrival.shape[0], jnp.inf, arrival.dtype)
+    return _bs_stream_core(arrival, cls, need, service, horizon, carry,
+                           C, s_max, h, q_cap, length, j_live=j_live)
+
+
+@partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5))
+def _fcfs_fail_grid_chunk(carry, t, n, svc, t_up, is_fail):
+    return jax.vmap(_fcfs_fail_stream_core)(carry, t, n, svc, t_up,
+                                            is_fail)
+
+
+@partial(jax.jit, static_argnums=(7, 8), donate_argnums=(1, 2, 3, 4, 5, 6))
+def _modbs_fail_grid_chunk(carry, t, c, n, svc, t_up, is_fail,
+                           s_max: int, C: int):
+    return jax.vmap(
+        lambda cr, a, b, nn, v, tu, isf: _modbs_fail_stream_core(
+            cr, a, b, nn, v, tu, isf, s_max, C))(
+        carry, t, c, n, svc, t_up, is_fail)
+
+
+@partial(jax.jit, static_argnums=(9, 10, 11, 12, 13),
+         donate_argnums=(1, 2, 3, 4, 5, 6, 7))
+def _bs_fail_grid_chunk(carry, arrival, cls, need, service, ft, ftgt, fup,
+                        j_live, C: int, s_max: int, h: int, q_cap: int,
+                        length: int):
+    return _bs_fail_stream_core(arrival, cls, need, service, ft, ftgt,
+                                fup, carry, C, s_max, h, q_cap, length,
+                                j_live=j_live)
+
+
+# -- host-side grid plans: stacked [G, R, ...] inputs + per-lane carries ----
+
+
+def _grid_jobs(cells):
+    """Stacked [G, R, J_pad] job arrays (``pad_jobs`` to the grid max J)."""
+    J_pad = max(c.batch.num_jobs for c in cells)
+    pads = [c.batch.pad_jobs(J_pad) for c in cells]
+    return (np.stack([p.arrival for p in pads]),
+            np.stack([p.cls for p in pads]),
+            np.stack([p.service for p in pads]),
+            np.stack([p.need for p in pads]), J_pad)
+
+
+def _grid_cell_parts(cells):
+    """Each cell's eq.-2 partition (explicit or derived from its wl)."""
+    parts = []
+    for g, cell in enumerate(cells):
+        if cell.partition is None and cell.wl is None:
+            raise ValueError(f"grid cell {g}: need a partition or a "
+                             f"workload")
+        parts.append(cell.partition if cell.partition is not None
+                     else balanced_partition(cell.wl))
+    return parts
+
+
+def _fcfs_grid_plan(cells) -> dict:
+    G, R = len(cells), cells[0].batch.reps
+    arrival, _, service, need, J_pad = _grid_jobs(cells)
+    k_pad = max(c.batch.k for c in cells)
+    W0 = np.zeros((G, R, k_pad))
+    for g, c in enumerate(cells):
+        W0[g, :, c.batch.k:] = _BIG      # dead servers: never free
+    return dict(arrival=arrival, need=need, service=service, W0=W0,
+                t0=np.zeros((G, R)), J_pad=J_pad)
+
+
+def _fcfs_grid_extract(cells, starts) -> list:
+    starts = np.asarray(starts)
+    return [_fcfs_result(c.batch, starts[g][:, :c.batch.num_jobs])
+            for g, c in enumerate(cells)]
+
+
+def _fcfs_fail_grid_plan(cells) -> dict:
+    """Merged arrival+failure streams, L-padded with identity drain rows
+    (``is_fail`` with ``t_up = 0`` — ``_kw_drain`` is then a no-op)."""
+    G, R = len(cells), cells[0].batch.reps
+    mss = [_merged_fcfs_inputs(c.batch, c.failures) for c in cells]
+    L_pad = max(ms.t.shape[1] for ms in mss)
+    t = np.zeros((G, R, L_pad))
+    n = np.ones((G, R, L_pad), np.int64)
+    svc = np.zeros((G, R, L_pad))
+    t_up = np.zeros((G, R, L_pad))
+    isf = np.ones((G, R, L_pad), bool)
+    for g, ms in enumerate(mss):
+        L = ms.t.shape[1]
+        t[g, :, :L] = ms.t
+        n[g, :, :L] = ms.need
+        svc[g, :, :L] = ms.service
+        t_up[g, :, :L] = ms.t_up
+        isf[g, :, :L] = ms.is_fail != 0
+    k_pad = max(c.batch.k for c in cells)
+    W0 = np.zeros((G, R, k_pad))
+    for g, c in enumerate(cells):
+        W0[g, :, c.batch.k:] = _BIG
+    return dict(t=t, n=n, svc=svc, t_up=t_up, isf=isf, W0=W0,
+                t0=np.zeros((G, R)), mss=mss)
+
+
+def _fcfs_fail_grid_extract(cells, mss, starts_m) -> list:
+    starts_m = np.asarray(starts_m)
+    out = []
+    for g, (c, ms) in enumerate(zip(cells, mss)):
+        starts = np.take_along_axis(starts_m[g], ms.job_pos, axis=1)
+        out.append(_with_drain_obs(_fcfs_result(c.batch, starts), c.batch,
+                                   c.failures))
+    return out
+
+
+def _modbs_grid_statics(cells, parts):
+    """(per-cell (slots, s_max, h), C_pad, s_max_pad, h_pad)."""
+    args = [_partition_args(c.batch, part, None)
+            for c, part in zip(cells, parts)]
+    return (args, max(len(a[0]) for a in args), max(a[1] for a in args),
+            max(a[2] for a in args))
+
+
+def _modbs_grid_carry(args, C_pad: int, s_max_pad: int, h_pad: int,
+                      R: int):
+    """Per-lane (comp0, W0, t0): padded classes/slots permanently busy,
+    padded helper servers dead ``_BIG`` tail entries."""
+    G = len(args)
+    comp0 = np.full((G, R, C_pad, s_max_pad), _BIG)
+    W0 = np.zeros((G, R, h_pad))
+    for g, (slots, _, h) in enumerate(args):
+        live = np.arange(s_max_pad)[None, :] < slots[:, None]
+        comp0[g, :, :len(slots), :] = np.where(live, 0.0, _BIG)
+        W0[g, :, h:] = _BIG
+    return comp0, W0, np.zeros((G, R))
+
+
+def _modbs_grid_plan(cells) -> dict:
+    G, R = len(cells), cells[0].batch.reps
+    arrival, cls_, service, need, J_pad = _grid_jobs(cells)
+    parts = _grid_cell_parts(cells)
+    args, C_pad, s_max_pad, h_pad = _modbs_grid_statics(cells, parts)
+    comp0, W0, t0 = _modbs_grid_carry(args, C_pad, s_max_pad, h_pad, R)
+    return dict(arrival=arrival, cls=cls_, need=need, service=service,
+                comp0=comp0, W0=W0, t0=t0, s_max_pad=s_max_pad,
+                J_pad=J_pad)
+
+
+def _modbs_grid_extract(cells, blocked, starts) -> list:
+    blocked = np.asarray(blocked)
+    starts = np.asarray(starts)
+    out = []
+    for g, c in enumerate(cells):
+        J = c.batch.num_jobs
+        out.append(_modbs_result(c.batch, blocked[g][:, :J],
+                                 starts[g][:, :J]))
+    return out
+
+
+def _modbs_fail_grid_plan(cells) -> dict:
+    """Merged streams with the helper-drain class marker remapped from the
+    per-cell C to the grid C_pad, L-padded with identity helper drains."""
+    G, R = len(cells), cells[0].batch.reps
+    parts = _grid_cell_parts(cells)
+    args, C_pad, s_max_pad, h_pad = _modbs_grid_statics(cells, parts)
+    mss = []
+    for cell, part in zip(cells, parts):
+        ft, ftgt, fup, count = flr.partition_targets(cell.failures, part)
+        mss.append(flr.merge_failure_stream(cell.batch, ft, ftgt, fup,
+                                            count, pad_cls=len(part.a)))
+    L_pad = max(ms.t.shape[1] for ms in mss)
+    t = np.zeros((G, R, L_pad))
+    c_ = np.full((G, R, L_pad), C_pad, np.int64)
+    n = np.ones((G, R, L_pad), np.int64)
+    svc = np.zeros((G, R, L_pad))
+    t_up = np.zeros((G, R, L_pad))
+    isf = np.ones((G, R, L_pad), bool)
+    for g, (ms, part) in enumerate(zip(mss, parts)):
+        L = ms.t.shape[1]
+        C_cell = len(part.a)
+        t[g, :, :L] = ms.t
+        # the helper-drain marker is "class == C" with C a static of the
+        # step: remap the per-cell marker to the grid's C_pad
+        c_[g, :, :L] = np.where(ms.cls == C_cell, C_pad, ms.cls)
+        n[g, :, :L] = ms.need
+        svc[g, :, :L] = ms.service
+        t_up[g, :, :L] = ms.t_up
+        isf[g, :, :L] = ms.is_fail != 0
+    comp0, W0, t0 = _modbs_grid_carry(args, C_pad, s_max_pad, h_pad, R)
+    return dict(t=t, cls=c_, need=n, svc=svc, t_up=t_up, isf=isf,
+                comp0=comp0, W0=W0, t0=t0, s_max_pad=s_max_pad,
+                C_pad=C_pad, mss=mss)
+
+
+def _modbs_fail_grid_extract(cells, mss, blocked_m, starts_m) -> list:
+    blocked_m = np.asarray(blocked_m)
+    starts_m = np.asarray(starts_m)
+    out = []
+    for g, (c, ms) in enumerate(zip(cells, mss)):
+        starts = np.take_along_axis(starts_m[g], ms.job_pos, axis=1)
+        blocked = np.take_along_axis(blocked_m[g], ms.job_pos, axis=1)
+        out.append(_with_drain_obs(_modbs_result(c.batch, blocked, starts),
+                                   c.batch, c.failures))
+    return out
+
+
+def _bs_grid_plan(cells) -> dict:
+    G, R = len(cells), cells[0].batch.reps
+    arrival, cls_, service, need, J_pad = _grid_jobs(cells)
+    args = [_bs_args(c.batch, c.partition, c.wl, c.queue_cap)
+            for c in cells]                  # (slots, s_max, h, q_cap)
+    C_pad = max(len(a[0]) for a in args)
+    s_max_pad = max(a[1] for a in args)
+    h_pad = max(a[2] for a in args)
+    q_cap_pad = max(a[3] for a in args)
+    st0 = np.zeros((G, R, 3 * C_pad), np.int32)
+    W0 = np.zeros((G, R, h_pad))
+    for g, (slots, _, h, _) in enumerate(args):
+        st0[g, :, :len(slots)] = slots       # free counters; padded C = 0
+        W0[g, :, h:] = _BIG                  # dead helper servers
+    j_live = np.broadcast_to(
+        np.array([c.batch.num_jobs for c in cells],
+                 np.int32)[:, None], (G, R))
+    return dict(arrival=arrival, cls=cls_, need=need, service=service,
+                st0=st0, W0=W0, j_live=np.ascontiguousarray(j_live),
+                comp0=np.full((G, R, C_pad * s_max_pad), _BIG),
+                ring0=np.zeros((G, R, C_pad * q_cap_pad), np.int32),
+                heads0=np.full((G, R, C_pad), J_pad, np.int32),
+                C_pad=C_pad, s_max_pad=s_max_pad, h_pad=h_pad,
+                q_cap_pad=q_cap_pad, J_pad=J_pad,
+                q_caps=[a[3] for a in args])
+
+
+def _bs_grid_carry(plan, lead: tuple):
+    """The BS event-scan carry of a grid plan with leading shape ``lead``
+    (``(L,)`` flattened lanes, or ``(G, R)`` for the 2-D sharded mesh; no
+    ``fi``/``ne`` — callers append the variant-specific counters)."""
+    rs = lambda a: a.reshape(lead + a.shape[2:])
+    return (_dev(np.zeros(lead), jnp.int32),
+            _dev(rs(plan["st0"]), jnp.int32),
+            _dev(rs(plan["comp0"]), jnp.float64),
+            _dev(rs(plan["ring0"]), jnp.int32),
+            _dev(rs(plan["heads0"]), jnp.int32),
+            _dev(rs(plan["W0"]), jnp.float64),
+            _dev(np.zeros(lead), jnp.float64),
+            _dev(np.zeros(lead), jnp.float64),
+            _dev(np.zeros(lead), jnp.bool_))
+
+
+def _bs_grid_extract(cells, plan, tagged, rec_t, ovf) -> list:
+    tagged = np.asarray(tagged)
+    rec_t = np.asarray(rec_t)
+    ovf = np.asarray(ovf)
+    J_pad = plan["J_pad"]
+    out = []
+    for g, c in enumerate(cells):
+        _bs_check_ovf(ovf[g], plan["q_caps"][g], cell=f"grid cell {g} ")
+        starts, served, routed = _bs_scatter_events(J_pad, tagged[g],
+                                                    rec_t[g])
+        J = c.batch.num_jobs
+        res = _bs_assemble(c.batch, starts[:, :J], served[:, :J],
+                           routed[:, :J])
+        if c.failures is not None:
+            res = _with_drain_obs(res, c.batch, c.failures)
+        out.append(res)
+    return out
+
+
+def _bs_fail_grid_plan(cells) -> dict:
+    """BS plan plus F-padded failure records (``t_down = inf`` rows never
+    fire) with the helper marker remapped from per-cell C to C_pad."""
+    plan = _bs_grid_plan(cells)
+    G, R = len(cells), cells[0].batch.reps
+    C_pad, J_pad = plan["C_pad"], plan["J_pad"]
+    frecs = [_bs_fail_args(c.batch, c.failures, c.partition, c.wl)
+             for c in cells]                 # (ft, ftgt, fup, length)
+    F_pad = max(fr[0].shape[1] for fr in frecs)
+    ft = np.full((G, R, F_pad), np.inf)
+    ftgt = np.full((G, R, F_pad), C_pad, np.int32)
+    fup = np.zeros((G, R, F_pad))
+    length = 0
+    parts = _grid_cell_parts(cells)
+    for g, (fr, part) in enumerate(zip(frecs, parts)):
+        F = fr[0].shape[1]
+        C_cell = len(part.a)
+        ft[g, :, :F] = fr[0]
+        ftgt[g, :, :F] = np.where(fr[1] == C_cell, C_pad, fr[1])
+        fup[g, :, :F] = fr[2]
+        # per-cell event budget at the grid J/F: 2*J_pad covers every
+        # job's two events, F_pad every failure, fa the repair
+        # completions of free-slot drains
+        fa = fr[3] - 2 * cells[g].batch.num_jobs - max(1, F)
+        length = max(length, 2 * J_pad + F_pad + fa)
+    plan.update(ft=ft, ftgt=ftgt, fup=fup, length=length)
+    return plan
+
+
+# -- grid cores, engine="jax": flatten (cells, reps) -> one lane axis -------
+
+
+@engines.register_grid("fcfs", "jax")
+def _fcfs_grid_jax(cells):
+    G, R = len(cells), cells[0].batch.reps
+    L = G * R
+    if cells[0].failures is not None:
+        for c in cells:
+            flr.require_drain(c.failures, "jax")
+        p = _fcfs_fail_grid_plan(cells)
+        with enable_x64():
+            carry = (_dev(p["W0"].reshape(L, -1), jnp.float64),
+                     _dev(p["t0"].reshape(L), jnp.float64))
+            _, starts_m = _call(
+                _fcfs_fail_grid_chunk, carry,
+                _dev(p["t"].reshape(L, -1), jnp.float64),
+                _dev(p["n"].reshape(L, -1), jnp.int32),
+                _dev(p["svc"].reshape(L, -1), jnp.float64),
+                _dev(p["t_up"].reshape(L, -1), jnp.float64),
+                _dev(p["isf"].reshape(L, -1), jnp.bool_))
+        return _fcfs_fail_grid_extract(
+            cells, p["mss"], np.asarray(starts_m).reshape(G, R, -1))
+    p = _fcfs_grid_plan(cells)
+    with enable_x64():
+        carry = (_dev(p["W0"].reshape(L, -1), jnp.float64),
+                 _dev(p["t0"].reshape(L), jnp.float64))
+        _, starts = _call(
+            _fcfs_stream_chunk, carry,
+            _dev(p["arrival"].reshape(L, -1), jnp.float64),
+            _dev(p["need"].reshape(L, -1), jnp.int32),
+            _dev(p["service"].reshape(L, -1), jnp.float64))
+    return _fcfs_grid_extract(cells, np.asarray(starts).reshape(G, R, -1))
+
+
+@engines.register_grid("modbs-fcfs", "jax")
+def _modbs_grid_jax(cells):
+    G, R = len(cells), cells[0].batch.reps
+    L = G * R
+    if cells[0].failures is not None:
+        for c in cells:
+            flr.require_drain(c.failures, "jax")
+        p = _modbs_fail_grid_plan(cells)
+        with enable_x64():
+            carry = (_dev(p["comp0"].reshape(L, *p["comp0"].shape[2:]),
+                          jnp.float64),
+                     _dev(p["W0"].reshape(L, -1), jnp.float64),
+                     _dev(p["t0"].reshape(L), jnp.float64))
+            _, (blocked_m, starts_m) = _call(
+                _modbs_fail_grid_chunk, carry,
+                _dev(p["t"].reshape(L, -1), jnp.float64),
+                _dev(p["cls"].reshape(L, -1), jnp.int32),
+                _dev(p["need"].reshape(L, -1), jnp.int32),
+                _dev(p["svc"].reshape(L, -1), jnp.float64),
+                _dev(p["t_up"].reshape(L, -1), jnp.float64),
+                _dev(p["isf"].reshape(L, -1), jnp.bool_),
+                p["s_max_pad"], p["C_pad"])
+        return _modbs_fail_grid_extract(
+            cells, p["mss"], np.asarray(blocked_m).reshape(G, R, -1),
+            np.asarray(starts_m).reshape(G, R, -1))
+    p = _modbs_grid_plan(cells)
+    with enable_x64():
+        carry = (_dev(p["comp0"].reshape(L, *p["comp0"].shape[2:]),
+                      jnp.float64),
+                 _dev(p["W0"].reshape(L, -1), jnp.float64),
+                 _dev(p["t0"].reshape(L), jnp.float64))
+        _, (blocked, starts) = _call(
+            _modbs_stream_chunk, carry,
+            _dev(p["arrival"].reshape(L, -1), jnp.float64),
+            _dev(p["cls"].reshape(L, -1), jnp.int32),
+            _dev(p["need"].reshape(L, -1), jnp.int32),
+            _dev(p["service"].reshape(L, -1), jnp.float64),
+            p["s_max_pad"])
+    return _modbs_grid_extract(cells,
+                               np.asarray(blocked).reshape(G, R, -1),
+                               np.asarray(starts).reshape(G, R, -1))
+
+
+@engines.register_grid("bs-fcfs", "jax")
+def _bs_grid_jax(cells):
+    G, R = len(cells), cells[0].batch.reps
+    L = G * R
+    if cells[0].failures is not None:
+        for c in cells:
+            flr.require_drain(c.failures, "jax")
+        p = _bs_fail_grid_plan(cells)
+        with enable_x64():
+            c0 = _bs_grid_carry(p, (L,))
+            carry = (c0[0], _dev(np.zeros(L), jnp.int32)) + c0[1:]
+            carry, tagged, rec_t = _call(
+                _bs_fail_grid_chunk, carry,
+                _dev(p["arrival"].reshape(L, -1), jnp.float64),
+                _dev(p["cls"].reshape(L, -1), jnp.int32),
+                _dev(p["need"].reshape(L, -1), jnp.int32),
+                _dev(p["service"].reshape(L, -1), jnp.float64),
+                _dev(p["ft"].reshape(L, -1), jnp.float64),
+                _dev(p["ftgt"].reshape(L, -1), jnp.int32),
+                _dev(p["fup"].reshape(L, -1), jnp.float64),
+                _dev(p["j_live"].reshape(L), jnp.int32),
+                p["C_pad"], p["s_max_pad"], p["h_pad"], p["q_cap_pad"],
+                p["length"])
+            ovf = carry[9]
+        return _bs_grid_extract(cells, p,
+                                np.asarray(tagged).reshape(G, R, -1),
+                                np.asarray(rec_t).reshape(G, R, -1),
+                                np.asarray(ovf).reshape(G, R))
+    p = _bs_grid_plan(cells)
+    with enable_x64():
+        c0 = _bs_grid_carry(p, (L,))
+        carry = c0 + (_dev(np.zeros(L), jnp.int32),)  # + ne
+        carry, tagged, rec_t = _call(
+            _bs_grid_chunk, carry,
+            _dev(p["arrival"].reshape(L, -1), jnp.float64),
+            _dev(p["cls"].reshape(L, -1), jnp.int32),
+            _dev(p["need"].reshape(L, -1), jnp.int32),
+            _dev(p["service"].reshape(L, -1), jnp.float64),
+            _dev(p["j_live"].reshape(L), jnp.int32),
+            p["C_pad"], p["s_max_pad"], p["h_pad"], p["q_cap_pad"],
+            2 * p["J_pad"])
+        ovf, ne = carry[8], carry[9]
+    assert (np.asarray(ne) == 2 * p["j_live"].reshape(L)).all(), \
+        "BS grid scan under-ran its event budget"
+    return _bs_grid_extract(cells, p,
+                            np.asarray(tagged).reshape(G, R, -1),
+                            np.asarray(rec_t).reshape(G, R, -1),
+                            np.asarray(ovf).reshape(G, R))
+
+
+# --------------------------------------------------------------------------
 # k-sweeps.
 # --------------------------------------------------------------------------
 
@@ -547,6 +1018,7 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
                       policies: Sequence[str] = ("fcfs", "modbs-fcfs",
                                                  "bs-fcfs"),
                       engine: str = "jax",
+                      grid: bool = True,
                       failures=None,
                       ckpt_dir: str | None = None,
                       resume: bool = False,
@@ -554,27 +1026,41 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
     """Run the batched simulators over ``wl_factory(point)`` for each point.
 
     One batch of ``reps`` Philox replications x ``num_jobs`` arrivals is
-    sampled per point; each policy's batched scan is jit-compiled once per
-    (k, reps, num_jobs) shape, so sweeps that hold k fixed (Fig. 2a's load
-    sweep) compile exactly once.  ``engine`` selects the substrate via the
-    registry of :mod:`repro.core.engines`: ``"jax"`` (vmapped lax.scan,
-    the default), ``"jax-shard"`` (the same cores with the replications
-    axis sharded over the local device mesh — see
-    :mod:`repro.core.shard`; use ``configure_runtime(devices=N)`` before
-    the first JAX call to expose N host devices), ``"pallas"`` (fused
-    step kernels, interpret mode off-TPU — bit-identical, slower on CPU),
-    or ``"python"`` (the exact event engine — slow, but the same
-    interface).  Any ``(policy, engine)`` registry pair sweeps; unknown
-    policies raise ``KeyError``.  Returns mean/CI arrays
-    [policies, points].
+    sampled per point.  With ``grid=True`` (the default) the sweep is
+    **grid-native**: per policy, every not-yet-checkpointed point becomes
+    one :class:`~repro.core.engines.GridCell` and a single
+    :func:`engines.simulate_grid` launch runs the whole grid as one
+    compiled program (cells k/J-padded onto one lane axis — see the grid
+    section of this module; on ``engine="jax-shard"`` the (cells, reps)
+    plane shards over the 2-D mesh of :func:`repro.core.shard.grid_mesh`).
+    Every cell is bit-identical to the per-cell path, so ``grid`` only
+    changes wall-clock: ``sim_s`` then records the grid launch wall time
+    amortized uniformly over its cells.  ``grid=False`` keeps the
+    point-major per-cell dispatch (one ``engines.simulate`` per cell with
+    exact per-cell timing — the baseline ``bench="grid"`` benchmarks
+    compare against).  Engines without a registered grid core (python,
+    pallas) fall back to per-cell dispatch inside ``simulate_grid``.
+
+    ``engine`` selects the substrate via the registry of
+    :mod:`repro.core.engines`: ``"jax"`` (vmapped lax.scan, the default),
+    ``"jax-shard"`` (device-mesh sharding — see :mod:`repro.core.shard`;
+    use ``configure_runtime(devices=N)`` before the first JAX call to
+    expose N host devices), ``"pallas"`` (fused step kernels, interpret
+    mode off-TPU — bit-identical, slower on CPU), or ``"python"`` (the
+    exact event engine — slow, but the same interface).  Any ``(policy,
+    engine)`` registry pair sweeps; unknown policies raise ``KeyError``.
+    Returns mean/CI arrays [policies, points].
 
     ``failures`` injects degraded-capacity scenarios (see
     :func:`_sweep_failures`).  ``ckpt_dir`` makes the sweep crash-
     resumable: every (point, policy) cell is written atomically
-    (:mod:`repro.checkpoint`) as its own checkpoint step the moment it
-    completes, and ``resume=True`` restores completed cells — including
-    their recorded ``sim_s`` — instead of re-simulating, so a sweep killed
-    mid-run resumes from the last completed cell with bit-identical
+    (:mod:`repro.checkpoint`) as its own checkpoint step the moment its
+    results exist — per cell in the per-cell path, extracted per cell
+    right after each grid launch returns — and ``resume=True`` restores
+    completed cells — including their recorded ``sim_s`` — instead of
+    re-simulating.  The cell-step numbering (``point * P + policy``) is
+    identical in both modes, so a sweep checkpointed per-cell resumes
+    forward under ``grid=True`` and vice versa, with bit-identical
     output.
     """
     if engine not in engines.available_engines():
@@ -599,51 +1085,86 @@ def sweep_many_server(wl_factory: Callable[..., Workload], points: Sequence,
     if resume:
         from repro.checkpoint import completed_steps
         done = set(completed_steps(ckpt_dir))
-    for j, pt in enumerate(points):
-        # a fully checkpointed point restores without sampling: the traces
-        # are only needed to simulate, not to read back cell metrics
-        todo = [i for i in range(P) if j * P + i not in done]
-        wl = batch = busy = fb = None
-        if todo:
-            wl = wl_factory(pt)
+
+    # a fully checkpointed point restores without sampling: the traces are
+    # only needed to simulate, not to read back cell metrics.  Sampling is
+    # per-point Philox (order-independent), so the grid path sampling
+    # points policy-by-policy is bit-identical to the point-major path.
+    sampled: dict[int, tuple] = {}
+
+    def _point_data(j: int) -> tuple:
+        if j not in sampled:
+            wl = wl_factory(points[j])
             batch = wl.sample_traces(num_jobs, reps, seed=seed)
             busy = (batch.need * batch.service).sum(axis=1)    # [R]
-            if failures is not None:
-                fb = _sweep_failures(failures, wl, batch, seed)
+            fb = (_sweep_failures(failures, wl, batch, seed)
+                  if failures is not None else None)
+            sampled[j] = (wl, batch, busy, fb)
+        return sampled[j]
+
+    def _restore_cell(i: int, j: int, pol: str) -> None:
+        from repro.checkpoint import require_layout, restore_checkpoint
+        cell = j * P + i
+        tree, _, extra = restore_checkpoint(
+            ckpt_dir, {"cell": np.zeros(len(cells))}, step=cell)
+        require_layout(extra, {"policy": pol}, context=f"cell {cell}")
+        for arr, v in zip(cells, tree["cell"]):
+            arr[i, j] = v
+
+    def _record_cell(i: int, j: int, pol: str, res, wall: float) -> None:
+        wl, batch, busy, _ = sampled[j]
+        sim_s[i, j] = wall
+        mean_r[i, j] = res.mean_response.mean()
+        ci_r[i, j] = _ci95(res.mean_response)
+        mean_w[i, j] = res.mean_wait.mean()
+        p_wait[i, j] = res.p_wait.mean()
+        ci_pw[i, j] = _ci95(res.p_wait)
+        if res.p_helper is not None:
+            p_help[i, j] = res.p_helper.mean()
+        p95[i, j] = np.percentile(res.response, 95, axis=1).mean()
+        completion = batch.arrival + res.response
+        horizon = completion.max(axis=1)                       # [R]
+        util[i, j] = (busy / (wl.k * horizon)).mean()
+        if ckpt_dir is not None:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(
+                ckpt_dir, j * P + i,
+                {"cell": np.array([a[i, j] for a in cells])},
+                extra={"point": repr(points[j]), "policy": pol})
+
+    if grid:
         for i, pol in enumerate(policies):
-            cell = j * P + i
-            if cell in done:
-                from repro.checkpoint import (require_layout,
-                                              restore_checkpoint)
-                tree, _, extra = restore_checkpoint(
-                    ckpt_dir, {"cell": np.zeros(len(cells))}, step=cell)
-                require_layout(extra, {"policy": pol},
-                               context=f"cell {cell}")
-                for arr, v in zip(cells, tree["cell"]):
-                    arr[i, j] = v
+            todo = []
+            for j in range(N):
+                if j * P + i in done:
+                    _restore_cell(i, j, pol)
+                else:
+                    todo.append(j)
+            if not todo:
                 continue
+            gcells = []
+            for j in todo:
+                wl, batch, _, fb = _point_data(j)
+                gcells.append(engines.GridCell(batch=batch, wl=wl,
+                                               failures=fb))
             t0 = time.time()
-            res = engines.simulate(pol, batch, engine=engine, wl=wl,
-                                   **({} if fb is None
-                                      else {"failures": fb}))
-            sim_s[i, j] = time.time() - t0
-            mean_r[i, j] = res.mean_response.mean()
-            ci_r[i, j] = _ci95(res.mean_response)
-            mean_w[i, j] = res.mean_wait.mean()
-            p_wait[i, j] = res.p_wait.mean()
-            ci_pw[i, j] = _ci95(res.p_wait)
-            if res.p_helper is not None:
-                p_help[i, j] = res.p_helper.mean()
-            p95[i, j] = np.percentile(res.response, 95, axis=1).mean()
-            completion = batch.arrival + res.response
-            horizon = completion.max(axis=1)                   # [R]
-            util[i, j] = (busy / (wl.k * horizon)).mean()
-            if ckpt_dir is not None:
-                from repro.checkpoint import save_checkpoint
-                save_checkpoint(
-                    ckpt_dir, cell,
-                    {"cell": np.array([a[i, j] for a in cells])},
-                    extra={"point": repr(pt), "policy": pol})
+            results = engines.simulate_grid(pol, gcells, engine=engine)
+            wall = (time.time() - t0) / len(todo)
+            for j, res in zip(todo, results):
+                _record_cell(i, j, pol, res, wall)
+    else:
+        for j in range(N):
+            for i, pol in enumerate(policies):
+                if j * P + i in done:
+                    _restore_cell(i, j, pol)
+                    continue
+                _, batch, _, fb = _point_data(j)
+                wl = sampled[j][0]
+                t0 = time.time()
+                res = engines.simulate(pol, batch, engine=engine, wl=wl,
+                                       **({} if fb is None
+                                          else {"failures": fb}))
+                _record_cell(i, j, pol, res, time.time() - t0)
     return SweepResult(points=tuple(points), policies=tuple(policies),
                        num_jobs=num_jobs, reps=reps,
                        mean_response=mean_r, ci95_response=ci_r,

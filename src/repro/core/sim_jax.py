@@ -222,14 +222,17 @@ def _kw_drain(W, t_up):
     return jnp.where(i == p, comp_f, W[jnp.where(i < p, i + 1, i)])
 
 
-def _fcfs_fail_core(t, n, svc, t_up, is_fail, k: int):
-    """FCFS over a chronologically merged arrival+failure stream.
+def _fcfs_fail_stream_core(carry, t, n, svc, t_up, is_fail):
+    """FCFS merged arrival+failure scan resumed from ``carry`` (one lane).
 
     Rows with ``is_fail`` drain W (``_kw_drain``); arrival rows are the
     ordinary Kiefer–Wolfowitz step.  Failures never touch ``t_prev`` —
     running jobs are not preempted, a breakdown only defers future starts.
     Start outputs of failure rows are garbage; the host gathers arrival
-    positions via ``MergedStream.job_pos``.
+    positions via ``MergedStream.job_pos``.  The carry is the plain
+    ``(W, t_prev)`` FCFS state, so per-lane grid carries (dead ``_BIG``
+    tail entries in W for k-padding) plug in directly, and padding rows
+    (``is_fail`` with ``t_up = 0``) are the identity.
     """
     def step(carry, inp):
         W, t_prev = carry
@@ -238,9 +241,13 @@ def _fcfs_fail_core(t, n, svc, t_up, is_fail, k: int):
         W_new = jnp.where(isf, _kw_drain(W, tu), W_a)
         return (W_new, jnp.where(isf, t_prev, start)), start
 
-    W0 = jnp.zeros(k, dtype=t.dtype)
-    (_, _), starts = jax.lax.scan(step, (W0, jnp.zeros((), t.dtype)),
-                                  (t, n, svc, t_up, is_fail))
+    return jax.lax.scan(step, carry, (t, n, svc, t_up, is_fail))
+
+
+def _fcfs_fail_core(t, n, svc, t_up, is_fail, k: int):
+    """FCFS over a merged arrival+failure stream, from an empty system."""
+    _, starts = _fcfs_fail_stream_core(_fcfs_carry0(k, t.dtype),
+                                       t, n, svc, t_up, is_fail)
     return starts
 
 
@@ -348,14 +355,27 @@ def _modbs_fail_step(carry, inp, *, s_max: int, C: int):
     return (comp, W_new, t_prev_new), (blocked & ~isf, start)
 
 
+def _modbs_fail_stream_core(carry, t, c, n, svc, t_up, is_fail,
+                            s_max: int, C: int):
+    """ModBS merged arrival+failure scan resumed from ``carry`` (one lane).
+
+    The carry is the plain ``(comp, W, t_prev)`` ModBS state, so per-lane
+    grid carries (permanently-busy ``_BIG`` padding in comp for class/slot
+    padding, dead tail entries in W for helper padding) plug in directly;
+    padding rows — helper drains (``c == C``) with ``t_up = 0`` — are the
+    identity.
+    """
+    return jax.lax.scan(partial(_modbs_fail_step, s_max=s_max, C=C), carry,
+                        (t, c, n, svc, t_up, is_fail))
+
+
 def _modbs_fail_core(t, c, n, svc, t_up, is_fail, slots, s_max: int,
                      h: int):
     """ModBS-FCFS over a merged arrival+failure stream (single lane)."""
     C = slots.shape[0]
     carry0 = _modbs_init(slots, s_max, h, t.dtype)
-    (_, _, _), (blocked, starts) = jax.lax.scan(
-        partial(_modbs_fail_step, s_max=s_max, C=C), carry0,
-        (t, c, n, svc, t_up, is_fail))
+    (_, _, _), (blocked, starts) = _modbs_fail_stream_core(
+        carry0, t, c, n, svc, t_up, is_fail, s_max, C)
     return blocked, starts
 
 
@@ -607,8 +627,14 @@ def _bs_core(arrival, cls, need, service, slots, s_max: int, h: int,
 
 
 def _bs_stream_make_step(jobrec, horizon, C: int, s_max: int, h: int,
-                         q_cap: int):
+                         q_cap: int, j_live=None):
     """Chunk-resumable variant of ``_bs_make_step`` (streaming execution).
+
+    ``j_live`` (optional, [R] int32) caps the per-lane admitted arrivals:
+    jobs at index >= ``j_live[r]`` are padding that the lane never sees —
+    the J-padding guard of the grid driver, where heterogeneous-J cells
+    are stacked to a shared [L, J_pad] shape.  ``None`` (the streaming
+    path) admits every job, i.e. ``j_live = J``.
 
     Identical event semantics with two additions that make a *bounded*
     scan over one chunk of the job stream exact:
@@ -636,6 +662,7 @@ def _bs_stream_make_step(jobrec, horizon, C: int, s_max: int, h: int,
     dt = jobrec.dtype
     INF = jnp.asarray(jnp.inf, dt)
     GUARD = jnp.asarray(0.5 * _BIG, dt)
+    jl = J if j_live is None else j_live
     lanes = jnp.arange(R)
     lanes1 = lanes[:, None]
     ar = jnp.arange(h)[None, :]
@@ -651,7 +678,7 @@ def _bs_stream_make_step(jobrec, horizon, C: int, s_max: int, h: int,
 
         j_arr = jnp.minimum(ai, J - 1)
         rec_a = rec(j_arr)
-        Ta = jnp.where(ai < J, rec_a[:, 0], INF)
+        Ta = jnp.where(ai < jl, rec_a[:, 0], INF)
         cm = jnp.argmin(comp, axis=1).astype(jnp.int32)
         Tc = taa(comp, cm)
         gh_job = jnp.min(heads, axis=1)
@@ -668,7 +695,7 @@ def _bs_stream_make_step(jobrec, horizon, C: int, s_max: int, h: int,
         is_commit = (Th <= Tc) & (Th <= Ta) & (Th <= horizon)
         is_comp = ((~is_commit) & (Tc < Ta) & (Tc < horizon)
                    & (Tc < GUARD))
-        is_arr = (~is_commit) & (~is_comp) & (ai < J)
+        is_arr = (~is_commit) & (~is_comp) & (ai < jl)
         ne = ne + jnp.where(is_commit | is_comp | is_arr, 1, 0)
 
         # --- arrival (rule 1), as in _bs_make_step
@@ -755,7 +782,8 @@ def _bs_stream_make_step(jobrec, horizon, C: int, s_max: int, h: int,
 
 
 def _bs_stream_core(arrival, cls, need, service, horizon, carry,
-                    C: int, s_max: int, h: int, q_cap: int, length: int):
+                    C: int, s_max: int, h: int, q_cap: int, length: int,
+                    j_live=None):
     """One BS-FCFS chunk scan resumed from ``carry``, batched over lanes.
 
     ``arrival``/``cls``/``need``/``service`` are the chunk's job records
@@ -772,14 +800,19 @@ def _bs_stream_core(arrival, cls, need, service, horizon, carry,
     dt = arrival.dtype
     jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
                        axis=2)
-    step = _bs_stream_make_step(jobrec, horizon, C, s_max, h, q_cap)
+    step = _bs_stream_make_step(jobrec, horizon, C, s_max, h, q_cap,
+                                j_live=j_live)
     carry, (tagged, rec_t) = jax.lax.scan(step, carry, None, length=length)
     return carry, tagged.T, rec_t.T
 
 
 def _bs_fail_make_step(jobrec, failrec, C: int, s_max: int, h: int,
-                       q_cap: int):
+                       q_cap: int, j_live=None):
     """Failure-aware variant of ``_bs_make_step``.
+
+    ``j_live`` (optional, [R] int32) is the per-lane J-padding guard of
+    ``_bs_stream_make_step`` — lanes never admit arrivals at index
+    >= ``j_live[r]``; ``None`` admits every job.
 
     ``failrec`` is the packed [R, F, 3] (t_down, target, t_up) event
     array from :func:`repro.core.failures.partition_targets`, sorted
@@ -807,6 +840,7 @@ def _bs_fail_make_step(jobrec, failrec, C: int, s_max: int, h: int,
     dt = jobrec.dtype
     INF = jnp.asarray(jnp.inf, dt)
     GUARD = jnp.asarray(0.5 * _BIG, dt)
+    jl = J if j_live is None else j_live
     lanes = jnp.arange(R)
     lanes1 = lanes[:, None]
     ar = jnp.arange(h)[None, :]
@@ -825,7 +859,7 @@ def _bs_fail_make_step(jobrec, failrec, C: int, s_max: int, h: int,
 
         j_arr = jnp.minimum(ai, J - 1)
         rec_a = rec(j_arr)
-        Ta = jnp.where(ai < J, rec_a[:, 0], INF)
+        Ta = jnp.where(ai < jl, rec_a[:, 0], INF)
         cm = jnp.argmin(comp, axis=1).astype(jnp.int32)
         Tc = taa(comp, cm)
         gh_job = jnp.min(heads, axis=1)
@@ -846,7 +880,7 @@ def _bs_fail_make_step(jobrec, failrec, C: int, s_max: int, h: int,
         is_fail = (Tf <= Ta) & (Tf <= Tc) & (Tf <= Th) & (Tf < INF)
         is_commit = (~is_fail) & (Th <= Tc) & (Th <= Ta)
         is_comp = (~is_fail) & (~is_commit) & (Tc < Ta) & (Tc < GUARD)
-        is_arr = (~is_fail) & (~is_commit) & (~is_comp) & (ai < J)
+        is_arr = (~is_fail) & (~is_commit) & (~is_comp) & (ai < jl)
         fi = fi + jnp.where(is_fail, 1, 0)
 
         # --- arrival (rule 1), as in _bs_make_step
@@ -960,6 +994,26 @@ def _bs_fail_make_step(jobrec, failrec, C: int, s_max: int, h: int,
     return step
 
 
+def _bs_fail_stream_core(arrival, cls, need, service, ft, ftgt, fup,
+                         carry, C: int, s_max: int, h: int, q_cap: int,
+                         length: int, j_live=None):
+    """BS-FCFS drained-capacity event scan resumed from ``carry``.
+
+    The carry-accepting form of :func:`_bs_fail_core` — per-lane grid
+    carries (padded free-slot counters, dead ``_BIG`` helper entries) and
+    the ``j_live`` J-padding guard plug in directly; padding failure rows
+    (``t_down = inf``) never fire thanks to the ``Tf < INF`` selector.
+    """
+    dt = arrival.dtype
+    jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
+                       axis=2)
+    failrec = jnp.stack([ft, ftgt.astype(dt), fup], axis=2)  # [R, F, 3]
+    step = _bs_fail_make_step(jobrec, failrec, C, s_max, h, q_cap,
+                              j_live=j_live)
+    carry, (tagged, rec_t) = jax.lax.scan(step, carry, None, length=length)
+    return carry, tagged.T, rec_t.T
+
+
 def _bs_fail_core(arrival, cls, need, service, ft, ftgt, fup, slots,
                   s_max: int, h: int, q_cap: int, length: int):
     """BS-FCFS sample paths with drained-capacity failure events.
@@ -973,15 +1027,12 @@ def _bs_fail_core(arrival, cls, need, service, ft, ftgt, fup, slots,
     R, J = arrival.shape
     C = slots.shape[0]
     dt = arrival.dtype
-    jobrec = jnp.stack([arrival, service, cls.astype(dt), need.astype(dt)],
-                       axis=2)
-    failrec = jnp.stack([ft, ftgt.astype(dt), fup], axis=2)  # [R, F, 3]
-    step = _bs_fail_make_step(jobrec, failrec, C, s_max, h, q_cap)
     c0 = _bs_init(R, J, C, s_max, h, q_cap, slots, dt)
     carry0 = (c0[0], jnp.zeros(R, jnp.int32)) + c0[1:]
-    (_, _, _, _, _, _, _, _, _, ovf), (tagged, rec_t) \
-        = jax.lax.scan(step, carry0, None, length=length)
-    return tagged.T, rec_t.T, ovf
+    carry, tagged, rec_t = _bs_fail_stream_core(
+        arrival, cls, need, service, ft, ftgt, fup, carry0,
+        C, s_max, h, q_cap, length)
+    return tagged, rec_t, carry[9]
 
 
 def _bs_scatter_events(J: int, tagged, rec_t):

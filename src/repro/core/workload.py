@@ -333,6 +333,60 @@ class BatchTrace:
                           service=self.service[:, start:stop],
                           need=self.need[:, start:stop], k=self.k, C=self.C)
 
+    def pad_jobs(self, j_max: int) -> "BatchTrace":
+        """Pad every replication to ``j_max`` jobs with sentinel no-ops.
+
+        The one padding rule shared by grid stacking (heterogeneous-J
+        cells padded to the grid max) and the streaming substrate.
+        Sentinel jobs sit at the trace horizon — each repeats the
+        replication's final arrival time (keeping arrivals nondecreasing
+        and finite, so the padded batch still passes
+        ``engines.validate_batch``) with ``service=0``, ``need=1``,
+        ``cls=0``.  Arrival-ordered scan cores therefore process them
+        strictly after every real job, and per-lane ``j_live`` guards
+        (the BS event cores) never admit them at all; either way the
+        first ``num_jobs`` outputs are bit-identical to the unpadded run.
+        """
+        J = self.num_jobs
+        if j_max < J:
+            raise ValueError(f"cannot pad {J} jobs down to {j_max}")
+        if j_max == J:
+            return self
+        pad = j_max - J
+        last = (self.arrival[:, -1:] if J
+                else np.zeros((self.reps, 1), self.arrival.dtype))
+        return BatchTrace(
+            arrival=np.concatenate(
+                [self.arrival, np.repeat(last, pad, axis=1)], axis=1),
+            cls=np.concatenate(
+                [self.cls, np.zeros((self.reps, pad), self.cls.dtype)],
+                axis=1),
+            service=np.concatenate(
+                [self.service,
+                 np.zeros((self.reps, pad), self.service.dtype)], axis=1),
+            need=np.concatenate(
+                [self.need, np.ones((self.reps, pad), self.need.dtype)],
+                axis=1),
+            k=self.k, C=self.C)
+
+    def pad_reps(self, r_max: int) -> "BatchTrace":
+        """Pad to ``r_max`` replications by repeating the last lane.
+
+        Device-count padding for the sharded engines: duplicate lanes
+        compute redundantly and are sliced away, so results are
+        bit-identical to the unpadded batch.
+        """
+        R = self.reps
+        if r_max < R:
+            raise ValueError(f"cannot pad {R} replications down to {r_max}")
+        if r_max == R:
+            return self
+        idx = np.concatenate(
+            [np.arange(R), np.full(r_max - R, R - 1, dtype=np.int64)])
+        return BatchTrace(arrival=self.arrival[idx], cls=self.cls[idx],
+                          service=self.service[idx], need=self.need[idx],
+                          k=self.k, C=self.C)
+
     def chunks(self, chunk_jobs: int):
         """Iterate the batch as consecutive ``chunk_jobs``-sized sub-batches.
 

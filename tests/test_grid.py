@@ -1,0 +1,137 @@
+"""Grid-native execution parity: every k/J-padded grid cell bit-identical
+(rtol=0) to the per-cell ``engines.simulate`` path, for every registered
+grid (policy, engine) pair — heterogeneous k (32 vs 256: dead-server /
+dead-slot masking), heterogeneous J (sentinel job padding), clean and
+drain-mode failure cells, plus the per-cell fallback dispatch of engines
+without a grid core."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import engines
+from repro.core.failures import FailureProcess
+from repro.core.workload import Exp, JobClass, Workload
+
+#: every (policy, engine) with a native grid core, registry-iterated so a
+#: newly registered core is parity-pinned without touching this file
+GRID_PAIRS = sorted(engines.grid_registered())
+
+#: heterogeneous (k, J) cells: both padding axes exercised at k in
+#: {32, 256} per the dead-capacity masking contract
+CELL_SHAPES = ((32, 200), (256, 120))
+
+
+def _wl(k, load=0.8):
+    return Workload(k=k, lam=1.0, classes=(
+        JobClass("s", 1, Exp(1.0), 0.7),
+        JobClass("m", 4, Exp(4.0), 0.2),
+        JobClass("l", 8, Exp(8.0), 0.1))).with_load(load)
+
+
+def _cells(reps=3, seed=0, failures=False):
+    cells = []
+    for g, (k, J) in enumerate(CELL_SHAPES):
+        wl = _wl(k)
+        batch = wl.sample_traces(J, reps, seed=seed + g)
+        fb = None
+        if failures:
+            horizon = float(batch.arrival.max())
+            fb = FailureProcess(mtbf=horizon / 2, mttr=horizon / 40,
+                                mode="drain").sample(k, horizon, reps,
+                                                     seed=seed + g)
+        cells.append(engines.GridCell(batch, wl=wl, failures=fb))
+    return cells
+
+
+def _assert_result_equal(ref, res):
+    for f in dataclasses.fields(ref):
+        a, b = getattr(ref, f.name), getattr(res, f.name)
+        if a is None or b is None:
+            assert a is None and b is None, f.name
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+
+
+@pytest.mark.parametrize("policy,engine", GRID_PAIRS)
+def test_grid_cells_bit_identical_to_per_cell(policy, engine):
+    cells = _cells()
+    out = engines.simulate_grid(policy, cells, engine=engine)
+    assert len(out) == len(cells)
+    for cell, res in zip(cells, out):
+        ref = engines.simulate(policy, cell.batch, engine=engine,
+                               wl=cell.wl)
+        _assert_result_equal(ref, res)
+
+
+@pytest.mark.parametrize("policy,engine", GRID_PAIRS)
+def test_grid_failure_cells_bit_identical_to_per_cell(policy, engine):
+    cells = _cells(failures=True)
+    out = engines.simulate_grid(policy, cells, engine=engine)
+    for cell, res in zip(cells, out):
+        ref = engines.simulate(policy, cell.batch, engine=engine,
+                               wl=cell.wl, failures=cell.failures)
+        _assert_result_equal(ref, res)
+
+
+def test_grid_fallback_dispatches_per_cell():
+    """Engines without a grid core still serve ``simulate_grid`` —
+    per-cell dispatch through the ordinary registry, same results."""
+    cells = _cells()
+    for engine in ("python", "pallas"):
+        if ("fcfs", engine) not in engines.registered():
+            continue
+        assert ("fcfs", engine) not in engines.grid_registered()
+        out = engines.simulate_grid("fcfs", cells, engine=engine)
+        for cell, res in zip(cells, out):
+            ref = engines.simulate("fcfs", cell.batch, engine=engine,
+                                   wl=cell.wl)
+            _assert_result_equal(ref, res)
+
+
+def test_grid_rejects_ragged_reps_and_mixed_failures():
+    cells = _cells(reps=3)
+    wl = _wl(32)
+    odd = engines.GridCell(wl.sample_traces(50, 2, seed=9), wl=wl)
+    with pytest.raises(ValueError, match="reps"):
+        engines.simulate_grid("fcfs", cells[:1] + [odd])
+    mixed = _cells(failures=True)[:1] + _cells()[1:]
+    with pytest.raises(ValueError, match="failure"):
+        engines.simulate_grid("fcfs", mixed)
+
+
+# -- the shared padding helpers the grid plans are built on ----------------
+
+
+def test_pad_jobs_sentinels_and_noop():
+    wl = _wl(32)
+    batch = wl.sample_traces(50, 2, seed=0)
+    assert batch.pad_jobs(50) is batch
+    with pytest.raises(ValueError):
+        batch.pad_jobs(49)
+    p = batch.pad_jobs(64)
+    assert p.num_jobs == 64 and p.reps == 2 and p.k == batch.k
+    np.testing.assert_array_equal(p.arrival[:, :50], batch.arrival)
+    np.testing.assert_array_equal(p.service[:, :50], batch.service)
+    # sentinels: final arrival repeated, zero service, unit need, class 0
+    assert (p.arrival[:, 50:] == batch.arrival[:, -1:]).all()
+    assert (p.service[:, 50:] == 0).all()
+    assert (p.need[:, 50:] == 1).all()
+    assert (p.cls[:, 50:] == 0).all()
+    assert (np.diff(p.arrival, axis=1) >= 0).all()
+    engines.validate_batch(p)
+
+
+def test_pad_reps_repeats_last_lane():
+    wl = _wl(32)
+    batch = wl.sample_traces(40, 2, seed=0)
+    assert batch.pad_reps(2) is batch
+    with pytest.raises(ValueError):
+        batch.pad_reps(1)
+    p = batch.pad_reps(5)
+    assert p.reps == 5 and p.num_jobs == 40
+    np.testing.assert_array_equal(p.arrival[:2], batch.arrival)
+    for r in range(2, 5):
+        np.testing.assert_array_equal(p.arrival[r], batch.arrival[-1])
+        np.testing.assert_array_equal(p.need[r], batch.need[-1])

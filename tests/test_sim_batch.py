@@ -247,6 +247,61 @@ def test_check_bench_regression_passes_and_fails_correctly():
     assert len(failures) == 1 and "traces:jax-batch/fcfs" in failures[0]
 
 
+def test_check_bench_regression_missing_committed_cells():
+    mod = pytest.importorskip(
+        "benchmarks.check_bench_regression",
+        reason="benchmarks package needs repo root on sys.path")
+
+    def report(rows, config=None):
+        return {"schema": "bench_sim/v1", "config": config or {},
+                "rows": rows}
+
+    def row(bench, engine, policy, jps, dc=1):
+        return {"bench": bench, "engine": engine, "policy": policy,
+                "jobs_per_sec": jps, "device_count": dc}
+
+    base = report([row("fig1-critical", "jax-batch", "fcfs", 1000.0),
+                   row("fig1-critical", "jax-batch", "bs-fcfs", 800.0),
+                   row("grid", "jax-batch", "fcfs", 2000.0),
+                   row("fig1-critical", "jax-shard", "fcfs", 900.0, dc=4),
+                   row("fig1-critical", "python", "fcfs", 100.0)])
+    cfg_all = {"scenario": "all", "device_count": 1,
+               "engines": ["python", "jax-batch", "jax-shard"]}
+    # a full-coverage run that silently drops a committed cell fails
+    # loudly (the dc=4 jax-shard cell is NOT required: this run's
+    # topology is dc=1, so it could not have produced that cell)
+    fresh = report([row("fig1-critical", "jax-batch", "fcfs", 1000.0),
+                    row("grid", "jax-batch", "fcfs", 2000.0),
+                    row("fig1-critical", "python", "fcfs", 100.0)],
+                   cfg_all)
+    failures = mod.check(fresh, base, factor=2.0, host_cpus=8)
+    assert len(failures) == 1
+    assert "missing" in failures[0] and "bs-fcfs" in failures[0]
+    # scenario scoping: a fig1-only run owes no grid rows
+    cfg_fig1 = dict(cfg_all, scenario="fig1")
+    fresh_fig1 = report(
+        [row("fig1-critical", "jax-batch", "fcfs", 1000.0),
+         row("fig1-critical", "jax-batch", "bs-fcfs", 800.0),
+         row("fig1-critical", "python", "fcfs", 100.0)], cfg_fig1)
+    assert mod.check(fresh_fig1, base, factor=2.0, host_cpus=8) == []
+    # engine scoping: a --engines jax-batch run owes no python rows
+    cfg_nopy = dict(cfg_fig1, engines=["jax-batch"])
+    fresh_nopy = report(
+        [row("fig1-critical", "jax-batch", "fcfs", 1000.0),
+         row("fig1-critical", "jax-batch", "bs-fcfs", 800.0)], cfg_nopy)
+    assert mod.check(fresh_nopy, base, factor=2.0, host_cpus=8) == []
+    # topology scoping: a dc=4 jax-shard run that drops its committed
+    # dc=4 cell fails — unless that topology over-subscribes the host
+    cfg_dc4 = dict(cfg_fig1, device_count=4, engines=["jax-shard"])
+    failures = mod.check(report([], cfg_dc4), base, factor=2.0,
+                         host_cpus=8)
+    assert len(failures) == 1 and "jax-shard" in failures[0]
+    assert mod.check(report([], cfg_dc4), base, factor=2.0,
+                     host_cpus=2) == []
+    # pre-config reports (no scenario recorded) skip the guard entirely
+    assert mod.check(report([]), base, factor=2.0, host_cpus=8) == []
+
+
 # -- bench harness ------------------------------------------------------------
 
 
@@ -278,16 +333,17 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     rows = on_disk["rows"]
     # fig1: 5 engines x 3 policies per k; traces: 4 engines x 3 policies;
     # failures: 3 engines x 3 policies (no pallas — no capacity mask);
-    # streaming: jax-batch x 3 policies (no python baseline)
-    assert len(rows) == 15 * len(on_disk["config"]["ks"]) + 12 + 9 + 3
+    # grid: 2 engines x 3 policies (jax-batch + jax-shard — no python
+    # baseline, no pallas grid core); streaming: jax-batch x 3 policies
+    assert len(rows) == 15 * len(on_disk["config"]["ks"]) + 12 + 9 + 6 + 3
     assert {r["bench"] for r in rows} == {"fig1-critical", "traces",
-                                          "failures", "streaming"}
+                                          "failures", "grid", "streaming"}
     for r in rows:
         assert set(bench_sim.ROW_KEYS) <= set(r)
         assert r["engine"] in bench_sim.ALL_ENGINES
         assert r["jobs_per_sec"] > 0 and r["wall_s"] > 0
         assert r["device_count"] >= 1
-        if r["engine"] == "python" or r["bench"] == "streaming":
+        if r["engine"] == "python" or r["bench"] in ("grid", "streaming"):
             assert r["speedup_vs_python"] is None
         else:
             assert r["speedup_vs_python"] > 0
@@ -297,11 +353,20 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
     for r in streaming:
         assert r["chunk_jobs"] >= 1     # streaming-only extra key
         assert r["peak_rss_mb"] > 0
+    grid = [r for r in rows if r["bench"] == "grid"]
+    assert {r["policy"] for r in grid} == {"fcfs", "modbs-fcfs", "bs-fcfs"}
+    for r in grid:
+        assert r["percell_jobs_per_sec"] > 0   # grid-only extra keys
+        assert r["grid_speedup"] > 0
+    # the one-program-per-figure claim, asserted: the whole k-grid
+    # compiles exactly one XLA program per policy on the in-process path
+    assert all(r["compile_count"] == 1 for r in grid
+               if r["engine"] == "jax-batch")
     # the point of the substrate: batched beats the event engine — in the
     # synthetic scenario, on the empirical bootstrap batch, and with the
     # failure branch live in every scan step
     batched = [r for r in rows if r["engine"] == "jax-batch"
-               and r["bench"] != "streaming"]
+               and r["bench"] not in ("grid", "streaming")]
     assert {r["bench"] for r in batched} == {"fig1-critical", "traces",
                                              "failures"}
     assert all(r["speedup_vs_python"] > 1 for r in batched)
