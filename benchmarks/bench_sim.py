@@ -1,6 +1,7 @@
 """Simulation-substrate benchmark — tracks the hot-path perf trajectory.
 
-Five scenarios (``--scenario {fig1,traces,failures,grid,streaming,all}``):
+Six scenarios
+(``--scenario {fig1,traces,failures,grid,streaming,srpt,all}``):
 the Fig. 1 critical-regime synthetic workload (``bench="fig1-critical"``),
 the Fig. 3 empirical-trace path (``bench="traces"``: an SDSC-SP2
 synthesized log, moving-block-bootstrapped into replications via
@@ -18,7 +19,13 @@ and the constant-memory streaming path (``bench="streaming"``:
 ``engines.simulate_stream`` chunk-scanning an unbounded Poisson source
 at fixed ``chunk_jobs`` — rows carry a ``peak_rss_mb`` column whose
 flatness between the 10^6- and 10^7-job fcfs cells is the
-O(R x chunk_jobs) memory claim; see :func:`bench_streaming`).
+O(R x chunk_jobs) memory claim; see :func:`bench_streaming`),
+and the preemptive-scan path (``bench="srpt"``: the SRPT family
+``ff-srpt``/``sf-srpt`` on the Fig. 3 SDSC-SP2 bootstrap batch per k,
+with a python-oracle baseline at one pivot k and a dense small-k grid
+whose rows pin ``compile_count == 1``; the SRPT policies are *excluded*
+from the legacy scenarios so their committed cell set stays stable —
+see :func:`bench_srpt`).
 Each times five engines (``--engines`` selects a subset):
 
 * ``python``    — the exact event-driven engine (the correctness oracle)
@@ -102,6 +109,18 @@ ENGINE_LABELS = (("jax", "jax-batch"), ("pallas", "pallas"),
 
 #: every engine label a row may carry (the --engines CLI choices)
 ALL_ENGINES = ("python", "jax", "jax-batch", "pallas", "jax-shard")
+
+#: the preemptive SRPT-family scan policies — benchmarked by their own
+#: ``srpt`` scenario only, so the legacy scenarios' committed cell set
+#: (and their smoke wall-time) stays stable as the registry grows
+SRPT_POLICIES = ("ff-srpt", "sf-srpt")
+
+
+def _scan_policies(engine: str) -> tuple[str, ...]:
+    """Registry policies for ``engine`` minus the SRPT family (those
+    rows live in :func:`bench_srpt`, ``bench="srpt"``)."""
+    return tuple(p for p in engines.policies_for(engine)
+                 if p not in SRPT_POLICIES)
 
 
 def _row(engine, policy, k, jobs, reps, wall_s, compile_s=None,
@@ -213,7 +232,7 @@ def _registry_rows(batch, wl, k, jobs, reps, python_jps,
         # too (the intra-op pool is shared), and check_bench_regression
         # must never compare cells across topologies
         dc = jax.local_device_count()
-        for name in engines.policies_for(engine):
+        for name in _scan_policies(engine):
             def fn(e=engine, n=name):
                 return engines.simulate(
                     n, batch, engine=e, wl=wl,
@@ -241,7 +260,7 @@ def bench_traces(jobs: int, reps: int, python_jobs: int, seed: int = 0,
         trace_py = sdsc_sp2_trace(python_jobs, k=k, load=load, seed=seed)
         py_batch = BatchTrace.from_trace(trace_py, 1, seed=seed,
                                          method="block")
-        for pol in engines.policies_for("jax"):
+        for pol in _scan_policies("jax"):
             t0 = time.time()
             engines.simulate(pol, py_batch, engine="python", wl=wl)
             wall = time.time() - t0
@@ -285,7 +304,7 @@ def bench_failures(jobs: int, reps: int, python_jobs: int, seed: int = 0,
     if "python" in engines_sel:
         py_batch = wl.sample_traces(python_jobs, 1, seed=seed)
         fb_py = proc_for(py_batch)
-        for pol in engines.policies_for("jax"):
+        for pol in _scan_policies("jax"):
             t0 = time.time()
             engines.simulate(pol, py_batch, engine="python", wl=wl,
                              failures=fb_py)
@@ -330,7 +349,7 @@ def bench_grid(ks, jobs, reps, seed=0, theta=0.7,
         if label not in engines_sel or engine == "pallas":
             continue
         dc = jax.local_device_count()
-        for name in engines.policies_for(engine):
+        for name in _scan_policies(engine):
             def per_cell(e=engine, n=name):
                 for b, wl in cells:
                     engines.simulate(n, b, engine=e, wl=wl)
@@ -346,6 +365,106 @@ def bench_grid(ks, jobs, reps, seed=0, theta=0.7,
                                               1)
             r["grid_speedup"] = round(cell_wall / wall, 2)
             rows.append(r)
+    return rows
+
+
+#: srpt-scenario configs: batch cells per k on the SDSC-SP2 bootstrap
+#: (python baseline at ``python_k`` only — the preemptive oracle
+#: re-sorts the queue on every event, a baseline per k would dominate
+#: the bench) plus a dense small-k Fig.-1 grid for the one-program row.
+#: Smoke skips the grid part: its rows land in the same (bench, engine,
+#: policy, device_count) guard cells as the batch rows, and the four
+#: extra whole-grid compiles (~11 s) would bust the smoke wall budget —
+#: grid-path correctness is pinned by tests/test_grid.py instead.
+SRPT_SMOKE = {"ks": (64,), "python_k": 64, "jobs": 1_200, "reps": 2,
+              "python_jobs": 300}
+#: full scale: 32 replications saturate the vmapped sort throughput on
+#: one core, and queue_cap=160 trims the slot table to ~3x the measured
+#: peak in-system count (~60 at k=512, load 0.85) — the per-step rank
+#: sorts are the scan's whole cost, so an oversized Q is pure slowdown
+#: (overflow would raise, not mis-simulate; see ``_srpt_args``)
+SRPT_FULL = {"ks": (256, 512, 1024), "python_k": 512, "jobs": 3_000,
+             "reps": 32, "python_jobs": 2_000, "queue_cap": 160,
+             "grid": ((16, 24, 32, 48, 64, 96), 1_000, 2)}
+
+
+def bench_srpt(jobs, reps, python_jobs, seed=0, ks=(256, 512, 1024),
+               python_k=512, load=0.85, grid_cfg=None, queue_cap=None,
+               engines_sel=ALL_ENGINES) -> list[dict]:
+    """The preemptive-scan scenario (``bench="srpt"`` rows): the SRPT
+    family (``ff-srpt``/``sf-srpt``) on the Fig. 3 empirical path — an
+    SDSC-SP2 synthesized log, moving-block-bootstrapped into ``reps``
+    replications (``BatchTrace.from_trace``) — timed per k on every
+    registered engine.  The python oracle runs once, at ``python_k``
+    only, and prices the ``speedup_vs_python`` column of the matching
+    jitted rows (the committed k=512 cells carry the scan-vs-oracle
+    win on the exact batch the Fig. 3 panel runs).  ``grid_cfg``
+    optionally appends grid-native rows — a dense small-k Fig.-1 grid
+    through ``engines.simulate_grid`` whose ``compile_count`` pins the
+    one-program-per-grid claim for the SRPT cores exactly like the
+    ``grid`` scenario does for the FCFS family."""
+    rows = []
+    python_jps = {}
+    if "python" in engines_sel and python_k in ks:
+        wl = sdsc_sp2_workload(k=python_k, load=load)
+        trace_py = sdsc_sp2_trace(python_jobs, k=python_k, load=load,
+                                  seed=seed)
+        py_batch = BatchTrace.from_trace(trace_py, 1, seed=seed,
+                                         method="block")
+        for pol in SRPT_POLICIES:
+            t0 = time.time()
+            engines.simulate(pol, py_batch, engine="python", wl=wl)
+            wall = time.time() - t0
+            python_jps[pol] = python_jobs / wall
+            rows.append(_row("python", pol, python_k, python_jobs, 1,
+                             wall, bench="srpt"))
+    for k in ks:
+        trace = sdsc_sp2_trace(jobs, k=k, load=load, seed=seed)
+        batch = BatchTrace.from_trace(trace, reps, seed=seed,
+                                      method="block")
+        for engine, label in ENGINE_LABELS:
+            if label not in engines_sel:
+                continue
+            dc = jax.local_device_count()
+            for name in SRPT_POLICIES:
+                if (name, engine) not in engines.registered():
+                    continue
+                def fn(e=engine, n=name):
+                    return engines.simulate(n, batch, engine=e,
+                                            queue_cap=queue_cap)
+                wall, compile_s, warm, nc = _time_engine(fn)
+                r = _row(
+                    label, name, k, jobs, reps, wall,
+                    compile_s=compile_s,
+                    python_jps=(python_jps.get(name)
+                                if k == python_k else None),
+                    bench="srpt", device_count=dc, compile_warm_s=warm,
+                    compile_count=nc)
+                if queue_cap is not None:
+                    r["queue_cap"] = queue_cap   # srpt-only extra key
+                rows.append(r)
+    if grid_cfg:
+        gks, gjobs, greps = grid_cfg
+        gcells = []
+        for k in gks:
+            wl = figure1_workload(k, theta=0.7)
+            gcells.append(engines.GridCell(
+                wl.sample_traces(gjobs, greps, seed=seed), wl=wl))
+        grid_jobs = gjobs * len(gks)
+        for engine, label in ENGINE_LABELS:
+            if label not in engines_sel:
+                continue
+            dc = jax.local_device_count()
+            for name in SRPT_POLICIES:
+                if (name, engine) not in engines.grid_registered():
+                    continue
+                def gfn(e=engine, n=name):
+                    return engines.simulate_grid(n, gcells, engine=e)
+                wall, compile_s, warm, nc = _time_engine(gfn)
+                rows.append(_row(label, name, max(gks), grid_jobs,
+                                 greps, wall, compile_s=compile_s,
+                                 bench="srpt", device_count=dc,
+                                 compile_warm_s=warm, compile_count=nc))
     return rows
 
 
@@ -407,7 +526,7 @@ def bench_streaming(grid, reps, chunk_jobs, k, seed=0, backlog_cap=None,
 
 def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
         traces_k=512, engines_sel=ALL_ENGINES, streaming_cfg=None,
-        grid_cfg=None):
+        grid_cfg=None, srpt_cfg=None):
     rows = []
     if scenario in ("fig1", "all"):
         for k in ks:
@@ -429,6 +548,14 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
                                 cfg["chunk_jobs"], cfg["k"], seed=seed,
                                 backlog_cap=cfg.get("backlog_cap"),
                                 engines_sel=engines_sel)
+    if scenario in ("srpt", "all"):
+        cfg = srpt_cfg or SRPT_SMOKE
+        rows += bench_srpt(cfg["jobs"], cfg["reps"], cfg["python_jobs"],
+                           seed=seed, ks=cfg["ks"],
+                           python_k=cfg["python_k"],
+                           grid_cfg=cfg.get("grid"),
+                           queue_cap=cfg.get("queue_cap"),
+                           engines_sel=engines_sel)
     return {"schema": SCHEMA,
             "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
                        "python_jobs": python_jobs, "seed": seed,
@@ -436,6 +563,14 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
                                 {"ks": list(grid_cfg[0]),
                                  "jobs": grid_cfg[1],
                                  "reps": grid_cfg[2]}),
+                       "srpt": (None if srpt_cfg is None else
+                                {"ks": list(srpt_cfg["ks"]),
+                                 "python_k": srpt_cfg["python_k"],
+                                 "jobs": srpt_cfg["jobs"],
+                                 "reps": srpt_cfg["reps"],
+                                 "python_jobs": srpt_cfg["python_jobs"],
+                                 "queue_cap":
+                                     srpt_cfg.get("queue_cap")}),
                        "scenario": scenario, "traces_k": traces_k,
                        "engines": list(engines_sel),
                        "device_count": jax.local_device_count()},
@@ -462,7 +597,7 @@ def main(argv=None):
                     help="tiny config, < 60 s on CPU")
     ap.add_argument("--scenario",
                     choices=("fig1", "traces", "failures", "grid",
-                             "streaming", "all"),
+                             "streaming", "srpt", "all"),
                     default="all",
                     help="fig1 = synthetic critical-regime sweep; traces "
                          "= SDSC-SP2 bootstrap batch (the Fig. 3 path); "
@@ -473,7 +608,10 @@ def main(argv=None):
                          "loop (compile_count pins 1 program per grid); "
                          "streaming = simulate_stream chunked-carry rows "
                          "with the peak-RSS column (run standalone for a "
-                         "meaningful RSS high-water)")
+                         "meaningful RSS high-water); srpt = the "
+                         "preemptive ff-srpt/sf-srpt scan cores on the "
+                         "Fig. 3 SDSC-SP2 bootstrap batch per k, plus "
+                         "their one-program grid rows")
     ap.add_argument("--engines", nargs="+", choices=ALL_ENGINES,
                     default=None,
                     help="subset of engines to time (default: all; rows "
@@ -497,6 +635,7 @@ def main(argv=None):
     if args.smoke:
         ks, jobs, reps, pj, tk = (64,), 20_000, 4, 2_000, 256
         stream_cfg = STREAM_SMOKE
+        srpt_cfg = SRPT_SMOKE
         # two cells so the smoke grid actually stacks and k-pads
         grid_cfg = ((64, 128), 2_000, 2)
     else:
@@ -504,6 +643,7 @@ def main(argv=None):
         # per-step dispatch across lanes, and the CIs tighten for free
         ks, jobs, reps, pj, tk = (256, 1024), 100_000, 16, 100_000, 512
         stream_cfg = STREAM_FULL
+        srpt_cfg = SRPT_FULL
         # the committed grid topology: a *dense* 12-point k-grid in the
         # dispatch-bound regime (small cells, few reps) — exactly the
         # shape the scaling-regime sweeps of ROADMAP item 5 run, and the
@@ -518,9 +658,16 @@ def main(argv=None):
     pj = args.python_jobs or pj
     grid_cfg = (tuple(args.ks) if args.ks else grid_cfg[0],
                 args.jobs or grid_cfg[1], args.reps or grid_cfg[2])
+    srpt_cfg = {**srpt_cfg,
+                **({"ks": tuple(args.ks)} if args.ks else {}),
+                **({"jobs": args.jobs} if args.jobs else {}),
+                **({"reps": args.reps} if args.reps else {}),
+                **({"python_jobs": args.python_jobs}
+                   if args.python_jobs else {})}
     report = run(ks, jobs, reps, pj, scenario=args.scenario, traces_k=tk,
                  engines_sel=tuple(args.engines or ALL_ENGINES),
-                 streaming_cfg=stream_cfg, grid_cfg=grid_cfg)
+                 streaming_cfg=stream_cfg, grid_cfg=grid_cfg,
+                 srpt_cfg=srpt_cfg)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")

@@ -6,11 +6,13 @@ policy, device_count) cell present in both — the synthetic
 ``fig1-critical`` scenario, the empirical-bootstrap ``traces`` scenario,
 the degraded-capacity ``failures`` scenario (drain-mode outages
 merged into the scan event stream; python + jax-batch + jax-shard rows,
-no pallas — the fused kernels carry no capacity mask) and the
+no pallas — the fused kernels carry no capacity mask), the
 constant-memory ``streaming`` scenario (``simulate_stream`` chunked-carry
 rows; jax-batch only, no python baseline — their cells gate purely on
 their own committed jobs/sec minima, and the ``peak_rss_mb`` column is
-informational, not gated) are guarded
+informational, not gated) and the preemptive-scan ``srpt`` scenario
+(the ``ff-srpt``/``sf-srpt`` scan cores on the Fig. 3 bootstrap batch;
+python + jax-batch + jax-shard rows) are guarded
 independently, and cells measured on different
 device topologies are never compared with each other — the new
 ``jobs_per_sec`` must be at least ``1/factor`` of the *slowest* committed
@@ -69,9 +71,9 @@ Key = tuple
 #: which committed cells a fresh report was *configured* to reproduce
 SCENARIO_BENCHES = {"fig1": ("fig1-critical",), "traces": ("traces",),
                     "failures": ("failures",), "grid": ("grid",),
-                    "streaming": ("streaming",),
+                    "streaming": ("streaming",), "srpt": ("srpt",),
                     "all": ("fig1-critical", "traces", "failures", "grid",
-                            "streaming")}
+                            "streaming", "srpt")}
 
 
 def _min_jps_by_key(report: dict) -> dict[Key, float]:

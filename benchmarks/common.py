@@ -172,7 +172,10 @@ def run_policies_batch(batch: BatchTrace, wl: Workload | None,
     rows = []
     for name in policies:
         pol = engines.canonical(name)
-        use = engine if (pol, engine) in engines.registered() else "python"
+        use = engine
+        if engine != "python" and (pol, engine) not in engines.registered():
+            engines.warn_fallback(pol, engine)
+            use = "python"
         pre = (precomputed or {}).get(pol)
         if pre is not None:
             row = _batch_row(pol, batch, pre[0][cell])

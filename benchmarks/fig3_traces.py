@@ -9,18 +9,22 @@ The empirical traces run on the batched substrate: every cell bootstraps
 the trace into ``--reps`` replications (``BatchTrace.from_trace``, IID or
 moving-block via ``--bootstrap``) and dispatches each policy through the
 engine registry.  ``--engine jax`` (default) runs fcfs/modbs-fcfs/bs-fcfs
-on the vmapped scans with the remaining paper policies (SF-SRPT, FF-SRPT,
-MSF, ...) falling back to the exact Python engine; ``--engine jax-shard``
-shards the replications of those policies across the local device mesh
-(pair with ``--devices N``); ``--engine python`` runs everything on the
-event engine over the *same* bootstrap batch, so rows are bit-comparable
-across engines (the ``engine`` column records the core that actually ran
-each row).  ``--cache-dir`` enables the persistent compilation cache.
+*and* the preemptive sf-srpt/ff-srpt on the vmapped scans, with the
+remaining paper policies (MSF, LSF, MaxWeight, ...) falling back to the
+exact Python engine — every fallback is announced by a once-per-process
+``RuntimeWarning`` plus a row summary on stderr after the sweep;
+``--engine jax-shard`` shards the replications of the scan policies
+across the local device mesh (pair with ``--devices N``); ``--engine
+python`` runs everything on the event engine over the *same* bootstrap
+batch, so rows are bit-comparable across engines (the ``engine`` column
+records the core that actually ran each row).  ``--cache-dir`` enables
+the persistent compilation cache.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 
 from repro.core.workload import (BatchTrace, kit_fh2_workload,
                                  sdsc_sp2_workload)
@@ -128,6 +132,29 @@ def run_swf(path: str, k: int = 512, load: float = 0.85,
         extra_cols={"dataset": "swf", "k": k, "load": load})
 
 
+def report_fallbacks(rows: list[dict], engine: str, file=None) -> None:
+    """Name the rows that ran on the python oracle instead of ``engine``.
+
+    The per-row ``engine`` column already records the core that ran; this
+    aggregates it into one loud stderr line so a sweep log shows at a
+    glance which policies were downgraded (and therefore which wall-clock
+    numbers are oracle-bound).
+    """
+    file = file or sys.stderr
+    if engine == "python":
+        return
+    fell = sorted({r["policy"] for r in rows
+                   if r.get("engine") == "python"})
+    if fell:
+        print(f"# fallback: {len(fell)} polic"
+              f"{'y' if len(fell) == 1 else 'ies'} ran on the python "
+              f"oracle instead of engine={engine!r}: {', '.join(fell)}",
+              file=file)
+    else:
+        print(f"# no python fallback: every row ran on engine={engine!r}",
+              file=file)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=ENGINES, default="jax",
@@ -172,16 +199,18 @@ def main(argv=None):
     jobs = 1_000_000 if args.full else args.jobs
     pols = tuple(args.policies or PAPER_POLICIES)
     if args.swf:
-        emit(run_swf(args.swf, k=args.k, load=args.load, jobs=jobs,
-                     seed=args.seed, policies=pols, engine=args.engine,
-                     reps=args.reps, bootstrap=args.bootstrap or "block"),
-             COLS)
-        return
-    emit(run(num_jobs=jobs, seed=args.seed, ks=tuple(args.ks),
-             loads=tuple(args.loads), policies=pols, engine=args.engine,
-             reps=args.reps, bootstrap=args.bootstrap or "iid",
-             grid=not args.no_grid, ckpt_dir=args.ckpt_dir,
-             resume=args.resume), COLS)
+        rows = run_swf(args.swf, k=args.k, load=args.load, jobs=jobs,
+                       seed=args.seed, policies=pols, engine=args.engine,
+                       reps=args.reps, bootstrap=args.bootstrap or "block")
+    else:
+        rows = run(num_jobs=jobs, seed=args.seed, ks=tuple(args.ks),
+                   loads=tuple(args.loads), policies=pols,
+                   engine=args.engine, reps=args.reps,
+                   bootstrap=args.bootstrap or "iid",
+                   grid=not args.no_grid, ckpt_dir=args.ckpt_dir,
+                   resume=args.resume)
+    emit(rows, COLS)
+    report_fallbacks(rows, args.engine)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,28 @@ Registry contract
   Providers are imported lazily on first dispatch (``_PROVIDERS``), so
   importing this module costs nothing and there are no import cycles —
   this module never imports the core modules at top level.
+* **Coverage** (batch registry; ``+g`` marks a grid-native core)::
+
+      policy          python   jax      jax-shard   pallas
+      fcfs            yes      yes +g   yes +g      yes
+      modbs-fcfs      yes      yes +g   yes +g      yes
+      bs-fcfs         yes      yes +g   yes +g      yes
+      sf-srpt         yes      yes +g   yes +g      --
+      ff-srpt         yes      yes +g   yes +g      --
+      serverfilling,  yes      --       --          --
+      sf-gittins, msf, lsf, backfill, maxweight (oracle only)
+
+  The sf-srpt/ff-srpt scan cores are the preemptive event scans of
+  :mod:`repro.core.sim_jax` (per-job remaining work as carry state, a
+  bounded re-sort/re-pack per event); they cover the clean and grid
+  paths but not fault injection — ``failures=`` raises
+  ``NotImplementedError`` there (use ``engine="python"``).
+* **Fallback visibility**: :func:`simulate`/:func:`simulate_grid` accept
+  ``fallback=True`` to downgrade an unregistered pair to the python
+  oracle — announced by a once-per-process ``RuntimeWarning``
+  (:func:`warn_fallback`), never silently.  Benchmark drivers that
+  hand-route (``benchmarks.common.run_policies_batch``) call
+  :func:`warn_fallback` at their own substitution sites.
 
 Streaming registry
 ------------------
@@ -235,6 +257,42 @@ def get(policy: str, engine: str) -> Callable[..., "BatchSimResult"]:
                      f"registered engines: {list(engines_for(pol))}")
 
 
+#: (policy, engine) pairs that already emitted their fallback warning —
+#: one RuntimeWarning per process per pair, not one per replication batch
+_WARNED_FALLBACKS: set[tuple[str, str]] = set()
+
+
+def warn_fallback(policy: str, engine: str) -> None:
+    """Once-per-process ``RuntimeWarning`` for a python-oracle fallback.
+
+    The oracle is orders of magnitude slower than the scan engines, so a
+    sweep that quietly downgrades a (policy, engine) pair can burn hours
+    without anyone noticing *why*.  Every dispatch site that substitutes
+    ``engine="python"`` for an unregistered pair must announce it here.
+    """
+    import warnings
+    key = (canonical(policy), engine)
+    if key in _WARNED_FALLBACKS:
+        return
+    _WARNED_FALLBACKS.add(key)
+    warnings.warn(
+        f"policy {key[0]!r} has no engine {engine!r} core — falling back "
+        f"to the python event oracle (orders of magnitude slower); "
+        f"registered engines for this policy: {list(engines_for(key[0]))}",
+        RuntimeWarning, stacklevel=3)
+
+
+def _resolve_fallback(policy: str, engine: str, fallback: bool) -> str:
+    """The engine to dispatch, downgrading to ``"python"`` when allowed."""
+    pol = canonical(policy)
+    if (not fallback or engine == "python"
+            or (pol, engine) in registered()):
+        return engine
+    get(pol, "python")  # unknown policy stays a loud KeyError
+    warn_fallback(pol, engine)
+    return "python"
+
+
 def validate_batch(batch: "BatchTrace", *, partition=None,
                    failures=None) -> None:
     """Loud input validation shared by every engine.
@@ -284,7 +342,8 @@ def validate_batch(batch: "BatchTrace", *, partition=None,
 
 
 def simulate(policy: str, batch: "BatchTrace", *, engine: str = "jax",
-             partition=None, wl=None, **kw) -> "BatchSimResult":
+             partition=None, wl=None, fallback: bool = False,
+             **kw) -> "BatchSimResult":
     """Run ``batch`` through the registered ``(policy, engine)`` core.
 
     The single dispatch point of the simulation stack: no caller branches
@@ -293,7 +352,13 @@ def simulate(policy: str, batch: "BatchTrace", *, engine: str = "jax",
     keywords (e.g. ``queue_cap`` for ``bs-fcfs``) pass through.  Inputs
     are validated (:func:`validate_batch`) before dispatch — malformed
     batches fail loudly instead of folding NaNs through the scans.
+
+    ``fallback=True`` downgrades an unregistered ``(policy, engine)``
+    pair to the python event oracle instead of raising, announcing the
+    substitution with a once-per-process ``RuntimeWarning``
+    (:func:`warn_fallback`) — never silently.
     """
+    engine = _resolve_fallback(policy, engine, fallback)
     core = get(policy, engine)
     fb = kw.get("failures")
     validate_batch(batch, partition=partition,
@@ -403,9 +468,10 @@ class GridCell:
     matching :func:`simulate` keywords would; ``failures`` injects the
     cell's drain-mode :class:`~repro.core.failures.FailureBatch`;
     ``queue_cap`` bounds the BS-FCFS helper-wait rings (``None`` = the
-    per-cell default ``min(J, 8192)``).  Cells of one grid may differ in
-    k, J, class count, partition, and load — the grid cores pad them to a
-    shared shape without changing any cell's result.
+    per-cell default ``min(J, 8192)``) and the SRPT in-system slot
+    tables (``None`` = ``min(J, max(4k, 256))``).  Cells of one grid may
+    differ in k, J, class count, partition, and load — the grid cores
+    pad them to a shared shape without changing any cell's result.
     """
 
     batch: "BatchTrace"
@@ -428,7 +494,8 @@ def grid_engines_for(policy: str) -> tuple[str, ...]:
 
 
 def simulate_grid(policy: str, cells: Sequence[GridCell], *,
-                  engine: str = "jax", **kw) -> list:
+                  engine: str = "jax", fallback: bool = False,
+                  **kw) -> list:
     """Run every grid cell under one policy; one ``BatchSimResult`` each.
 
     Grid-native engines (:func:`grid_engines_for`; ``"jax"`` and
@@ -443,11 +510,15 @@ def simulate_grid(policy: str, cells: Sequence[GridCell], *,
     Constraints: at least one cell; every cell the same ``reps`` (the
     lane axis is cells × reps); failures all-or-none across cells (split
     mixed grids into two calls).  Extra keywords (e.g. ``devices`` for
-    ``jax-shard``) pass through to the core.
+    ``jax-shard``) pass through to the core.  ``fallback=True``
+    downgrades an unregistered ``(policy, engine)`` pair to the python
+    oracle with a once-per-process ``RuntimeWarning``, exactly like
+    :func:`simulate`.
     """
     cells = tuple(cells)
     if not cells:
         raise ValueError("simulate_grid needs at least one cell")
+    engine = _resolve_fallback(policy, engine, fallback)
     core = get(policy, engine)  # loud unknown-policy/engine errors first
     R = cells[0].batch.reps
     for g, cell in enumerate(cells):

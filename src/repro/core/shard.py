@@ -84,13 +84,16 @@ from .sim_batch import (_backends_initialized, _bs_fail_args,
                         _modbs_fail_grid_extract, _modbs_fail_grid_plan,
                         _modbs_grid_extract, _modbs_grid_plan, _modbs_result,
                         _modbs_stream_init, _partition_args, _scan_stream,
-                        _slice_stream_result, _stream_partition,
-                        _with_drain_obs)
+                        _slice_stream_result, _srpt_grid_carry,
+                        _srpt_grid_extract, _srpt_grid_plan,
+                        _srpt_no_failures, _srpt_nu, _srpt_result,
+                        _stream_partition, _with_drain_obs)
 from .sim_jax import (_bs_args, _bs_core, _bs_fail_core,
                       _bs_fail_stream_core, _bs_stream_core, _fcfs_core,
                       _fcfs_fail_core, _fcfs_fail_stream_core,
                       _fcfs_stream_core, _modbs_core, _modbs_fail_core,
-                      _modbs_fail_stream_core, _modbs_stream_core)
+                      _modbs_fail_stream_core, _modbs_stream_core,
+                      _srpt_args, _srpt_core, _srpt_stream_core)
 from .workload import BatchTrace
 
 _FLAG = "--xla_force_host_platform_device_count"
@@ -365,6 +368,16 @@ def _bs_shard_call(arrival, cls, need, service, slots, s_max: int, h: int,
         arrival, cls, need, service, slots)
 
 
+@partial(jax.jit, static_argnums=(4, 5, 6, 7))
+def _srpt_shard_call(arrival, need, service, kk, Q: int, NU: tuple,
+                     sf: bool, mesh: Mesh):
+    # _srpt_core carries the lane axis natively (per-lane sorts and
+    # 1-entry scatters, no cross-lane ops) — each shard runs its slice.
+    body = lambda a, n, v, k: _srpt_core(a, n, v, k, Q, NU, sf)
+    return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 4,
+                     out_specs=(P("r"),) * 6)(arrival, need, service, kk)
+
+
 # Failure-aware variants: identical scan cores as engine="jax"
 # (sim_jax._*_fail_core), merged streams built host-side from the UNPADDED
 # batch, then replication-padded like every other input.
@@ -495,6 +508,39 @@ def _bs_jax_shard(batch, *, partition=None, wl=None, queue_cap=None,
     return _with_drain_obs(
         _bs_result(batch, np.asarray(tagged)[:R], np.asarray(rec_t)[:R],
                    np.asarray(ovf)[:R], q_cap), batch, failures)
+
+
+def _srpt_jax_shard(sf: bool, batch, *, partition=None, wl=None,
+                    queue_cap=None, devices=None, failures=None):
+    policy = "sf-srpt" if sf else "ff-srpt"
+    _srpt_no_failures(failures, policy)
+    q_cap = _srpt_args(batch, queue_cap)
+    mesh = local_mesh(devices)
+    padded, R = _pad_batch(batch, mesh.size)
+    with enable_x64():
+        job_ev, t_ev, fs_ev, ovf, npre, ne = _call(
+            _srpt_shard_call,
+            _dev(padded.arrival, jnp.float64),
+            _dev(padded.need, jnp.float64),
+            _dev(padded.service, jnp.float64),
+            _dev(np.full(padded.reps, float(batch.k)), jnp.float64),
+            q_cap, _srpt_nu(batch), sf, mesh)
+    return _srpt_result(batch, np.asarray(job_ev)[:R],
+                        np.asarray(t_ev)[:R], np.asarray(fs_ev)[:R],
+                        np.asarray(ovf)[:R], np.asarray(npre)[:R],
+                        np.asarray(ne)[:R], q_cap)
+
+
+@engines.register("sf-srpt", "jax-shard")
+def _sf_srpt_jax_shard(batch, **kw):
+    """ServerFilling-SRPT preemptive event scan, replication-sharded."""
+    return _srpt_jax_shard(True, batch, **kw)
+
+
+@engines.register("ff-srpt", "jax-shard")
+def _ff_srpt_jax_shard(batch, **kw):
+    """FirstFit-SRPT preemptive event scan, replication-sharded."""
+    return _srpt_jax_shard(False, batch, **kw)
 
 
 # --------------------------------------------------------------------------
@@ -745,6 +791,19 @@ def _bs_grid_shard_call(carry, arrival, cls, need, service, j_live,
         carry, arrival, cls, need, service, j_live)
 
 
+@partial(jax.jit, static_argnums=(6, 7, 8, 9, 10))
+def _srpt_grid_shard_call(carry, arrival, need, service, kk, j_live,
+                          Q: int, NU: tuple, sf: bool, length: int,
+                          mesh: Mesh):
+    def body(c, a, n, v, k, jl):
+        f = lambda c1, a1, n1, v1, k1, jl1: _srpt_stream_core(
+            a1, n1, v1, k1, c1, Q, NU, sf, length, j_live=jl1)
+        return jax.vmap(f)(c, a, n, v, k, jl)
+    return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 6,
+                     out_specs=(P("c", "r"),) * 4)(
+        carry, arrival, need, service, kk, j_live)
+
+
 @partial(jax.jit, static_argnums=(6,))
 def _fcfs_fail_grid_shard_call(carry, t, n, svc, t_up, is_fail, mesh: Mesh):
     body = lambda c, a, b, d, e, f: jax.vmap(jax.vmap(
@@ -908,3 +967,35 @@ def _bs_grid_shard(cells, devices=None):
     return _bs_grid_extract(cells, p, np.asarray(tagged)[:G, :R],
                             np.asarray(rec_t)[:G, :R],
                             np.asarray(ovf)[:G, :R])
+
+
+def _srpt_grid_shard(sf: bool, cells, devices=None):
+    policy = "sf-srpt" if sf else "ff-srpt"
+    _srpt_no_failures(cells[0].failures, policy)
+    mesh, G, R, Gp, Rp = _grid_mesh_pads(cells, devices)
+    pg = lambda a: _pad_gr(a, Gp, Rp)
+    p = _srpt_grid_plan(cells)
+    with enable_x64():
+        carry = _srpt_grid_carry((Gp, Rp), p["Q_pad"])
+        carry, job_ev, t_ev, fs_ev = _call(
+            _srpt_grid_shard_call, carry,
+            _dev(pg(p["arrival"]), jnp.float64),
+            _dev(pg(p["need"]), jnp.float64),
+            _dev(pg(p["service"]), jnp.float64),
+            _dev(pg(p["kk"]), jnp.float64),
+            _dev(pg(p["j_live"]), jnp.int32),
+            p["Q_pad"], p["NU"], sf, 2 * p["J_pad"], mesh)
+    return _srpt_grid_extract(
+        cells, p, np.asarray(job_ev)[:G, :R], np.asarray(t_ev)[:G, :R],
+        np.asarray(fs_ev)[:G, :R], np.asarray(carry[2])[:G, :R],
+        np.asarray(carry[3])[:G, :R], np.asarray(carry[4])[:G, :R])
+
+
+@engines.register_grid("sf-srpt", "jax-shard")
+def _sf_srpt_grid_shard(cells, devices=None):
+    return _srpt_grid_shard(True, cells, devices)
+
+
+@engines.register_grid("ff-srpt", "jax-shard")
+def _ff_srpt_grid_shard(cells, devices=None):
+    return _srpt_grid_shard(False, cells, devices)

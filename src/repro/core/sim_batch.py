@@ -52,12 +52,14 @@ from jax.experimental import enable_x64
 from . import engines
 from . import failures as flr
 from .partition import BalancedPartition, balanced_partition
-from .sim_jax import (_BIG, _bs_args, _bs_core, _bs_fail_core,
+from .sim_jax import (_BIG, _SRPT_COLS, _bs_args, _bs_core, _bs_fail_core,
                       _bs_fail_stream_core, _bs_scatter_events,
                       _bs_stream_core, _fcfs_core, _fcfs_fail_core,
                       _fcfs_fail_stream_core, _fcfs_stream_core, _loss_core,
                       _modbs_core, _modbs_fail_core,
-                      _modbs_fail_stream_core, _modbs_stream_core)
+                      _modbs_fail_stream_core, _modbs_stream_core,
+                      _srpt_args, _srpt_core, _srpt_scatter_events,
+                      _srpt_stream_core)
 from .workload import BatchTrace, Workload
 
 #: waiting-time epsilon for P[wait > 0] — matches ``Simulation.wait_eps``
@@ -202,6 +204,8 @@ class BatchSimResult:
     kills: np.ndarray | None = None         # [R] jobs killed mid-service
     requeues: np.ndarray | None = None      # [R] killed jobs requeued
     availability: np.ndarray | None = None  # [R] time-avg live fraction
+    # preempt-resume observable (None for nonpreemptive policies):
+    preemptions: np.ndarray | None = None   # [R] preemption events
 
     @property
     def reps(self) -> int:
@@ -456,6 +460,93 @@ def _bs_jax(batch: BatchTrace, *, partition=None, wl=None, queue_cap=None,
                            batch, failures)
 
 
+# -- preemptive SRPT-family cores (sf-srpt / ff-srpt) -----------------------
+
+
+@partial(jax.jit, static_argnames=("Q", "NU", "sf"),
+         donate_argnums=(0, 1, 2))
+def _srpt_scan_batch(arrival, need, service, kk, Q: int, NU: tuple,
+                     sf: bool):
+    # _srpt_core carries the replications axis natively (per-lane sorts
+    # and 1-entry scatters) — no vmap; see the sim_jax section comment.
+    return _srpt_core(arrival, need, service, kk, Q, NU, sf)
+
+
+def _srpt_nu(*batches) -> tuple:
+    """Static ascending tuple of distinct server needs — the unroll set of
+    the vectorized first-fit walk.  A superset is always correct, so grid
+    plans pass the union across cells."""
+    return tuple(sorted({int(v) for b in batches for v in np.unique(b.need)}))
+
+
+def _srpt_check_ovf(ovf, q_cap: int, cell: str = "") -> None:
+    ovf = np.asarray(ovf)
+    if ovf.any():
+        raise RuntimeError(
+            f"SRPT slot table overflow (queue_cap={q_cap}) in "
+            f"{cell}replication(s) {np.flatnonzero(ovf).tolist()} — "
+            f"workload unstable at this load, or raise queue_cap")
+
+
+def _srpt_no_failures(failures, policy: str) -> None:
+    if failures is not None:
+        raise NotImplementedError(
+            f"policy {policy!r} has no fault-injection scan core — use "
+            f"engine='python' (mode='kill' kill-and-requeue)")
+
+
+def _srpt_result(batch: BatchTrace, job_ev, t_ev, fs_ev, ovf, npre, ne,
+                 q_cap: int) -> BatchSimResult:
+    """Event streams -> BatchSimResult, the `_python_core` op order
+    (response = completion - arrival, wait = first start - arrival)."""
+    _srpt_check_ovf(ovf, q_cap)
+    assert (np.asarray(ne) == 2 * batch.num_jobs).all(), \
+        "SRPT event scan under-ran its 2J event budget"
+    comp, fstart = _srpt_scatter_events(batch.num_jobs, job_ev, t_ev, fs_ev)
+    return BatchSimResult(response=comp - batch.arrival,
+                          wait=fstart - batch.arrival,
+                          p_helper=None, blocked=None, start=fstart,
+                          preemptions=np.asarray(npre).astype(np.int64))
+
+
+def _srpt_jax(sf: bool, batch: BatchTrace, *, partition=None, wl=None,
+              queue_cap=None, failures=None) -> BatchSimResult:
+    policy = "sf-srpt" if sf else "ff-srpt"
+    _srpt_no_failures(failures, policy)
+    q_cap = _srpt_args(batch, queue_cap)
+    with enable_x64():
+        job_ev, t_ev, fs_ev, ovf, npre, ne = _call(
+            partial(_srpt_scan_batch, Q=q_cap, NU=_srpt_nu(batch), sf=sf),
+            _dev(batch.arrival, jnp.float64),
+            _dev(batch.need, jnp.float64),
+            _dev(batch.service, jnp.float64),
+            _dev(np.full(batch.reps, float(batch.k)), jnp.float64))
+    return _srpt_result(batch, job_ev, t_ev, fs_ev, ovf, npre, ne, q_cap)
+
+
+@engines.register("sf-srpt", "jax")
+def _sf_srpt_jax(batch: BatchTrace, **kw) -> BatchSimResult:
+    """Batched preemptive ServerFilling-SRPT event scan, all reps at once.
+
+    Rank = remaining work x need, the DONE-SRPT candidate prefix, packed
+    largest-need-first — bit-identical to the python oracle's
+    ``ServerFillingSRPT`` per replication, including the ``preemptions``
+    observable.  ``queue_cap`` bounds the in-system slot table (default
+    ``min(J, max(4k, 256))``); overflow raises loudly.
+    """
+    return _srpt_jax(True, batch, **kw)
+
+
+@engines.register("ff-srpt", "jax")
+def _ff_srpt_jax(batch: BatchTrace, **kw) -> BatchSimResult:
+    """Batched preemptive FirstFit-SRPT event scan, all reps at once.
+
+    Rank = remaining work, greedy first-fit over the whole in-system set —
+    bit-identical to the python oracle's ``FirstFitSRPT``.
+    """
+    return _srpt_jax(False, batch, **kw)
+
+
 # -- public batched entry points (thin shims over the registry) -------------
 
 
@@ -547,6 +638,13 @@ def _bs_fail_grid_chunk(carry, arrival, cls, need, service, ft, ftgt, fup,
     return _bs_fail_stream_core(arrival, cls, need, service, ft, ftgt,
                                 fup, carry, C, s_max, h, q_cap, length,
                                 j_live=j_live)
+
+
+@partial(jax.jit, static_argnums=(6, 7, 8, 9), donate_argnums=(1, 2, 3))
+def _srpt_grid_chunk(carry, arrival, need, service, kk, j_live,
+                     Q: int, NU: tuple, sf: bool, length: int):
+    return _srpt_stream_core(arrival, need, service, kk, carry, Q, NU,
+                             sf, length, j_live=j_live)
 
 
 # -- host-side grid plans: stacked [G, R, ...] inputs + per-lane carries ----
@@ -809,6 +907,56 @@ def _bs_fail_grid_plan(cells) -> dict:
     return plan
 
 
+def _srpt_grid_plan(cells) -> dict:
+    """SRPT grid plan: per-lane capacity ``kk`` is data (no dead-server
+    masking needed — the walk budget F simply starts lower), the slot
+    table is Q-padded to the grid max, and ``NU`` is the union of every
+    cell's distinct needs (a superset is walk-equivalent per cell)."""
+    G, R = len(cells), cells[0].batch.reps
+    arrival, _, service, need, J_pad = _grid_jobs(cells)
+    q_caps = [_srpt_args(c.batch, c.queue_cap) for c in cells]
+    kk = np.broadcast_to(
+        np.array([float(c.batch.k) for c in cells])[:, None], (G, R))
+    j_live = np.broadcast_to(
+        np.array([c.batch.num_jobs for c in cells], np.int32)[:, None],
+        (G, R))
+    return dict(arrival=arrival, need=need, service=service,
+                kk=np.ascontiguousarray(kk),
+                j_live=np.ascontiguousarray(j_live),
+                NU=_srpt_nu(*[c.batch for c in cells]),
+                Q_pad=max(q_caps), q_caps=q_caps, J_pad=J_pad)
+
+
+def _srpt_grid_carry(lead: tuple, Q: int):
+    S0 = np.zeros(lead + (Q, _SRPT_COLS))
+    S0[..., 0] = -1.0                        # every slot starts empty
+    return (_dev(np.zeros(lead), jnp.int32),
+            _dev(S0, jnp.float64),
+            _dev(np.zeros(lead), jnp.bool_),
+            _dev(np.zeros(lead), jnp.int32),
+            _dev(np.zeros(lead), jnp.int32))
+
+
+def _srpt_grid_extract(cells, plan, job_ev, t_ev, fs_ev, ovf, npre,
+                       ne) -> list:
+    ovf, npre, ne = np.asarray(ovf), np.asarray(npre), np.asarray(ne)
+    J_pad = plan["J_pad"]
+    out = []
+    for g, c in enumerate(cells):
+        _srpt_check_ovf(ovf[g], plan["q_caps"][g], cell=f"grid cell {g} ")
+        assert (ne[g] == 2 * c.batch.num_jobs).all(), \
+            "SRPT grid scan under-ran its event budget"
+        comp, fstart = _srpt_scatter_events(J_pad, job_ev[g], t_ev[g],
+                                            fs_ev[g])
+        J = c.batch.num_jobs
+        out.append(BatchSimResult(
+            response=comp[:, :J] - c.batch.arrival,
+            wait=fstart[:, :J] - c.batch.arrival,
+            p_helper=None, blocked=None, start=fstart[:, :J],
+            preemptions=npre[g].astype(np.int64)))
+    return out
+
+
 # -- grid cores, engine="jax": flatten (cells, reps) -> one lane axis -------
 
 
@@ -935,6 +1083,41 @@ def _bs_grid_jax(cells):
                             np.asarray(tagged).reshape(G, R, -1),
                             np.asarray(rec_t).reshape(G, R, -1),
                             np.asarray(ovf).reshape(G, R))
+
+
+def _srpt_grid(sf: bool, cells):
+    policy = "sf-srpt" if sf else "ff-srpt"
+    _srpt_no_failures(cells[0].failures, policy)
+    G, R = len(cells), cells[0].batch.reps
+    L = G * R
+    p = _srpt_grid_plan(cells)
+    with enable_x64():
+        carry = _srpt_grid_carry((L,), p["Q_pad"])
+        carry, job_ev, t_ev, fs_ev = _call(
+            _srpt_grid_chunk, carry,
+            _dev(p["arrival"].reshape(L, -1), jnp.float64),
+            _dev(p["need"].reshape(L, -1), jnp.float64),
+            _dev(p["service"].reshape(L, -1), jnp.float64),
+            _dev(p["kk"].reshape(L), jnp.float64),
+            _dev(p["j_live"].reshape(L), jnp.int32),
+            p["Q_pad"], p["NU"], sf, 2 * p["J_pad"])
+    return _srpt_grid_extract(
+        cells, p, np.asarray(job_ev).reshape(G, R, -1),
+        np.asarray(t_ev).reshape(G, R, -1),
+        np.asarray(fs_ev).reshape(G, R, -1),
+        np.asarray(carry[2]).reshape(G, R),
+        np.asarray(carry[3]).reshape(G, R),
+        np.asarray(carry[4]).reshape(G, R))
+
+
+@engines.register_grid("sf-srpt", "jax")
+def _sf_srpt_grid_jax(cells):
+    return _srpt_grid(True, cells)
+
+
+@engines.register_grid("ff-srpt", "jax")
+def _ff_srpt_grid_jax(cells):
+    return _srpt_grid(False, cells)
 
 
 # --------------------------------------------------------------------------

@@ -1108,3 +1108,290 @@ def estimate_p_helper(wl: Workload, num_jobs: int = 200_000,
     batch = wl.sample_traces(num_jobs, reps, seed=seed)
     res = modified_bs_sim_batch(batch, wl=wl)
     return float(res.p_helper.mean())
+
+
+# --------------------------------------------------------------------------
+# Preemptive SRPT-family event scans (ServerFilling-SRPT / FirstFit-SRPT).
+#
+# Unlike the nonpreemptive cores above, a preemptive size-aware policy
+# re-evaluates the whole running set at every event: an arrival with a
+# short remaining size may preempt a running job, and a departure may
+# admit several waiting jobs at once.  The scan therefore carries the full
+# in-system job set — a static table of ``Q`` slots per lane holding
+# (job id, arrival, need, remaining work, burst start, running/started
+# flags, first-start time) — and each event step re-sorts and re-packs it
+# exactly the way the python oracle's ``Policy.select`` does:
+#
+# * current remaining work ``max(0, rem - (t - run_start))`` for running
+#   jobs (the identical float ops as ``Simulation.remaining_now``, so
+#   event times and ranks are bit-equal to the oracle),
+# * a stable rank sort — rank = remaining (FirstFit-SRPT) or
+#   remaining x need (ServerFilling-SRPT), ties by arrival time,
+# * ServerFilling's candidate prefix M (smallest m with cumulative need
+#   >= k; all jobs when total need < k) re-sorted stably by
+#   (-need, rank) — matching the oracle's stable ``sorted`` calls,
+# * a first-fit packing walk over the candidate order.
+#
+# The walk ("take each job in order iff its need fits the free servers")
+# is inherently sequential, but over a *static* set of distinct need
+# values NU it vectorizes: in each round let u be the largest need value
+# <= F (the free servers).  Any job with need > u has need > F — free
+# servers only shrink as the walk advances, so it can never be taken and
+# the walk may pass it forever.  Jobs with need <= u are taken while the
+# running prefix sum of their needs fits (the condition fails
+# monotonically along the round's eligibles, so the taken set is a prefix
+# and the prefix sum counts exactly the jobs taken before).  A round that
+# stops early leaves F < u, so u strictly decreases and len(NU) unrolled
+# rounds complete any walk.
+#
+# Exactly 2J events exist per lane (each job arrives once and departs
+# once; preemptions happen inside an event, adding none), and whenever
+# jobs are in the system at least one is running — every packing order
+# starts with a job of need <= k — so a fixed 2J-step scan processes
+# every event.  Per-job completion/first-start records are emitted at
+# departure events and scattered to [R, J] arrays on the host
+# (`_srpt_scatter_events`), like the BS event core.
+# --------------------------------------------------------------------------
+
+
+def _srpt_first_fit(kk, need_w, cand, NU: tuple):
+    """Vectorized first-fit packing walk over pre-ordered candidates.
+
+    ``need_w`` [R, Q] holds the candidate needs *in packing order* (0 for
+    empty slots), ``cand`` [R, Q] the candidate mask, ``kk`` [R] the free
+    servers, and ``NU`` the static ascending tuple of distinct need
+    values.  Returns the taken mask, bit-equal to the sequential walk
+    ``for j in order: if need[j] <= free: take; free -= need[j]``.
+    """
+    R, Q = need_w.shape
+    pos = jnp.arange(Q, dtype=jnp.int32)[None, :]
+    F = kk
+    take = jnp.zeros((R, Q), bool)
+    ptr = jnp.zeros(R, jnp.int32)
+    for _ in range(len(NU)):
+        u = jnp.zeros_like(F)
+        for v in NU:  # ascending: ends at the largest need value <= F
+            u = jnp.where(v <= F, float(v), u)
+        elig = (cand & ~take & (need_w >= 1.0) & (need_w <= u[:, None])
+                & (pos >= ptr[:, None]))
+        csum = jnp.cumsum(jnp.where(elig, need_w, 0.0), axis=1)
+        newt = elig & (F[:, None] - (csum - need_w) >= u[:, None])
+        take = take | newt
+        F = F - jnp.sum(jnp.where(newt, need_w, 0.0), axis=1)
+        missed = elig & ~newt
+        ptr = jnp.where(missed.any(axis=1),
+                        jnp.argmax(missed, axis=1).astype(jnp.int32),
+                        jnp.asarray(Q, jnp.int32))
+    return take
+
+
+#: slot-table columns of the SRPT scan state (one packed [R, Q, 8] array:
+#: one gather fetches a departing job's record, one scatter admits or
+#: clears a slot — the op-count discipline of ``_bs_make_step``)
+_SRPT_COLS = 8  # job, arrival, need, rem, run_start, running, started, fstart
+
+
+def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
+    """Event step of the preemptive SRPT-family scan (see section above).
+
+    ``jobrec`` [R, J, 3] packs (arrival, service, need); ``kk`` [R] is the
+    per-lane server count — *data*, not shape, so heterogeneous-k grid
+    cells need no dead-capacity masking.  ``sf`` statically selects
+    ServerFilling-SRPT (rank = remaining x need, prefix-M completion)
+    over FirstFit-SRPT (rank = remaining, first-fit over everything).
+    ``j_live`` (optional [R]) caps admitted arrivals — the J-padding
+    guard of the grid driver; trailing steps past a lane's 2*j_live true
+    events are no-ops.
+    """
+    R, J, _ = jobrec.shape
+    dt = jobrec.dtype
+    INF = jnp.asarray(jnp.inf, dt)
+    GUARD = jnp.asarray(0.5 * _BIG, dt)
+    jl = J if j_live is None else j_live
+    lanes = jnp.arange(R)
+    pos = jnp.arange(Q, dtype=jnp.int32)[None, :]
+    slot_i = jnp.broadcast_to(pos, (R, Q))
+
+    def taa(a, idx):
+        return jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+
+    def unsort(slot_perm, take):
+        # inverse-permute ``take`` back to slot order: ``slot_perm`` is an
+        # exact per-lane permutation of 0..Q-1 (the slot-index payload
+        # carried through the stable sorts), so a scatter is bit-equal to
+        # re-sorting by slot index — at a fraction of the cost
+        return jnp.zeros((R, Q), bool).at[
+            lanes[:, None], slot_perm.astype(jnp.int32)].set(take)
+
+    def rec(idx):
+        return jnp.take_along_axis(jobrec, idx[:, None, None], axis=1)[:, 0]
+
+    def step(carry, _):
+        ai, S, ovf, npre, ne = carry
+        job, s_need, s_rem = S[..., 0], S[..., 2], S[..., 3]
+        s_rs, s_run = S[..., 4], S[..., 5] > 0
+
+        # -- candidate events: next arrival vs earliest departure.  A
+        # running job's completion time is run_start + rem — the identical
+        # addition the oracle's departure push uses, so ties break the
+        # same way (arrivals first, matching the heap kind order).
+        j_arr = jnp.minimum(ai, J - 1)
+        rec_a = rec(j_arr)
+        Ta = jnp.where(ai < jl, rec_a[:, 0], INF)
+        comp = jnp.where(s_run, s_rs + s_rem, _BIG)
+        qd = jnp.argmin(comp, axis=1).astype(jnp.int32)
+        Tc = taa(comp, qd)
+        is_arr = (ai < jl) & (Ta <= Tc)
+        is_dep = (~is_arr) & (Tc < GUARD)
+        active = is_arr | is_dep
+        ne = ne + jnp.where(active, 1, 0)
+        t = jnp.where(is_arr, Ta, Tc)
+
+        # -- departure record, read before the slot is cleared
+        dep = jnp.take_along_axis(S, qd[:, None, None], axis=1)[:, 0]
+        job_out = jnp.where(is_dep, dep[:, 0], -1.0)
+        t_out = jnp.where(is_dep, Tc, jnp.zeros(R, dt))
+        fs_out = jnp.where(is_dep, dep[:, 7], jnp.zeros(R, dt))
+
+        # -- admit the arrival into the first free slot / clear the
+        # departed slot: mutually exclusive, one merged 1-entry scatter
+        free = job < 0
+        fs = jnp.argmax(free, axis=1).astype(jnp.int32)
+        has_free = taa(free, fs)
+        do_ins = is_arr & has_free
+        ovf = ovf | (is_arr & ~has_free)
+        idx = jnp.where(do_ins, fs, jnp.where(is_dep, qd, Q))
+        zero = jnp.zeros(R, dt)
+        vals = jnp.stack(
+            [jnp.where(is_arr, j_arr.astype(dt), -1.0),
+             jnp.where(is_arr, rec_a[:, 0], zero),
+             jnp.where(is_arr, rec_a[:, 2], zero),
+             jnp.where(is_arr, rec_a[:, 1], zero),
+             zero, zero, zero, zero], axis=1)
+        S = S.at[lanes, idx].set(vals, mode="drop")
+        ai = ai + jnp.where(is_arr, 1, 0)
+        job, s_arr, s_need, s_rem = S[..., 0], S[..., 1], S[..., 2], S[..., 3]
+        s_rs, s_run = S[..., 4], S[..., 5] > 0
+        s_started, s_fstart = S[..., 6] > 0, S[..., 7]
+        occ = job >= 0
+
+        # -- reconcile at t: rank-sort the in-system set (stable, ties by
+        # arrival), pick the desired running set, preempt / start.
+        # Identical float ops to Simulation.remaining_now for every job.
+        cur_rem = jnp.where(
+            s_run, jnp.maximum(0.0, s_rem - (t[:, None] - s_rs)), s_rem)
+        rank = cur_rem * s_need if sf else cur_rem
+        rk = jnp.where(occ, rank, INF)
+        ak = jnp.where(occ, s_arr, INF)
+        rk_s, _, need_s, slot_s = jax.lax.sort(
+            (rk, ak, s_need, slot_i), dimension=1, num_keys=2,
+            is_stable=True)
+        occ_s = rk_s < GUARD
+        if sf:
+            # ServerFilling: candidate prefix M = smallest m whose
+            # cumulative need reaches k, packed largest-need-first
+            # (stable by rank below it — the oracle's sorted(M, key=
+            # (-need, rank)) over a rank-ordered list); when the total
+            # need is below k every job simply runs.
+            cum = jnp.cumsum(jnp.where(occ_s, need_s, 0.0), axis=1)
+            has_m = cum[:, -1] >= kk
+            idx_m = jnp.argmax(cum >= kk[:, None], axis=1)
+            in_M = occ_s & (pos <= idx_m[:, None])
+            key1 = jnp.where(in_M, -need_s, _BIG)
+            key1_s, _, need_w, slot_w = jax.lax.sort(
+                (key1, rk_s, need_s, slot_s), dimension=1, num_keys=2,
+                is_stable=True)
+            take = _srpt_first_fit(kk, need_w, key1_s < GUARD, NU)
+            desired = jnp.where(has_m[:, None], unsort(slot_w, take), occ)
+        else:
+            take = _srpt_first_fit(kk, need_s, occ_s, NU)
+            desired = unsort(slot_s, take)
+
+        to_pre = active[:, None] & s_run & ~desired
+        to_start = active[:, None] & desired & ~s_run
+        npre = npre + jnp.sum(to_pre, axis=1).astype(jnp.int32)
+        new_run = jnp.where(active[:, None], desired, s_run)
+        S = jnp.stack(
+            [job, s_arr, s_need,
+             jnp.where(to_pre, cur_rem, s_rem),
+             jnp.where(to_start, t[:, None], s_rs),
+             new_run.astype(dt),
+             (s_started | to_start).astype(dt),
+             jnp.where(to_start & ~s_started, t[:, None], s_fstart)],
+            axis=2)
+        return (ai, S, ovf, npre, ne), (job_out, t_out, fs_out)
+
+    return step
+
+
+def _srpt_init(R: int, Q: int, dt):
+    """Empty slot table + counters (the scan carry) for ``R`` lanes."""
+    S = jnp.zeros((R, Q, _SRPT_COLS), dt).at[..., 0].set(-1.0)
+    return (jnp.zeros(R, jnp.int32), S, jnp.zeros(R, bool),
+            jnp.zeros(R, jnp.int32), jnp.zeros(R, jnp.int32))
+
+
+def _srpt_stream_core(arrival, need, service, kk, carry, Q: int, NU: tuple,
+                      sf: bool, length: int, j_live=None):
+    """``length`` SRPT event steps resumed from ``carry``, batched.
+
+    Returns the updated carry plus the per-event (job id, completion,
+    first start) record streams, each [R, length]; -1 job ids mark
+    non-departure steps.
+    """
+    jobrec = jnp.stack([arrival, service, need], axis=2)
+    step = _srpt_make_step(jobrec, kk, Q, NU, sf, j_live=j_live)
+    carry, (job_ev, t_ev, fs_ev) = jax.lax.scan(step, carry, None,
+                                                length=length)
+    return carry, job_ev.T, t_ev.T, fs_ev.T
+
+
+def _srpt_core(arrival, need, service, kk, Q: int, NU: tuple, sf: bool):
+    """Full-trace SRPT event scan: 2J steps from an empty system.
+
+    Returns the event streams plus the per-lane (ovf, npre, ne) counters:
+    slot-table overflow (the sys_cap analogue of the BS ring overflow),
+    preemption count, and processed-event count (== 2J on success).
+    """
+    R, J = arrival.shape
+    carry0 = _srpt_init(R, Q, arrival.dtype)
+    carry, job_ev, t_ev, fs_ev = _srpt_stream_core(
+        arrival, need, service, kk, carry0, Q, NU, sf, 2 * J)
+    return job_ev, t_ev, fs_ev, carry[2], carry[3], carry[4]
+
+
+def _srpt_scatter_events(J: int, job_ev, t_ev, fs_ev):
+    """Scatter [R, 2J] departure records to per-job [R, J] arrays.
+
+    Each job departs exactly once per replication, so every target cell
+    is written exactly once — one flat advanced-indexing assignment for
+    the whole batch, like ``_bs_scatter_events``.
+    """
+    job_ev = np.asarray(job_ev)
+    jobs = job_ev.astype(np.int64)
+    valid = jobs >= 0
+    rows = np.broadcast_to(np.arange(job_ev.shape[0])[:, None],
+                           job_ev.shape)[valid]
+    cols = jobs[valid]
+    comp = np.zeros((job_ev.shape[0], J))
+    fstart = np.zeros((job_ev.shape[0], J))
+    comp[rows, cols] = np.asarray(t_ev)[valid]
+    fstart[rows, cols] = np.asarray(fs_ev)[valid]
+    return comp, fstart
+
+
+def _srpt_args(trace_or_batch, queue_cap) -> int:
+    """The slot-table capacity ``Q`` (system size bound) of an SRPT scan.
+
+    Results are independent of ``Q`` unless the in-system job count ever
+    exceeds it, which raises loudly (``_srpt_check_ovf``) instead of
+    returning a silently wrong path.  The default ``min(J, max(4k, 256))``
+    comfortably bounds any stable workload; per-step cost grows with
+    ``Q log Q`` (the rank sorts), so it is deliberately not ``J``.
+    """
+    J = int(trace_or_batch.num_jobs)
+    if queue_cap is None:
+        queue_cap = max(4 * int(trace_or_batch.k), 256)
+    elif queue_cap < 1:
+        raise ValueError(f"queue_cap must be >= 1, got {queue_cap}")
+    return max(1, min(J, int(queue_cap)))

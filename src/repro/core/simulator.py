@@ -121,6 +121,7 @@ class SimResult:
     kills: int = 0                 # jobs killed mid-service
     requeues: int = 0              # killed jobs requeued (== kills here)
     availability: float | None = None  # time-avg k_live/k over the horizon
+    preemptions: int = 0           # preempt-resume events (SRPT family)
 
     def row(self) -> dict:
         return {
@@ -156,6 +157,7 @@ class Simulation:
         self.failures = list(failures) if failures else []
         self.kills = 0
         self.requeues = 0
+        self.preemptions = 0          # policy-driven preempt-resume events
         self.down_time = 0.0          # integral of (k - k_live) dt
 
         J = trace.num_jobs
@@ -301,6 +303,7 @@ class Simulation:
             self.free += int(self.trace.need[j])
             self.waiting.append(j)
         if preempted:
+            self.preemptions += len(preempted)
             self.waiting.sort(key=lambda x: self.trace.arrival[x])
         # starts
         for j in desired - self.running:
@@ -355,6 +358,7 @@ class Simulation:
             kills=self.kills,
             requeues=self.requeues,
             availability=avail,
+            preemptions=self.preemptions,
         )
 
 
@@ -662,10 +666,13 @@ def _python_core(canon: str, batch: BatchTrace, *, partition=None, wl=None,
     kills = np.zeros(R, np.int64) if failures is not None else None
     requeues = np.zeros(R, np.int64) if failures is not None else None
     avail = np.ones(R) if failures is not None else None
+    preempt = None                 # allocated on first preemptive policy
     has_helper = False
     for r in range(R):
         trace = batch.rep(r)
         pol = _make_python_policy(canon, partition, wl)
+        if pol.preemptive and preempt is None:
+            preempt = np.zeros(R, np.int64)
         if failures is not None:
             kw["failures"] = failures.grouped_events(r)
         sim = Simulation(trace, pol, **kw)
@@ -673,6 +680,8 @@ def _python_core(canon: str, batch: BatchTrace, *, partition=None, wl=None,
         resp[r] = sim.completion - trace.arrival
         start[r] = sim.start_time
         wait[r] = sim.start_time - trace.arrival
+        if preempt is not None:
+            preempt[r] = sres.preemptions
         if failures is not None:
             kills[r] = sres.kills
             requeues[r] = sres.requeues
@@ -689,7 +698,7 @@ def _python_core(canon: str, batch: BatchTrace, *, partition=None, wl=None,
                           blocked=blocked,
                           p_routed=p_routed if has_helper else None,
                           start=start, kills=kills, requeues=requeues,
-                          availability=avail)
+                          availability=avail, preemptions=preempt)
 
 
 for _canon in _PYTHON_POLICIES:

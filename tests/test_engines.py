@@ -34,14 +34,19 @@ def test_registry_covers_the_substrate_policy_grid():
     for pol in ("fcfs", "modbs-fcfs", "bs-fcfs"):
         for eng in ("python", "jax", "jax-shard", "pallas"):
             assert (pol, eng) in keys
+    # the preemptive SRPT pair runs on the scan substrates too
+    for pol in ("sf-srpt", "ff-srpt"):
+        for eng in ("python", "jax", "jax-shard"):
+            assert (pol, eng) in keys
     # the python engine also covers the paper comparison policies
     for pol in ("serverfilling", "sf-srpt", "ff-srpt", "msf"):
         assert (pol, "python") in keys
     assert engines.available_engines() == ("jax", "jax-shard", "pallas",
                                            "python")
-    assert engines.policies_for("jax") == ("bs-fcfs", "fcfs", "modbs-fcfs")
-    assert engines.policies_for("jax-shard") == ("bs-fcfs", "fcfs",
-                                                 "modbs-fcfs")
+    assert engines.policies_for("jax") == (
+        "bs-fcfs", "fcfs", "ff-srpt", "modbs-fcfs", "sf-srpt")
+    assert engines.policies_for("jax-shard") == (
+        "bs-fcfs", "fcfs", "ff-srpt", "modbs-fcfs", "sf-srpt")
 
 
 def test_registry_canonical_aliases():
@@ -240,15 +245,18 @@ def test_from_trace_validation():
 
 
 _RESULT_FIELDS = ("response", "wait", "start", "blocked", "p_helper",
-                  "p_routed", "kills", "requeues", "availability")
+                  "p_routed", "kills", "requeues", "availability",
+                  "preemptions")
 
 
-def test_every_registered_pair_matches_python_on_bootstrap_rep():
+@pytest.mark.parametrize("k", (32, 256))
+def test_every_registered_pair_matches_python_on_bootstrap_rep(k):
     """Iterate the registry: every (policy, engine) pair with a python
     counterpart must agree rtol=0 with the python engine on one bootstrap
-    replication at k=32 — the empirical-trace substrate is exactly as
-    trustworthy as the event-driven oracle."""
-    wl = small_workload(k=32)
+    replication at k in {32, 256} — the empirical-trace substrate is
+    exactly as trustworthy as the event-driven oracle, including the
+    ``preemptions`` observable of the SRPT-family scan cores."""
+    wl = small_workload(k=k)
     trace = wl.sample_trace(600, seed=5)
     batch = BatchTrace.from_trace(trace, 1, seed=9, method="block")
     checked = 0
@@ -263,7 +271,9 @@ def test_every_registered_pair_matches_python_on_bootstrap_rep():
             if a is not None:
                 assert np.array_equal(a, b), (policy, engine, f)
         checked += 1
-    assert checked >= 9   # fcfs/modbs-fcfs/bs-fcfs x jax/jax-shard/pallas
+    # fcfs/modbs-fcfs/bs-fcfs x jax/jax-shard/pallas
+    # + sf-srpt/ff-srpt x jax/jax-shard
+    assert checked >= 13
 
 
 # -- fig3 rows across engines (the acceptance pin) ----------------------------
@@ -275,10 +285,11 @@ def test_fig3_rows_bit_identical_across_engines():
     from benchmarks import fig3_traces
 
     kw = dict(num_jobs=800, ks=(256,), loads=(0.7,),
-              policies=("fcfs", "modbs-fcfs", "bs-fcfs"), reps=2)
+              policies=("fcfs", "modbs-fcfs", "bs-fcfs", "sf-srpt",
+                        "ff-srpt"), reps=2)
     rows_jax = fig3_traces.run(engine="jax", **kw)
     rows_py = fig3_traces.run(engine="python", **kw)
-    assert len(rows_jax) == len(rows_py) == 2 * 3
+    assert len(rows_jax) == len(rows_py) == 2 * 5
     for a, b in zip(rows_jax, rows_py):
         assert a["engine"] == "jax" and b["engine"] == "python"
         for col in a:

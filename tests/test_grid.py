@@ -68,6 +68,12 @@ def test_grid_cells_bit_identical_to_per_cell(policy, engine):
 @pytest.mark.parametrize("policy,engine", GRID_PAIRS)
 def test_grid_failure_cells_bit_identical_to_per_cell(policy, engine):
     cells = _cells(failures=True)
+    if policy in ("sf-srpt", "ff-srpt"):
+        # the preemptive SRPT scans have no fault-injection core: the
+        # grid must reject loudly, not silently drop the failure axis
+        with pytest.raises(NotImplementedError, match="fault-injection"):
+            engines.simulate_grid(policy, cells, engine=engine)
+        return
     out = engines.simulate_grid(policy, cells, engine=engine)
     for cell, res in zip(cells, out):
         ref = engines.simulate(policy, cell.batch, engine=engine,

@@ -8,8 +8,8 @@ from repro.core.partition import BalancedPartition
 from repro.core.policies import BalancedSplitting, make_policy
 from repro.core.simulator import Simulation, simulate_trace
 from repro.core.sim_jax import fcfs_sim, modified_bs_sim
-from repro.core.workload import Exp, JobClass, Trace, Workload, \
-    figure1_workload
+from repro.core.workload import BatchTrace, Exp, JobClass, Trace, \
+    Workload, figure1_workload
 
 ALL_POLICIES = ("bs", "modbs", "fcfs", "backfill", "maxweight",
                 "serverfilling", "sf-srpt", "sf-gittins", "msf", "ff-srpt")
@@ -162,3 +162,120 @@ def test_size_oblivious_policies_never_query_remaining():
         finally:
             type(sim.view).remaining = orig
         assert not calls, f"{name} read remaining sizes"
+
+
+# -- SRPT-family tie-breaks under simultaneous arrival/completion ----------
+#
+# The event engine's chronology contract: at one instant, arrivals are
+# processed before departures (heap kind _ARRIVAL < _DEPARTURE) and the
+# policy reconciles after *every* event; sort ties break by arrival time.
+# The hand-built traces below pin exact start/completion times for the
+# cases where that ordering is observable, and then assert the scan cores
+# reproduce the same sample paths bit-exactly (the contract the 2J-step
+# event scans encode as `Ta <= Tc` arrival-first stepping).
+
+
+def _tiny_batch(arrival, need, service, k):
+    a = np.asarray(arrival, float)
+    return BatchTrace(arrival=a[None], cls=np.zeros((1, len(a)), np.int64),
+                      service=np.asarray(service, float)[None],
+                      need=np.asarray(need, np.int64)[None], k=k, C=1)
+
+
+def _scan_parity(batch, policy):
+    from repro.core import engines
+    ref = engines.simulate(policy, batch, engine="python")
+    for eng in ("jax", "jax-shard"):
+        if (policy, eng) not in engines.registered():
+            continue
+        res = engines.simulate(policy, batch, engine=eng)
+        for f in ("response", "wait", "start", "preemptions"):
+            np.testing.assert_array_equal(
+                getattr(ref, f), getattr(res, f),
+                err_msg=f"{policy}/{eng}.{f}")
+    return ref
+
+
+def test_ff_srpt_equal_remaining_tie_keeps_earlier_arrival():
+    """Remaining-time ties break by arrival: the incumbent keeps running
+    (no churn preemption), one second less and it is preempted."""
+    # k=1; at t=1 both J0 and J1 have remaining exactly 1.0
+    trace = Trace(arrival=np.array([0.0, 1.0]), cls=np.zeros(2, np.int64),
+                  service=np.array([2.0, 1.0]), need=np.ones(2, np.int64),
+                  k=1)
+    sim = Simulation(trace, make_policy("ff-srpt"))
+    sim.run()
+    assert sim.start_time.tolist() == [0.0, 2.0]
+    assert sim.completion.tolist() == [2.0, 3.0]
+    assert sim.preemptions == 0
+    # strictly smaller remaining at the same instant does preempt
+    trace2 = Trace(arrival=np.array([0.0, 1.0]), cls=np.zeros(2, np.int64),
+                   service=np.array([2.0, 0.5]), need=np.ones(2, np.int64),
+                   k=1)
+    sim2 = Simulation(trace2, make_policy("ff-srpt"))
+    sim2.run()
+    assert sim2.start_time.tolist() == [0.0, 1.0]
+    assert sim2.completion.tolist() == [2.5, 1.5]
+    assert sim2.preemptions == 1
+    _scan_parity(_tiny_batch([0.0, 1.0], [1, 1], [2.0, 1.0], k=1),
+                 "ff-srpt")
+    _scan_parity(_tiny_batch([0.0, 1.0], [1, 1], [2.0, 0.5], k=1),
+                 "ff-srpt")
+
+
+def test_ff_srpt_arrival_before_departure_at_same_instant():
+    """An arrival at the exact completion instant is processed first: it
+    cannot use the departing job's servers in that first reconcile, and
+    the post-departure reconcile then preempts the long incumbent."""
+    trace = Trace(arrival=np.array([0.0, 0.0, 1.0]),
+                  cls=np.zeros(3, np.int64),
+                  service=np.array([1.0, 3.0, 1.0]),
+                  need=np.array([1, 1, 2], np.int64), k=2)
+    sim = Simulation(trace, make_policy("ff-srpt"))
+    sim.run()
+    # J2 (need 2) arrives as J0 completes at t=1: the arrival-first
+    # reconcile keeps {J0 (remaining 0), J1}; J0's departure then frees a
+    # server and J2's smaller remaining evicts J1 until t=2.
+    assert sim.start_time.tolist() == [0.0, 0.0, 1.0]
+    assert sim.completion.tolist() == [1.0, 4.0, 2.0]
+    assert sim.preemptions == 1
+    _scan_parity(_tiny_batch([0.0, 0.0, 1.0], [1, 1, 2], [1.0, 3.0, 1.0],
+                             k=2), "ff-srpt")
+
+
+def test_sf_srpt_packing_preempts_zero_remaining_job():
+    """SF-SRPT places largest need first inside the DONE prefix: a job at
+    remaining exactly 0 (its departure pending at this same instant) can
+    be preempted out of the pack, voiding that departure.  Its restart
+    completes it at the later reconcile time — the chronology contract
+    the scan cores must reproduce."""
+    trace = Trace(arrival=np.array([0.0, 1.0]), cls=np.zeros(2, np.int64),
+                  service=np.array([1.0, 2.0]),
+                  need=np.array([2, 4], np.int64), k=4)
+    sim = Simulation(trace, make_policy("sf-srpt"))
+    sim.run()
+    # J1 arrives at J0's completion instant; arrival-first reconcile packs
+    # J1 (need 4) and drops J0 (remaining 0) — J0 only completes when J1
+    # departs at t=3 and the serve-all branch restarts it.
+    assert sim.start_time.tolist() == [0.0, 1.0]
+    assert sim.completion.tolist() == [3.0, 3.0]
+    assert sim.preemptions == 1
+    _scan_parity(_tiny_batch([0.0, 1.0], [2, 4], [1.0, 2.0], k=4),
+                 "sf-srpt")
+
+
+def test_sf_srpt_rank_tie_breaks_by_arrival_in_prefix():
+    """Equal remaining-size ranks order by arrival when forming the DONE
+    prefix: the earlier job makes the cut, the later one waits."""
+    # k=2: J0/J1 identical rank (1.0*2) at t=0; prefix of need >= 2 is
+    # exactly the earlier arrival.
+    trace = Trace(arrival=np.array([0.0, 0.0]), cls=np.zeros(2, np.int64),
+                  service=np.array([1.0, 1.0]),
+                  need=np.array([2, 2], np.int64), k=2)
+    sim = Simulation(trace, make_policy("sf-srpt"))
+    sim.run()
+    assert sim.start_time.tolist() == [0.0, 1.0]
+    assert sim.completion.tolist() == [1.0, 2.0]
+    assert sim.preemptions == 0
+    _scan_parity(_tiny_batch([0.0, 0.0], [2, 2], [1.0, 1.0], k=2),
+                 "sf-srpt")

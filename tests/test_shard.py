@@ -166,7 +166,8 @@ def test_jax_shard_bit_identical_to_jax_in_process():
 
 def test_jax_shard_registered_for_the_substrate_policies():
     assert engines.policies_for("jax-shard") == ("bs-fcfs", "fcfs",
-                                                 "modbs-fcfs")
+                                                 "ff-srpt", "modbs-fcfs",
+                                                 "sf-srpt")
     assert "jax-shard" in engines.available_engines()
 
 
