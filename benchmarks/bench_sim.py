@@ -9,8 +9,8 @@ synthesized log, moving-block-bootstrapped into replications via
 the degraded-capacity path (``bench="failures"``: the Fig. 1
 workload with drain-mode MTBF/MTTR outages merged into the event stream
 — the failure branch of every scan step is on the hot path, so a
-regression there is invisible to the clean scenarios; pallas has no
-capacity mask and ships no rows here), the grid-native path
+regression there is invisible to the clean scenarios), the grid-native
+path
 (``bench="grid"``: a dense Fig.-1-workload k-grid as one k/J-padded
 compiled program per policy via ``engines.simulate_grid``, timed
 against the per-cell dispatch loop — ``compile_count`` must be 1 and
@@ -225,8 +225,6 @@ def _registry_rows(batch, wl, k, jobs, reps, python_jps,
     for engine, label in ENGINE_LABELS:
         if label not in engines_sel:
             continue
-        if failures is not None and engine == "pallas":
-            continue   # the fused kernels carry no capacity mask
         # every jitted row records the process topology it was measured
         # under — a forced multi-device pool changes single-device timings
         # too (the intra-op pool is shared), and check_bench_regression
@@ -287,8 +285,10 @@ def bench_failures(jobs: int, reps: int, python_jobs: int, seed: int = 0,
     ~1% average capacity loss) because the critical-regime workload runs
     its class blocks above unit load by design — the helper absorbs the
     overflow with only a ~(1-ρ)k margin, and heavier outages push the
-    helper queue past the BS ring-buffer cap at full-scale J.  Pallas is
-    skipped — the fused kernels carry no capacity mask (see ROADMAP)."""
+    helper queue past the BS ring-buffer cap at full-scale J.  All three
+    jitted engines ship rows: the pallas kernels run the same drain-mode
+    merged streams (``*_fail_scan_fwd`` in :mod:`repro.kernels.msj_scan`)
+    as the scan cores."""
     from repro.core.failures import FailureProcess
 
     wl = figure1_workload(k, theta=theta)
@@ -376,21 +376,31 @@ def bench_grid(ks, jobs, reps, seed=0, theta=0.7,
 #: policy, device_count) guard cells as the batch rows, and the four
 #: extra whole-grid compiles (~11 s) would bust the smoke wall budget —
 #: grid-path correctness is pinned by tests/test_grid.py instead.
+#: queue_cap=96 (-> Q=128 after the power-of-two round-up) bounds the
+#: pallas rows' interpret-mode bitonic cost at smoke scale; the k=64
+#: bootstrap peak in-system count stays well under it (no overflow)
 SRPT_SMOKE = {"ks": (64,), "python_k": 64, "jobs": 1_200, "reps": 2,
-              "python_jobs": 300}
+              "python_jobs": 300, "queue_cap": 96}
 #: full scale: 32 replications saturate the vmapped sort throughput on
 #: one core, and queue_cap=160 trims the slot table to ~3x the measured
 #: peak in-system count (~60 at k=512, load 0.85) — the per-step rank
 #: sorts are the scan's whole cost, so an oversized Q is pure slowdown
-#: (overflow would raise, not mis-simulate; see ``_srpt_args``)
+#: (overflow would raise, not mis-simulate; see ``_srpt_args``).  The
+#: ``pallas`` sub-config runs the fused-kernel rows at their own reduced
+#: scale: off-TPU the kernels execute in interpret mode, one replication
+#: at a time, so the full 32-rep cells would take hours while measuring
+#: only the interpreter — the committed pallas cells track the engine's
+#: trajectory at a fixed small topology instead
 SRPT_FULL = {"ks": (256, 512, 1024), "python_k": 512, "jobs": 3_000,
              "reps": 32, "python_jobs": 2_000, "queue_cap": 160,
-             "grid": ((16, 24, 32, 48, 64, 96), 1_000, 2)}
+             "grid": ((16, 24, 32, 48, 64, 96), 1_000, 2),
+             "pallas": {"ks": (256,), "jobs": 600, "reps": 4,
+                        "queue_cap": 160}}
 
 
 def bench_srpt(jobs, reps, python_jobs, seed=0, ks=(256, 512, 1024),
                python_k=512, load=0.85, grid_cfg=None, queue_cap=None,
-               engines_sel=ALL_ENGINES) -> list[dict]:
+               pallas_cfg=None, engines_sel=ALL_ENGINES) -> list[dict]:
     """The preemptive-scan scenario (``bench="srpt"`` rows): the SRPT
     family (``ff-srpt``/``sf-srpt``) on the Fig. 3 empirical path — an
     SDSC-SP2 synthesized log, moving-block-bootstrapped into ``reps``
@@ -402,7 +412,9 @@ def bench_srpt(jobs, reps, python_jobs, seed=0, ks=(256, 512, 1024),
     optionally appends grid-native rows — a dense small-k Fig.-1 grid
     through ``engines.simulate_grid`` whose ``compile_count`` pins the
     one-program-per-grid claim for the SRPT cores exactly like the
-    ``grid`` scenario does for the FCFS family."""
+    ``grid`` scenario does for the FCFS family.  ``pallas_cfg``, when
+    given, moves the fused-kernel rows to their own (smaller) topology —
+    see the ``SRPT_FULL["pallas"]`` comment."""
     rows = []
     python_jps = {}
     if "python" in engines_sel and python_k in ks:
@@ -418,31 +430,41 @@ def bench_srpt(jobs, reps, python_jobs, seed=0, ks=(256, 512, 1024),
             python_jps[pol] = python_jobs / wall
             rows.append(_row("python", pol, python_k, python_jobs, 1,
                              wall, bench="srpt"))
-    for k in ks:
-        trace = sdsc_sp2_trace(jobs, k=k, load=load, seed=seed)
-        batch = BatchTrace.from_trace(trace, reps, seed=seed,
-                                      method="block")
-        for engine, label in ENGINE_LABELS:
-            if label not in engines_sel:
-                continue
-            dc = jax.local_device_count()
-            for name in SRPT_POLICIES:
-                if (name, engine) not in engines.registered():
+    def batch_cells(cell_ks, cell_jobs, cell_reps, cell_qc, labels):
+        for k in cell_ks:
+            trace = sdsc_sp2_trace(cell_jobs, k=k, load=load, seed=seed)
+            batch = BatchTrace.from_trace(trace, cell_reps, seed=seed,
+                                          method="block")
+            for engine, label in labels:
+                if label not in engines_sel:
                     continue
-                def fn(e=engine, n=name):
-                    return engines.simulate(n, batch, engine=e,
-                                            queue_cap=queue_cap)
-                wall, compile_s, warm, nc = _time_engine(fn)
-                r = _row(
-                    label, name, k, jobs, reps, wall,
-                    compile_s=compile_s,
-                    python_jps=(python_jps.get(name)
-                                if k == python_k else None),
-                    bench="srpt", device_count=dc, compile_warm_s=warm,
-                    compile_count=nc)
-                if queue_cap is not None:
-                    r["queue_cap"] = queue_cap   # srpt-only extra key
-                rows.append(r)
+                dc = jax.local_device_count()
+                for name in SRPT_POLICIES:
+                    if (name, engine) not in engines.registered():
+                        continue
+                    def fn(e=engine, n=name):
+                        return engines.simulate(n, batch, engine=e,
+                                                queue_cap=cell_qc)
+                    wall, compile_s, warm, nc = _time_engine(fn)
+                    r = _row(
+                        label, name, k, cell_jobs, cell_reps, wall,
+                        compile_s=compile_s,
+                        python_jps=(python_jps.get(name)
+                                    if k == python_k
+                                    and cell_reps == reps else None),
+                        bench="srpt", device_count=dc,
+                        compile_warm_s=warm, compile_count=nc)
+                    if cell_qc is not None:
+                        r["queue_cap"] = cell_qc   # srpt-only extra key
+                    rows.append(r)
+
+    main_labels = tuple((e, l) for e, l in ENGINE_LABELS
+                        if not (e == "pallas" and pallas_cfg))
+    batch_cells(ks, jobs, reps, queue_cap, main_labels)
+    if pallas_cfg:
+        batch_cells(pallas_cfg["ks"], pallas_cfg["jobs"],
+                    pallas_cfg["reps"], pallas_cfg.get("queue_cap"),
+                    (("pallas", "pallas"),))
     if grid_cfg:
         gks, gjobs, greps = grid_cfg
         gcells = []
@@ -555,6 +577,7 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
                            python_k=cfg["python_k"],
                            grid_cfg=cfg.get("grid"),
                            queue_cap=cfg.get("queue_cap"),
+                           pallas_cfg=cfg.get("pallas"),
                            engines_sel=engines_sel)
     return {"schema": SCHEMA,
             "config": {"ks": list(ks), "jobs": jobs, "reps": reps,
@@ -570,7 +593,8 @@ def run(ks, jobs, reps, python_jobs, seed=0, scenario="all",
                                  "reps": srpt_cfg["reps"],
                                  "python_jobs": srpt_cfg["python_jobs"],
                                  "queue_cap":
-                                     srpt_cfg.get("queue_cap")}),
+                                     srpt_cfg.get("queue_cap"),
+                                 "pallas": srpt_cfg.get("pallas")}),
                        "scenario": scenario, "traces_k": traces_k,
                        "engines": list(engines_sel),
                        "device_count": jax.local_device_count()},

@@ -5,14 +5,15 @@ against the committed ``BENCH_sim.json``: for every (bench, engine,
 policy, device_count) cell present in both — the synthetic
 ``fig1-critical`` scenario, the empirical-bootstrap ``traces`` scenario,
 the degraded-capacity ``failures`` scenario (drain-mode outages
-merged into the scan event stream; python + jax-batch + jax-shard rows,
-no pallas — the fused kernels carry no capacity mask), the
+merged into the scan event stream; all four engines — the pallas fail
+kernels run the same merged streams), the
 constant-memory ``streaming`` scenario (``simulate_stream`` chunked-carry
 rows; jax-batch only, no python baseline — their cells gate purely on
 their own committed jobs/sec minima, and the ``peak_rss_mb`` column is
 informational, not gated) and the preemptive-scan ``srpt`` scenario
 (the ``ff-srpt``/``sf-srpt`` scan cores on the Fig. 3 bootstrap batch;
-python + jax-batch + jax-shard rows) are guarded
+python + jax-batch + jax-shard rows at full scale plus fused-kernel
+pallas rows at their own reduced interpret-mode topology) are guarded
 independently, and cells measured on different
 device topologies are never compared with each other — the new
 ``jobs_per_sec`` must be at least ``1/factor`` of the *slowest* committed

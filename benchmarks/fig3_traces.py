@@ -15,6 +15,9 @@ exact Python engine — every fallback is announced by a once-per-process
 ``RuntimeWarning`` plus a row summary on stderr after the sweep;
 ``--engine jax-shard`` shards the replications of the scan policies
 across the local device mesh (pair with ``--devices N``); ``--engine
+pallas`` routes all five scan policies — the preemptive srpt pair
+included, via the fused bitonic rank/permute kernels — through the fused
+step kernels (interpret mode off-TPU: bit-identical, not fast); ``--engine
 python`` runs everything on the event engine over the *same* bootstrap
 batch, so rows are bit-comparable across engines (the ``engine`` column
 records the core that actually ran each row).  ``--cache-dir`` enables

@@ -80,6 +80,41 @@ def run():
     rows.append({"kernel": "moe_ffn", "shape": "1024tok_16e_top2",
                  "us_per_call": us, "flops": flops, "hbm_bytes": hbm,
                  "intensity": flops / hbm})
+    # srpt per-event rank/permute: the two stable sorts every SRPT scan
+    # event pays (rank the slot table, then unsort back to slot order).
+    # Compares lax.sort (the scan cores' reference, an unfusable library
+    # call on XLA:CPU) against the in-kernel bitonic network the pallas
+    # srpt kernels use (kernels/msj_scan/sort.py) at the queue_cap widths
+    # the fig-3 topologies run.  Same composite (key, slot) stability
+    # contract on both sides, so the timings are like-for-like.
+    from repro.kernels.msj_scan.sort import bitonic_sort
+    R = 32
+    for Q in (64, 128, 256):
+        keys = jnp.asarray(
+            np.where(rng.random((R, Q)) < 0.25, np.inf,    # empty-slot
+                     rng.exponential(1.0, (R, Q))), jnp.float32)
+        slot = jnp.asarray(np.tile(np.arange(Q, dtype=np.int32), (R, 1)))
+
+        def event_step(sort):
+            def f(k_, s_):
+                rk, sl = sort((k_, s_), dimension=-1, num_keys=1,
+                              is_stable=True)
+                _, back = sort((sl.astype(k_.dtype), rk), dimension=-1,
+                               num_keys=1, is_stable=True)
+                return back
+            return jax.jit(f)
+
+        lg = int(np.log2(Q))
+        nstg = lg * (lg + 1) // 2               # bitonic merge stages
+        hbm = 2 * 4 * R * Q * 8                 # 2 sorts x (2 in + 2 out)
+        for name, sort, stages in (("srpt_step[lax.sort]", jax.lax.sort, lg),
+                                   ("srpt_step[bitonic]", bitonic_sort,
+                                    nstg)):
+            us = _time(event_step(sort), keys, slot)
+            flops = 2 * 8 * R * Q * stages      # compare + 3-way selects
+            rows.append({"kernel": name, "shape": f"{R}x{Q}",
+                         "us_per_call": us, "flops": flops,
+                         "hbm_bytes": hbm, "intensity": flops / hbm})
     return rows
 
 

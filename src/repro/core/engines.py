@@ -48,16 +48,20 @@ Registry contract
       fcfs            yes      yes +g   yes +g      yes
       modbs-fcfs      yes      yes +g   yes +g      yes
       bs-fcfs         yes      yes +g   yes +g      yes
-      sf-srpt         yes      yes +g   yes +g      --
-      ff-srpt         yes      yes +g   yes +g      --
+      sf-srpt         yes      yes +g   yes +g      yes
+      ff-srpt         yes      yes +g   yes +g      yes
       serverfilling,  yes      --       --          --
       sf-gittins, msf, lsf, backfill, maxweight (oracle only)
 
   The sf-srpt/ff-srpt scan cores are the preemptive event scans of
   :mod:`repro.core.sim_jax` (per-job remaining work as carry state, a
-  bounded re-sort/re-pack per event); they cover the clean and grid
+  bounded re-sort/re-pack per event); their pallas cores run the
+  reference step with the in-kernel stable bitonic rank/permute of
+  :mod:`repro.kernels.msj_scan.sort`.  They cover the clean and grid
   paths but not fault injection — ``failures=`` raises
-  ``NotImplementedError`` there (use ``engine="python"``).
+  ``NotImplementedError`` there (use ``engine="python"``).  The
+  FCFS/ModBS/BS-π pallas kernels *do* take ``failures=`` (drain
+  semantics, same merged-stream flow as ``jax``).
 * **Fallback visibility**: :func:`simulate`/:func:`simulate_grid` accept
   ``fallback=True`` to downgrade an unregistered pair to the python
   oracle — announced by a once-per-process ``RuntimeWarning``
@@ -146,10 +150,10 @@ _STREAM_REGISTRY: dict[tuple[str, str], Callable] = {}
 #: BatchSimResult per cell — again a distinct signature, distinct registry
 _GRID_REGISTRY: dict[tuple[str, str], Callable] = {}
 
-#: engines whose scan cores support the failure axis (``failures=``) —
-#: shared with :mod:`repro.kernels.msj_scan.ops` so the pallas rejection
-#: message names them without hardcoding the list in two places
-FAILURE_ENGINES = ("python", "jax", "jax-shard")
+#: engines whose FCFS/ModBS/BS-π cores support the failure axis
+#: (``failures=``): 'python' kills in-flight jobs, the scan/kernel engines
+#: drain capacity — iterated by ``tests/test_failures.py``
+FAILURE_ENGINES = ("python", "jax", "jax-shard", "pallas")
 
 #: short benchmark-CLI aliases -> canonical policy names (Policy.name)
 ALIASES = {

@@ -85,7 +85,7 @@ from .sim_batch import (_backends_initialized, _bs_fail_args,
                         _modbs_grid_extract, _modbs_grid_plan, _modbs_result,
                         _modbs_stream_init, _partition_args, _scan_stream,
                         _slice_stream_result, _srpt_grid_carry,
-                        _srpt_grid_extract, _srpt_grid_plan,
+                        _srpt_grid_extract, _srpt_grid_plan, _srpt_k_mult,
                         _srpt_no_failures, _srpt_nu, _srpt_result,
                         _stream_partition, _with_drain_obs)
 from .sim_jax import (_bs_args, _bs_core, _bs_fail_core,
@@ -368,14 +368,18 @@ def _bs_shard_call(arrival, cls, need, service, slots, s_max: int, h: int,
         arrival, cls, need, service, slots)
 
 
-@partial(jax.jit, static_argnums=(4, 5, 6, 7))
+@partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
 def _srpt_shard_call(arrival, need, service, kk, Q: int, NU: tuple,
-                     sf: bool, mesh: Mesh):
+                     sf: bool, k_mult: bool, mesh: Mesh):
     # _srpt_core carries the lane axis natively (per-lane sorts and
     # 1-entry scatters, no cross-lane ops) — each shard runs its slice.
-    body = lambda a, n, v, k: _srpt_core(a, n, v, k, Q, NU, sf)
+    body = lambda a, n, v, k: _srpt_core(a, n, v, k, Q, NU, sf, k_mult)
+    # check_rep: the walk's while_loop has no shard_map replication rule;
+    # the body is strictly per-lane (no cross-shard ops), so the check is
+    # vacuous here anyway.
     return shard_map(body, mesh=mesh, in_specs=(P("r"),) * 4,
-                     out_specs=(P("r"),) * 6)(arrival, need, service, kk)
+                     out_specs=(P("r"),) * 7,
+                     check_rep=False)(arrival, need, service, kk)
 
 
 # Failure-aware variants: identical scan cores as engine="jax"
@@ -515,20 +519,22 @@ def _srpt_jax_shard(sf: bool, batch, *, partition=None, wl=None,
     policy = "sf-srpt" if sf else "ff-srpt"
     _srpt_no_failures(failures, policy)
     q_cap = _srpt_args(batch, queue_cap)
+    NU = _srpt_nu(batch)
     mesh = local_mesh(devices)
     padded, R = _pad_batch(batch, mesh.size)
     with enable_x64():
-        job_ev, t_ev, fs_ev, ovf, npre, ne = _call(
+        job_ev, t_ev, fs_ev, ovf, npre, ne, peak = _call(
             _srpt_shard_call,
             _dev(padded.arrival, jnp.float64),
             _dev(padded.need, jnp.float64),
             _dev(padded.service, jnp.float64),
             _dev(np.full(padded.reps, float(batch.k)), jnp.float64),
-            q_cap, _srpt_nu(batch), sf, mesh)
+            q_cap, NU, sf, _srpt_k_mult(NU, batch), mesh)
     return _srpt_result(batch, np.asarray(job_ev)[:R],
                         np.asarray(t_ev)[:R], np.asarray(fs_ev)[:R],
                         np.asarray(ovf)[:R], np.asarray(npre)[:R],
-                        np.asarray(ne)[:R], q_cap)
+                        np.asarray(ne)[:R], q_cap,
+                        peak=np.asarray(peak)[:R])
 
 
 @engines.register("sf-srpt", "jax-shard")
@@ -791,16 +797,18 @@ def _bs_grid_shard_call(carry, arrival, cls, need, service, j_live,
         carry, arrival, cls, need, service, j_live)
 
 
-@partial(jax.jit, static_argnums=(6, 7, 8, 9, 10))
+@partial(jax.jit, static_argnums=(6, 7, 8, 9, 10, 11))
 def _srpt_grid_shard_call(carry, arrival, need, service, kk, j_live,
                           Q: int, NU: tuple, sf: bool, length: int,
-                          mesh: Mesh):
+                          k_mult: bool, mesh: Mesh):
     def body(c, a, n, v, k, jl):
         f = lambda c1, a1, n1, v1, k1, jl1: _srpt_stream_core(
-            a1, n1, v1, k1, c1, Q, NU, sf, length, j_live=jl1)
+            a1, n1, v1, k1, c1, Q, NU, sf, length, j_live=jl1,
+            k_mult=k_mult)
         return jax.vmap(f)(c, a, n, v, k, jl)
+    # check_rep=False: see _srpt_shard_call (per-lane while_loop walk)
     return shard_map(body, mesh=mesh, in_specs=(P("c", "r"),) * 6,
-                     out_specs=(P("c", "r"),) * 4)(
+                     out_specs=(P("c", "r"),) * 4, check_rep=False)(
         carry, arrival, need, service, kk, j_live)
 
 
@@ -984,11 +992,12 @@ def _srpt_grid_shard(sf: bool, cells, devices=None):
             _dev(pg(p["service"]), jnp.float64),
             _dev(pg(p["kk"]), jnp.float64),
             _dev(pg(p["j_live"]), jnp.int32),
-            p["Q_pad"], p["NU"], sf, 2 * p["J_pad"], mesh)
+            p["Q_pad"], p["NU"], sf, 2 * p["J_pad"], p["k_mult"], mesh)
     return _srpt_grid_extract(
         cells, p, np.asarray(job_ev)[:G, :R], np.asarray(t_ev)[:G, :R],
         np.asarray(fs_ev)[:G, :R], np.asarray(carry[2])[:G, :R],
-        np.asarray(carry[3])[:G, :R], np.asarray(carry[4])[:G, :R])
+        np.asarray(carry[3])[:G, :R], np.asarray(carry[4])[:G, :R],
+        np.asarray(carry[5])[:G, :R])
 
 
 @engines.register_grid("sf-srpt", "jax-shard")

@@ -463,13 +463,13 @@ def _bs_jax(batch: BatchTrace, *, partition=None, wl=None, queue_cap=None,
 # -- preemptive SRPT-family cores (sf-srpt / ff-srpt) -----------------------
 
 
-@partial(jax.jit, static_argnames=("Q", "NU", "sf"),
+@partial(jax.jit, static_argnames=("Q", "NU", "sf", "k_mult"),
          donate_argnums=(0, 1, 2))
 def _srpt_scan_batch(arrival, need, service, kk, Q: int, NU: tuple,
-                     sf: bool):
+                     sf: bool, k_mult: bool):
     # _srpt_core carries the replications axis natively (per-lane sorts
     # and 1-entry scatters) — no vmap; see the sim_jax section comment.
-    return _srpt_core(arrival, need, service, kk, Q, NU, sf)
+    return _srpt_core(arrival, need, service, kk, Q, NU, sf, k_mult)
 
 
 def _srpt_nu(*batches) -> tuple:
@@ -479,13 +479,29 @@ def _srpt_nu(*batches) -> tuple:
     return tuple(sorted({int(v) for b in batches for v in np.unique(b.need)}))
 
 
-def _srpt_check_ovf(ovf, q_cap: int, cell: str = "") -> None:
+def _srpt_k_mult(NU: tuple, *batches) -> bool:
+    """Static "every k is an integer multiple of max(NU)" flag — the
+    closed-form ServerFilling walk gate of ``_srpt_fast_make_step``
+    (computed host-side from numpy so it never traces)."""
+    m = max(NU)
+    return all(float(b.k) % m == 0 for b in batches)
+
+
+def _srpt_check_ovf(ovf, q_cap: int, cell: str = "", peak=None) -> None:
     ovf = np.asarray(ovf)
     if ovf.any():
+        hint = ""
+        if peak is not None:
+            need = int(np.asarray(peak).max())
+            # the peak stops counting dropped arrivals after the first
+            # overflow, so it is a lower bound on the required capacity
+            q_next = max(1 << max(need - 1, 1).bit_length(), 2 * q_cap)
+            hint = (f"; measured peak occupancy >= {need} jobs — pass "
+                    f"queue_cap={q_next} (the next power of two) or more")
         raise RuntimeError(
             f"SRPT slot table overflow (queue_cap={q_cap}) in "
             f"{cell}replication(s) {np.flatnonzero(ovf).tolist()} — "
-            f"workload unstable at this load, or raise queue_cap")
+            f"workload unstable at this load, or raise queue_cap{hint}")
 
 
 def _srpt_no_failures(failures, policy: str) -> None:
@@ -496,10 +512,10 @@ def _srpt_no_failures(failures, policy: str) -> None:
 
 
 def _srpt_result(batch: BatchTrace, job_ev, t_ev, fs_ev, ovf, npre, ne,
-                 q_cap: int) -> BatchSimResult:
+                 q_cap: int, peak=None) -> BatchSimResult:
     """Event streams -> BatchSimResult, the `_python_core` op order
     (response = completion - arrival, wait = first start - arrival)."""
-    _srpt_check_ovf(ovf, q_cap)
+    _srpt_check_ovf(ovf, q_cap, peak=peak)
     assert (np.asarray(ne) == 2 * batch.num_jobs).all(), \
         "SRPT event scan under-ran its 2J event budget"
     comp, fstart = _srpt_scatter_events(batch.num_jobs, job_ev, t_ev, fs_ev)
@@ -514,14 +530,17 @@ def _srpt_jax(sf: bool, batch: BatchTrace, *, partition=None, wl=None,
     policy = "sf-srpt" if sf else "ff-srpt"
     _srpt_no_failures(failures, policy)
     q_cap = _srpt_args(batch, queue_cap)
+    NU = _srpt_nu(batch)
     with enable_x64():
-        job_ev, t_ev, fs_ev, ovf, npre, ne = _call(
-            partial(_srpt_scan_batch, Q=q_cap, NU=_srpt_nu(batch), sf=sf),
+        job_ev, t_ev, fs_ev, ovf, npre, ne, peak = _call(
+            partial(_srpt_scan_batch, Q=q_cap, NU=NU, sf=sf,
+                    k_mult=_srpt_k_mult(NU, batch)),
             _dev(batch.arrival, jnp.float64),
             _dev(batch.need, jnp.float64),
             _dev(batch.service, jnp.float64),
             _dev(np.full(batch.reps, float(batch.k)), jnp.float64))
-    return _srpt_result(batch, job_ev, t_ev, fs_ev, ovf, npre, ne, q_cap)
+    return _srpt_result(batch, job_ev, t_ev, fs_ev, ovf, npre, ne, q_cap,
+                        peak=peak)
 
 
 @engines.register("sf-srpt", "jax")
@@ -640,11 +659,13 @@ def _bs_fail_grid_chunk(carry, arrival, cls, need, service, ft, ftgt, fup,
                                 j_live=j_live)
 
 
-@partial(jax.jit, static_argnums=(6, 7, 8, 9), donate_argnums=(1, 2, 3))
+@partial(jax.jit, static_argnums=(6, 7, 8, 9, 10),
+         donate_argnums=(1, 2, 3))
 def _srpt_grid_chunk(carry, arrival, need, service, kk, j_live,
-                     Q: int, NU: tuple, sf: bool, length: int):
+                     Q: int, NU: tuple, sf: bool, length: int,
+                     k_mult: bool):
     return _srpt_stream_core(arrival, need, service, kk, carry, Q, NU,
-                             sf, length, j_live=j_live)
+                             sf, length, j_live=j_live, k_mult=k_mult)
 
 
 # -- host-side grid plans: stacked [G, R, ...] inputs + per-lane carries ----
@@ -920,30 +941,36 @@ def _srpt_grid_plan(cells) -> dict:
     j_live = np.broadcast_to(
         np.array([c.batch.num_jobs for c in cells], np.int32)[:, None],
         (G, R))
+    NU = _srpt_nu(*[c.batch for c in cells])
     return dict(arrival=arrival, need=need, service=service,
                 kk=np.ascontiguousarray(kk),
                 j_live=np.ascontiguousarray(j_live),
-                NU=_srpt_nu(*[c.batch for c in cells]),
+                NU=NU, k_mult=_srpt_k_mult(NU, *[c.batch for c in cells]),
                 Q_pad=max(q_caps), q_caps=q_caps, J_pad=J_pad)
 
 
 def _srpt_grid_carry(lead: tuple, Q: int):
-    S0 = np.zeros(lead + (Q, _SRPT_COLS))
-    S0[..., 0] = -1.0                        # every slot starts empty
-    return (_dev(np.zeros(lead), jnp.int32),
-            _dev(S0, jnp.float64),
-            _dev(np.zeros(lead), jnp.bool_),
-            _dev(np.zeros(lead), jnp.int32),
-            _dev(np.zeros(lead), jnp.int32))
+    """Per-lane empty fast carry (``_srpt_fast_init`` layout), built
+    host-side through ``_dev`` so the grid path compiles exactly one
+    program (``jnp`` constructors would add per-shape convert
+    executables to the pinned ``compile_count``)."""
+    zq = lambda dt: _dev(np.zeros(lead + (Q,)), dt)
+    z = lambda dt: _dev(np.zeros(lead), dt)
+    cols = (_dev(np.full(lead + (Q,), -1), jnp.int32),  # every slot empty
+            zq(jnp.int32), zq(jnp.int32), zq(jnp.float64), zq(jnp.float64),
+            zq(jnp.bool_), zq(jnp.bool_), zq(jnp.float64))
+    return (z(jnp.int32), cols, z(jnp.bool_), z(jnp.int32), z(jnp.int32),
+            z(jnp.int32))
 
 
 def _srpt_grid_extract(cells, plan, job_ev, t_ev, fs_ev, ovf, npre,
-                       ne) -> list:
+                       ne, peak=None) -> list:
     ovf, npre, ne = np.asarray(ovf), np.asarray(npre), np.asarray(ne)
     J_pad = plan["J_pad"]
     out = []
     for g, c in enumerate(cells):
-        _srpt_check_ovf(ovf[g], plan["q_caps"][g], cell=f"grid cell {g} ")
+        _srpt_check_ovf(ovf[g], plan["q_caps"][g], cell=f"grid cell {g} ",
+                        peak=None if peak is None else peak[g])
         assert (ne[g] == 2 * c.batch.num_jobs).all(), \
             "SRPT grid scan under-ran its event budget"
         comp, fstart = _srpt_scatter_events(J_pad, job_ev[g], t_ev[g],
@@ -1100,14 +1127,15 @@ def _srpt_grid(sf: bool, cells):
             _dev(p["service"].reshape(L, -1), jnp.float64),
             _dev(p["kk"].reshape(L), jnp.float64),
             _dev(p["j_live"].reshape(L), jnp.int32),
-            p["Q_pad"], p["NU"], sf, 2 * p["J_pad"])
+            p["Q_pad"], p["NU"], sf, 2 * p["J_pad"], p["k_mult"])
     return _srpt_grid_extract(
         cells, p, np.asarray(job_ev).reshape(G, R, -1),
         np.asarray(t_ev).reshape(G, R, -1),
         np.asarray(fs_ev).reshape(G, R, -1),
         np.asarray(carry[2]).reshape(G, R),
         np.asarray(carry[3]).reshape(G, R),
-        np.asarray(carry[4]).reshape(G, R))
+        np.asarray(carry[4]).reshape(G, R),
+        np.asarray(carry[5]).reshape(G, R))
 
 
 @engines.register_grid("sf-srpt", "jax")

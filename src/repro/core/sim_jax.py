@@ -222,26 +222,32 @@ def _kw_drain(W, t_up):
     return jnp.where(i == p, comp_f, W[jnp.where(i < p, i + 1, i)])
 
 
-def _fcfs_fail_stream_core(carry, t, n, svc, t_up, is_fail):
-    """FCFS merged arrival+failure scan resumed from ``carry`` (one lane).
+def _fcfs_fail_step(carry, inp):
+    """One merged arrival-or-failure row of the FCFS drain scan.
 
     Rows with ``is_fail`` drain W (``_kw_drain``); arrival rows are the
     ordinary Kiefer–Wolfowitz step.  Failures never touch ``t_prev`` —
     running jobs are not preempted, a breakdown only defers future starts.
+    Module-level (not a scan closure) so the fused Pallas kernel
+    (:mod:`repro.kernels.msj_scan`) executes the exact same step body.
+    """
+    W, t_prev = carry
+    tt, nn, ss, tu, isf = inp
+    W_a, start = _fcfs_sorted_step(W, t_prev, tt, nn, ss)
+    W_new = jnp.where(isf, _kw_drain(W, tu), W_a)
+    return (W_new, jnp.where(isf, t_prev, start)), start
+
+
+def _fcfs_fail_stream_core(carry, t, n, svc, t_up, is_fail):
+    """FCFS merged arrival+failure scan resumed from ``carry`` (one lane).
+
     Start outputs of failure rows are garbage; the host gathers arrival
     positions via ``MergedStream.job_pos``.  The carry is the plain
     ``(W, t_prev)`` FCFS state, so per-lane grid carries (dead ``_BIG``
     tail entries in W for k-padding) plug in directly, and padding rows
     (``is_fail`` with ``t_up = 0``) are the identity.
     """
-    def step(carry, inp):
-        W, t_prev = carry
-        tt, nn, ss, tu, isf = inp
-        W_a, start = _fcfs_sorted_step(W, t_prev, tt, nn, ss)
-        W_new = jnp.where(isf, _kw_drain(W, tu), W_a)
-        return (W_new, jnp.where(isf, t_prev, start)), start
-
-    return jax.lax.scan(step, carry, (t, n, svc, t_up, is_fail))
+    return jax.lax.scan(_fcfs_fail_step, carry, (t, n, svc, t_up, is_fail))
 
 
 def _fcfs_fail_core(t, n, svc, t_up, is_fail, k: int):
@@ -1191,7 +1197,8 @@ def _srpt_first_fit(kk, need_w, cand, NU: tuple):
 _SRPT_COLS = 8  # job, arrival, need, rem, run_start, running, started, fstart
 
 
-def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
+def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None,
+                    sort=None):
     """Event step of the preemptive SRPT-family scan (see section above).
 
     ``jobrec`` [R, J, 3] packs (arrival, service, need); ``kk`` [R] is the
@@ -1202,7 +1209,17 @@ def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
     ``j_live`` (optional [R]) caps admitted arrivals — the J-padding
     guard of the grid driver; trailing steps past a lane's 2*j_live true
     events are no-ops.
+
+    ``sort`` swaps the stable sort implementation (signature and contract
+    of ``jax.lax.sort``, the default): the fused Pallas kernels pass the
+    in-kernel bitonic network of :mod:`repro.kernels.msj_scan.sort`, which
+    is bit-equal to ``lax.sort`` — this reference step stays the oracle
+    either way.  This is the *reference* step; the batched jax engines run
+    the op-lean :func:`_srpt_fast_make_step` below, pinned bit-identical
+    to this one in ``tests/test_sim_cross.py``.
     """
+    if sort is None:
+        sort = jax.lax.sort
     R, J, _ = jobrec.shape
     dt = jobrec.dtype
     INF = jnp.asarray(jnp.inf, dt)
@@ -1227,7 +1244,7 @@ def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
         return jnp.take_along_axis(jobrec, idx[:, None, None], axis=1)[:, 0]
 
     def step(carry, _):
-        ai, S, ovf, npre, ne = carry
+        ai, S, ovf, npre, ne, peak = carry
         job, s_need, s_rem = S[..., 0], S[..., 2], S[..., 3]
         s_rs, s_run = S[..., 4], S[..., 5] > 0
 
@@ -1274,6 +1291,10 @@ def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
         s_rs, s_run = S[..., 4], S[..., 5] > 0
         s_started, s_fstart = S[..., 6] > 0, S[..., 7]
         occ = job >= 0
+        # peak in-system count (a dropped arrival still counts: on overflow
+        # the reported peak is the capacity the run *needed*, a lower bound)
+        peak = jnp.maximum(peak, jnp.sum(occ, axis=1, dtype=jnp.int32)
+                           + jnp.where(is_arr & ~has_free, 1, 0))
 
         # -- reconcile at t: rank-sort the in-system set (stable, ties by
         # arrival), pick the desired running set, preempt / start.
@@ -1283,7 +1304,7 @@ def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
         rank = cur_rem * s_need if sf else cur_rem
         rk = jnp.where(occ, rank, INF)
         ak = jnp.where(occ, s_arr, INF)
-        rk_s, _, need_s, slot_s = jax.lax.sort(
+        rk_s, _, need_s, slot_s = sort(
             (rk, ak, s_need, slot_i), dimension=1, num_keys=2,
             is_stable=True)
         occ_s = rk_s < GUARD
@@ -1298,7 +1319,7 @@ def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
             idx_m = jnp.argmax(cum >= kk[:, None], axis=1)
             in_M = occ_s & (pos <= idx_m[:, None])
             key1 = jnp.where(in_M, -need_s, _BIG)
-            key1_s, _, need_w, slot_w = jax.lax.sort(
+            key1_s, _, need_w, slot_w = sort(
                 (key1, rk_s, need_s, slot_s), dimension=1, num_keys=2,
                 is_stable=True)
             take = _srpt_first_fit(kk, need_w, key1_s < GUARD, NU)
@@ -1319,45 +1340,371 @@ def _srpt_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool, j_live=None):
              (s_started | to_start).astype(dt),
              jnp.where(to_start & ~s_started, t[:, None], s_fstart)],
             axis=2)
-        return (ai, S, ovf, npre, ne), (job_out, t_out, fs_out)
+        return (ai, S, ovf, npre, ne, peak), (job_out, t_out, fs_out)
 
     return step
 
 
 def _srpt_init(R: int, Q: int, dt):
-    """Empty slot table + counters (the scan carry) for ``R`` lanes."""
+    """Empty slot table + counters (the reference scan carry), ``R`` lanes.
+
+    Carry = (arrival cursor, slot table [R, Q, 8], overflow flag,
+    preemption count, processed-event count, peak in-system count).
+    """
     S = jnp.zeros((R, Q, _SRPT_COLS), dt).at[..., 0].set(-1.0)
     return (jnp.zeros(R, jnp.int32), S, jnp.zeros(R, bool),
-            jnp.zeros(R, jnp.int32), jnp.zeros(R, jnp.int32))
+            jnp.zeros(R, jnp.int32), jnp.zeros(R, jnp.int32),
+            jnp.zeros(R, jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Fast SRPT step: the engine="jax" / "jax-shard" substrate.
+#
+# Profiling the reference step on XLA:CPU shows the two 4-operand stable
+# lax.sort calls dominating the per-event cost (the multi-operand
+# comparator is an opaque library call per event), with the [R, Q]
+# boolean unsort scatter second — ScatterExpander serializes it into a
+# Q·R-trip while loop.  The step below is bit-identical to the reference
+# (pinned in tests/test_sim_cross.py) but restructures every hot op into
+# single-operand u32/u64 pack sorts over composite integer keys:
+#
+# * Rank keys are nonnegative f64 (or +inf empty sentinels), so their
+#   IEEE-754 bit patterns order identically as u64 — one bitcast single-
+#   operand sort + a branchless bisection turns the (rank, arrival) sort
+#   into collapsed integer ranks.
+# * Tie-break arrival times are replaced by dense per-lane arrival *ranks*
+#   (a one-time cummax over the sorted trace), preserving every equality
+#   class, so the composite (rank, arrival-rank, slot) key packs into one
+#   machine word — the second sort becomes a single-operand integer sort.
+# * The unsort scatter becomes another pack sort: sorting
+#   (slot_index << bQ | position) recovers the inverse permutation as a
+#   gather (an exact permutation, so "sort by destination" == scatter).
+# * The first-fit walk runs in pure int32 (needs are integers, and
+#   ``floor(k)`` is exact for the capacity test: integer LHS >= u - frac
+#   iff LHS >= u for 0 <= frac < 1), with the per-round threshold u from
+#   a count-leading-zeros when NU is the contiguous powers of two.  The
+#   reference walk's blocking pointer is provably redundant — within a
+#   round takes form a prefix of the eligibles, and u never increases —
+#   so the walk terminates on "no new takes" instead.
+# * ServerFilling with pow2-contiguous NU *and* k a multiple of max(NU)
+#   (``k_mult``, a static flag the callers compute host-side) admits a
+#   closed form: capacity stays a multiple of the class need while that
+#   class is walked, so the threshold rounds converge to the per-class
+#   greedy count min(cnt_c, F_c // c) — no while loop at all.
+#
+# The slot table is carried as per-column arrays in their natural dtypes
+# (i32 ids/needs, bool flags) instead of one [R, Q, 8] f64 stack: the
+# integer columns feed the pack sorts without per-event casts.
+# --------------------------------------------------------------------------
+
+
+def _srpt_ff_walk(Fi0, need_w, cand, NU: tuple, NUi):
+    """Integer first-fit walk: bit-equal to :func:`_srpt_first_fit` on
+    integer needs/capacities (see section comment for the argument).
+
+    ``Fi0`` [R] i32 is floor(k); ``need_w`` [R, Q] i32 the candidate
+    needs in packing order (0 for empty); ``cand`` the candidate mask.
+    """
+    R, Q = need_w.shape
+    pow2 = tuple(NU) == tuple(2 ** i for i in range(len(NU)))
+    maxnu = int(max(NU))
+
+    def body(st):
+        take, F, _ = st
+        if pow2:
+            # largest NU <= F is min(2^msb(F), max NU) when NU is the
+            # contiguous powers of two
+            u = jnp.minimum(
+                jnp.where(F > 0, 1 << (31 - jax.lax.clz(jnp.maximum(F, 1))),
+                          0), maxnu)
+        else:
+            cnt = jnp.sum(NUi[None, :] <= F[:, None], axis=1,
+                          dtype=jnp.int32)
+            u = jnp.where(cnt > 0, jnp.take(NUi, jnp.clip(cnt - 1, 0)), 0)
+        elig = cand & ~take & (need_w <= u[:, None])
+        csum = jnp.cumsum(jnp.where(elig, need_w, 0), axis=1,
+                          dtype=jnp.int32)
+        # Within a round F - (csum - need) is nonincreasing along the row,
+        # so takes are a prefix of the eligible set; with u nonincreasing
+        # across rounds no skipped job regains eligibility, which makes
+        # the reference walk's blocking pointer a no-op.
+        newt = elig & (F[:, None] - (csum - need_w) >= u[:, None])
+        take = take | newt
+        d = jnp.sum(jnp.where(newt, need_w, 0), axis=1, dtype=jnp.int32)
+        return take, F - d, d.sum() > 0
+
+    st = (jnp.zeros((R, Q), bool), Fi0, jnp.asarray(True))
+    st = jax.lax.while_loop(lambda s: s[2], body, st)
+    return st[0]
+
+
+def _srpt_fast_init(R: int, Q: int, dt):
+    """Empty per-column slot table + counters (the fast scan carry).
+
+    Same logical state as :func:`_srpt_init`, carried as one array per
+    column in its natural dtype.
+    """
+    cols = (jnp.full((R, Q), -1, jnp.int32),   # job id
+            jnp.zeros((R, Q), jnp.int32),      # arrival rank
+            jnp.zeros((R, Q), jnp.int32),      # need
+            jnp.zeros((R, Q), dt),             # remaining work
+            jnp.zeros((R, Q), dt),             # run start
+            jnp.zeros((R, Q), bool),           # running
+            jnp.zeros((R, Q), bool),           # started
+            jnp.zeros((R, Q), dt))             # first start
+    return (jnp.zeros(R, jnp.int32), cols, jnp.zeros(R, bool),
+            jnp.zeros(R, jnp.int32), jnp.zeros(R, jnp.int32),
+            jnp.zeros(R, jnp.int32))
+
+
+def _srpt_fast_make_step(jobrec, kk, Q: int, NU: tuple, sf: bool,
+                         j_live=None, k_mult: bool = False):
+    """Op-lean SRPT event step, bit-identical to :func:`_srpt_make_step`.
+
+    Same inputs as the reference factory plus ``k_mult``, the static
+    "every lane's k is an integer multiple of max(NU)" flag enabling the
+    closed-form ServerFilling walk (see the section comment).  The carry
+    is the :func:`_srpt_fast_init` per-column layout.
+    """
+    R, J, _ = jobrec.shape
+    dt = jobrec.dtype
+    INF = jnp.asarray(jnp.inf, dt)
+    GUARD = jnp.asarray(0.5 * _BIG, dt)
+    jl = J if j_live is None else j_live
+    pos = jnp.arange(Q, dtype=jnp.int32)[None, :]
+    iota_u = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.uint32), (R, Q))
+
+    # --- one-time precomputation: dense arrival ranks + integer needs.
+    # Arrival times enter the sorts only as tie-break keys; the dense rank
+    # (strictly increasing across distinct times, equal within a tie
+    # group) preserves every equality class, so tie-breaking is identical.
+    arrival = jobrec[:, :, 0]
+    ii = jnp.arange(1, J, dtype=jnp.int32)
+    neq = arrival[:, 1:] != arrival[:, :-1]
+    abt = jnp.concatenate(
+        [jnp.zeros((R, 1), jnp.int32),
+         jax.lax.cummax(jnp.where(neq, ii[None, :], 0), axis=1)], axis=1)
+    need_t = jobrec[:, :, 2].astype(jnp.int32)
+
+    assert all(float(v).is_integer() for v in NU), \
+        "integer walk requires integer server needs"
+    NUi = jnp.asarray([int(v) for v in NU], jnp.int32)
+    Fi0 = jnp.floor(kk).astype(jnp.int32)
+    kceil = (-jnp.floor(-kk)).astype(jnp.int32)
+
+    bQ = int(np.log2(Q))
+    assert 1 << bQ == Q, "Q must be a power of two (see _srpt_args)"
+    bJ = max(1, int(np.ceil(np.log2(max(J, 2)))))
+    packdt = jnp.uint32 if (bQ + 1) + bJ + bQ <= 32 else jnp.uint64
+
+    NCLS = len(NU)
+    maxneed = int(max(NU))
+    pow2nu = tuple(NU) == tuple(2 ** i for i in range(len(NU)))
+    closed_sf = sf and pow2nu and k_mult
+    bN = max(1, int(np.ceil(np.log2(maxneed + 2))))
+    pay2 = 2 * bN + 1 + bQ <= 32
+    lut = np.full(maxneed + 1, NCLS, np.int32)
+    for i, v in enumerate(sorted(NU, reverse=True)):
+        lut[int(v)] = i
+    lut = jnp.asarray(lut)
+    assert max(1, int(np.ceil(np.log2(NCLS + 1)))) + bQ <= 32
+
+    def taa(a, idx):
+        return jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+
+    def unsort(slot_perm, take):
+        # Inverse-permute via one u32 pack sort + gather (a [R, Q] scatter
+        # expands to a sequential R*Q-trip while loop on XLA:CPU).
+        packi = (slot_perm.astype(jnp.uint32) << bQ) | iota_u
+        inv = (jax.lax.sort((packi,), dimension=1, num_keys=1)[0]
+               & (Q - 1)).astype(jnp.int32)
+        return jnp.take_along_axis(take, inv, axis=1)
+
+    def bsearch(srt, v):
+        # branchless searchsorted-left of every v in its own sorted row
+        lo = jnp.zeros(v.shape, jnp.int32)
+        step = Q >> 1
+        while step >= 1:
+            probe = lo + step - 1
+            sv = jnp.take_along_axis(srt, probe, axis=1)
+            lo = lo + jnp.where(sv < v, step, 0)
+            step >>= 1
+        sv = jnp.take_along_axis(srt, jnp.minimum(lo, Q - 1), axis=1)
+        return lo + jnp.where((lo < Q) & (sv < v), 1, 0)
+
+    def step(carry, _):
+        ai, cols, ovf, npre, ne, peak = carry
+        job, abr, need, rem, rs, run, started, fstart = cols
+
+        j_arr = jnp.minimum(ai, J - 1)
+        rec_a = jnp.take_along_axis(jobrec, j_arr[:, None, None],
+                                    axis=1)[:, 0]
+        Ta = jnp.where(ai < jl, rec_a[:, 0], INF)
+        comp = jnp.where(run, rs + rem, _BIG)
+        qd = jnp.argmin(comp, axis=1).astype(jnp.int32)
+        Tc = taa(comp, qd)
+        is_arr = (ai < jl) & (Ta <= Tc)
+        is_dep = (~is_arr) & (Tc < GUARD)
+        active = is_arr | is_dep
+        ne = ne + jnp.where(active, 1, 0)
+        t = jnp.where(is_arr, Ta, Tc)
+
+        job_out = jnp.where(is_dep, taa(job, qd), -1).astype(dt)
+        t_out = jnp.where(is_dep, Tc, 0.0)
+        fs_out = jnp.where(is_dep, taa(fstart, qd), 0.0)
+
+        free = job < 0
+        fs_i = jnp.argmax(free, axis=1).astype(jnp.int32)
+        has_free = taa(free, fs_i)
+        do_ins = is_arr & has_free
+        ovf = ovf | (is_arr & ~has_free)
+        idx = jnp.where(do_ins, fs_i, jnp.where(is_dep, qd, Q))
+        mask = pos == idx[:, None]
+        job = jnp.where(mask, jnp.where(is_arr, j_arr, -1)[:, None], job)
+        abr = jnp.where(
+            mask, jnp.where(is_arr, taa(abt, j_arr), 0)[:, None], abr)
+        need = jnp.where(
+            mask, jnp.where(is_arr, taa(need_t, j_arr), 0)[:, None], need)
+        rem = jnp.where(
+            mask, jnp.where(is_arr, rec_a[:, 1], 0.0)[:, None], rem)
+        rs = jnp.where(mask, 0.0, rs)
+        run = run & ~mask
+        started_pi = started & ~mask
+        fstart_pi = jnp.where(mask, 0.0, fstart)
+        ai = ai + jnp.where(is_arr, 1, 0)
+        occ = job >= 0
+        # peak in-system count (a dropped arrival still counts: on
+        # overflow the reported peak is a lower bound on the needed Q)
+        peak = jnp.maximum(peak, jnp.sum(occ, axis=1, dtype=jnp.int32)
+                           + jnp.where(is_arr & ~has_free, 1, 0))
+
+        cur_rem = jnp.where(
+            run, jnp.maximum(0.0, rem - (t[:, None] - rs)), rem)
+        rank = cur_rem * need.astype(dt) if sf else cur_rem
+        rk = jnp.where(occ, rank, INF)
+        # nonnegative f64 bit patterns order as u64: single-operand sort
+        # + bisection collapses ranks to integers, then one pack sort on
+        # (rank', arrival rank, slot) yields the stable permutation
+        rkb = jax.lax.bitcast_convert_type(rk, jnp.uint64)
+        srt = jax.lax.sort((rkb,), dimension=1, num_keys=1)[0]
+        r1 = bsearch(srt, rkb)
+        abi = abr.astype(packdt)
+        pack = ((r1.astype(packdt) << (bJ + bQ)) | (abi << bQ)
+                | iota_u.astype(packdt))
+        ps = jax.lax.sort((pack,), dimension=1, num_keys=1)[0]
+        perm = (ps & (Q - 1)).astype(jnp.int32)
+        need_s = jnp.take_along_axis(need, perm, axis=1)
+        occ_s = need_s >= 1
+        if sf:
+            cum = jnp.cumsum(jnp.where(occ_s, need_s, 0), axis=1,
+                             dtype=jnp.int32)
+            has_m = cum[:, -1] >= kceil
+            idx_m = jnp.argmax(cum >= kceil[:, None], axis=1)
+            in_M = occ_s & (pos <= idx_m[:, None])
+            if pay2:
+                # key = descending-need class (maxneed - need; non-M
+                # last); payload need/in_M/rank ride along so no
+                # post-sort gathers.  Non-M entries reorder by need,
+                # which is sound: they are never eligible, so take and
+                # missed are identically zero there.
+                key2 = jnp.where(in_M, maxneed - need_s,
+                                 maxneed + 1).astype(jnp.uint32)
+                pack2 = ((key2 << (bN + 1 + bQ))
+                         | (need_s.astype(jnp.uint32) << (1 + bQ))
+                         | (in_M << bQ) | iota_u)
+                ps2 = jax.lax.sort((pack2,), dimension=1, num_keys=1)[0]
+                need_w = ((ps2 >> (1 + bQ))
+                          & ((1 << bN) - 1)).astype(jnp.int32)
+                cand_w = ((ps2 >> bQ) & 1) == 1
+                perm2 = (ps2 & (Q - 1)).astype(jnp.int32)
+                slot_w = jnp.take_along_axis(perm, perm2, axis=1)
+            else:
+                cls = jnp.where(in_M, jnp.take(lut, need_s),
+                                NCLS).astype(jnp.uint32)
+                pack2 = (cls << bQ) | iota_u
+                ps2 = jax.lax.sort((pack2,), dimension=1, num_keys=1)[0]
+                perm2 = (ps2 & (Q - 1)).astype(jnp.int32)
+                need_w = jnp.take_along_axis(need_s, perm2, axis=1)
+                slot_w = jnp.take_along_axis(perm, perm2, axis=1)
+                cand_w = jnp.take_along_axis(in_M, perm2, axis=1)
+            if closed_sf:
+                # NU contiguous powers of two and k a multiple of
+                # max(NU): capacity stays a multiple of the class need
+                # while that class is walked, so the threshold rounds
+                # converge to the per-class greedy count
+                # min(cnt_c, F_c // c).
+                onec = cand_w[:, :, None] & (
+                    need_w[:, :, None] == NUi[None, None, ::-1])
+                cnt_c = jnp.sum(onec, axis=1, dtype=jnp.int32)  # desc
+                lims = []
+                F = Fi0
+                for c in range(NCLS):
+                    nu_c = int(NU[NCLS - 1 - c])
+                    lim = jnp.minimum(cnt_c[:, c], F // nu_c)
+                    F = F - lim * nu_c
+                    lims.append(lim)
+                lim_t = jnp.stack(lims, axis=1)
+                start_t = jnp.cumsum(cnt_c, axis=1, dtype=jnp.int32) - cnt_c
+                end_t = start_t + lim_t
+                clsw = (NCLS - 1
+                        - (31 - jax.lax.clz(jnp.maximum(need_w, 1))))
+                endp = jnp.take_along_axis(
+                    end_t, jnp.clip(clsw, 0, NCLS - 1), axis=1)
+                take = cand_w & (pos < endp)
+            else:
+                take = _srpt_ff_walk(Fi0, need_w, cand_w, NU, NUi)
+            desired = jnp.where(has_m[:, None], unsort(slot_w, take), occ)
+        else:
+            take = _srpt_ff_walk(Fi0, need_s, occ_s, NU, NUi)
+            desired = unsort(perm, take)
+
+        to_pre = active[:, None] & run & ~desired
+        to_start = active[:, None] & desired & ~run
+        npre = npre + jnp.sum(to_pre, axis=1).astype(jnp.int32)
+        cols = (job, abr, need,
+                jnp.where(to_pre, cur_rem, rem),
+                jnp.where(to_start, t[:, None], rs),
+                jnp.where(active[:, None], desired, run),
+                started_pi | to_start,
+                jnp.where(to_start & ~started_pi, t[:, None], fstart_pi))
+        return (ai, cols, ovf, npre, ne, peak), (job_out, t_out, fs_out)
+
+    return step
 
 
 def _srpt_stream_core(arrival, need, service, kk, carry, Q: int, NU: tuple,
-                      sf: bool, length: int, j_live=None):
+                      sf: bool, length: int, j_live=None,
+                      k_mult: bool = False):
     """``length`` SRPT event steps resumed from ``carry``, batched.
 
+    Runs the fast step (``carry`` is the :func:`_srpt_fast_init` layout).
     Returns the updated carry plus the per-event (job id, completion,
     first start) record streams, each [R, length]; -1 job ids mark
     non-departure steps.
     """
     jobrec = jnp.stack([arrival, service, need], axis=2)
-    step = _srpt_make_step(jobrec, kk, Q, NU, sf, j_live=j_live)
+    step = _srpt_fast_make_step(jobrec, kk, Q, NU, sf, j_live=j_live,
+                                k_mult=k_mult)
     carry, (job_ev, t_ev, fs_ev) = jax.lax.scan(step, carry, None,
                                                 length=length)
     return carry, job_ev.T, t_ev.T, fs_ev.T
 
 
-def _srpt_core(arrival, need, service, kk, Q: int, NU: tuple, sf: bool):
+def _srpt_core(arrival, need, service, kk, Q: int, NU: tuple, sf: bool,
+               k_mult: bool = False):
     """Full-trace SRPT event scan: 2J steps from an empty system.
 
-    Returns the event streams plus the per-lane (ovf, npre, ne) counters:
-    slot-table overflow (the sys_cap analogue of the BS ring overflow),
-    preemption count, and processed-event count (== 2J on success).
+    Returns the event streams plus the per-lane (ovf, npre, ne, peak)
+    counters: slot-table overflow (the sys_cap analogue of the BS ring
+    overflow), preemption count, processed-event count (== 2J on
+    success), and peak in-system job count (the overflow diagnostic).
     """
     R, J = arrival.shape
-    carry0 = _srpt_init(R, Q, arrival.dtype)
+    carry0 = _srpt_fast_init(R, Q, arrival.dtype)
     carry, job_ev, t_ev, fs_ev = _srpt_stream_core(
-        arrival, need, service, kk, carry0, Q, NU, sf, 2 * J)
-    return job_ev, t_ev, fs_ev, carry[2], carry[3], carry[4]
+        arrival, need, service, kk, carry0, Q, NU, sf, 2 * J,
+        k_mult=k_mult)
+    return job_ev, t_ev, fs_ev, carry[2], carry[3], carry[4], carry[5]
 
 
 def _srpt_scatter_events(J: int, job_ev, t_ev, fs_ev):
@@ -1387,11 +1734,15 @@ def _srpt_args(trace_or_batch, queue_cap) -> int:
     exceeds it, which raises loudly (``_srpt_check_ovf``) instead of
     returning a silently wrong path.  The default ``min(J, max(4k, 256))``
     comfortably bounds any stable workload; per-step cost grows with
-    ``Q log Q`` (the rank sorts), so it is deliberately not ``J``.
+    ``Q log Q`` (the rank sorts), so it is deliberately not ``J``.  The
+    result is rounded up to a power of two: the slot-index pack keys of
+    the fast step and the bitonic network of the Pallas kernels both
+    need it, and results are Q-independent below the overflow bound.
     """
     J = int(trace_or_batch.num_jobs)
     if queue_cap is None:
         queue_cap = max(4 * int(trace_or_batch.k), 256)
     elif queue_cap < 1:
         raise ValueError(f"queue_cap must be >= 1, got {queue_cap}")
-    return max(1, min(J, int(queue_cap)))
+    q = max(1, min(J, int(queue_cap)))
+    return 1 << (q - 1).bit_length()

@@ -17,17 +17,26 @@ kernel bodies (and the bodies execute the same hoisted step functions; see
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from repro.core import engines
-from repro.core.sim_batch import (_bs_result, _call, _class_inputs,
-                                  _fcfs_inputs, _fcfs_result, _modbs_result,
-                                  _partition_args)
-from repro.core.sim_jax import _bs_args
+from repro.core import failures as flr
+from repro.core.partition import balanced_partition
+from repro.core.sim_batch import (_bs_fail_args, _bs_result, _call,
+                                  _class_inputs, _dev, _fcfs_inputs,
+                                  _fcfs_result, _merged_fcfs_inputs,
+                                  _modbs_result, _partition_args,
+                                  _srpt_no_failures, _srpt_nu, _srpt_result,
+                                  _with_drain_obs)
+from repro.core.sim_jax import _bs_args, _srpt_args
 
-from .kernel import bs_scan_fwd, fcfs_scan_fwd, modbs_scan_fwd
+from .kernel import (bs_fail_scan_fwd, bs_scan_fwd, fcfs_fail_scan_fwd,
+                     fcfs_scan_fwd, modbs_fail_scan_fwd, modbs_scan_fwd)
+from .srpt import srpt_scan_fwd
 
 
 def _interpret() -> bool:
@@ -56,56 +65,128 @@ def bs_scan(arrival, cls, need, service, *, slots, s_max: int, h: int,
                        interpret=_interpret())
 
 
+def srpt_scan(arrival, need, service, kk, *, Q: int, NU: tuple, sf: bool):
+    """Fused preemptive SRPT event scan (bitonic in-kernel sort) ->
+    (job_ev, t_ev, fs_ev, ovf, npre, ne, peak)."""
+    return srpt_scan_fwd(arrival, need, service, kk, Q=Q, NU=NU, sf=sf,
+                         interpret=_interpret())
 
 
-def _no_failures(failures, policy: str):
-    """The fused kernels have no capacity-mask carry (ROADMAP: open item)."""
-    if failures is not None:
-        supported = ", ".join(f"engine={e!r}"
-                              for e in engines.FAILURE_ENGINES)
-        raise NotImplementedError(
-            f"engine='pallas' does not support fault injection yet "
-            f"(policy {policy!r}): the fused kernels carry no capacity "
-            f"mask — engines that do support failures=: {supported} "
-            f"('python' kills in-flight jobs, 'jax'/'jax-shard' drain)")
 
 
 # -- engine="pallas" registry cores -----------------------------------------
+#
+# The failure branches mirror the engine="jax" drain flows exactly (host-side
+# merge of the failure stream, fused-kernel scan, unmerge via
+# ``MergedStream.job_pos``) — only the scan call differs, so drain results
+# are bit-identical to engine="jax" by construction outside the kernel body.
 
 
 @engines.register("fcfs", "pallas")
 def _fcfs_pallas(batch, *, partition=None, wl=None, failures=None):
     """Fused-kernel FCFS core (replications axis = Pallas grid)."""
-    _no_failures(failures, "fcfs")
+    if failures is None:
+        with enable_x64():
+            a, n, v = _fcfs_inputs(batch)
+            starts = _call(lambda a, n, v: fcfs_scan(a, n, v, k=batch.k),
+                           a, n, v)
+        return _fcfs_result(batch, starts)
+    flr.require_drain(failures, "pallas")
+    ms = _merged_fcfs_inputs(batch, failures)
     with enable_x64():
-        a, n, v = _fcfs_inputs(batch)
-        starts = _call(lambda a, n, v: fcfs_scan(a, n, v, k=batch.k),
-                       a, n, v)
-    return _fcfs_result(batch, starts)
+        starts_m = _call(
+            lambda t, n, v, tu, isf: fcfs_fail_scan_fwd(
+                t, n, v, tu, isf, k=batch.k, interpret=_interpret()),
+            _dev(ms.t, jnp.float64), _dev(ms.need, jnp.int32),
+            _dev(ms.service, jnp.float64), _dev(ms.t_up, jnp.float64),
+            _dev(ms.is_fail != 0, jnp.bool_))
+    starts = np.take_along_axis(np.asarray(starts_m), ms.job_pos, axis=1)
+    return _with_drain_obs(_fcfs_result(batch, starts), batch, failures)
 
 
 @engines.register("modbs-fcfs", "pallas")
 def _modbs_pallas(batch, *, partition=None, wl=None, failures=None):
     """Fused-kernel ModifiedBS-FCFS core."""
-    _no_failures(failures, "modbs-fcfs")
     slots, s_max, h = _partition_args(batch, partition, wl)
+    if failures is None:
+        with enable_x64():
+            blocked, starts = _call(
+                lambda a, c, n, v: modbs_scan(a, c, n, v, slots=slots,
+                                              s_max=s_max, h=h),
+                *_class_inputs(batch))
+        return _modbs_result(batch, blocked, starts)
+    flr.require_drain(failures, "pallas")
+    part = partition if partition is not None else balanced_partition(wl)
+    ft, ftgt, fup, count = flr.partition_targets(failures, part)
+    ms = flr.merge_failure_stream(batch, ft, ftgt, fup, count,
+                                  pad_cls=len(part.a))
     with enable_x64():
-        blocked, starts = _call(
-            lambda a, c, n, v: modbs_scan(a, c, n, v, slots=slots,
-                                          s_max=s_max, h=h),
-            *_class_inputs(batch))
-    return _modbs_result(batch, blocked, starts)
+        blocked_m, starts_m = _call(
+            lambda t, c, n, v, tu, isf: modbs_fail_scan_fwd(
+                t, c, n, v, tu, isf, jnp.asarray(slots, jnp.int32),
+                s_max=s_max, h=h, interpret=_interpret()),
+            _dev(ms.t, jnp.float64), _dev(ms.cls, jnp.int32),
+            _dev(ms.need, jnp.int32), _dev(ms.service, jnp.float64),
+            _dev(ms.t_up, jnp.float64), _dev(ms.is_fail != 0, jnp.bool_))
+    starts = np.take_along_axis(np.asarray(starts_m), ms.job_pos, axis=1)
+    blocked = np.take_along_axis(np.asarray(blocked_m), ms.job_pos, axis=1)
+    return _with_drain_obs(_modbs_result(batch, blocked, starts), batch,
+                           failures)
 
 
 @engines.register("bs-fcfs", "pallas")
 def _bs_pallas(batch, *, partition=None, wl=None, queue_cap=None,
                failures=None):
     """Fused-kernel BS-FCFS (Definition 1) event-step core."""
-    _no_failures(failures, "bs-fcfs")
     slots, s_max, h, q_cap = _bs_args(batch, partition, wl, queue_cap)
+    if failures is None:
+        with enable_x64():
+            tagged, rec_t, ovf = _call(
+                lambda a, c, n, v: bs_scan(a, c, n, v, slots=slots,
+                                           s_max=s_max, h=h, q_cap=q_cap),
+                *_class_inputs(batch))
+        return _bs_result(batch, tagged, rec_t, ovf, q_cap)
+    flr.require_drain(failures, "pallas")
+    ft, ftgt, fup, length = _bs_fail_args(batch, failures, partition, wl)
     with enable_x64():
         tagged, rec_t, ovf = _call(
-            lambda a, c, n, v: bs_scan(a, c, n, v, slots=slots, s_max=s_max,
-                                       h=h, q_cap=q_cap),
-            *_class_inputs(batch))
-    return _bs_result(batch, tagged, rec_t, ovf, q_cap)
+            lambda a, c, n, v, t1, t2, t3: bs_fail_scan_fwd(
+                a, c, n, v, t1, t2, t3, jnp.asarray(slots, jnp.int32),
+                s_max=s_max, h=h, q_cap=q_cap, length=length,
+                interpret=_interpret()),
+            *_class_inputs(batch),
+            _dev(ft, jnp.float64), _dev(ftgt, jnp.int32),
+            _dev(fup, jnp.float64))
+    return _with_drain_obs(_bs_result(batch, tagged, rec_t, ovf, q_cap),
+                           batch, failures)
+
+
+def _srpt_pallas(sf: bool, batch, *, partition=None, wl=None,
+                 queue_cap=None, failures=None):
+    policy = "sf-srpt" if sf else "ff-srpt"
+    _srpt_no_failures(failures, policy)
+    q_cap = _srpt_args(batch, queue_cap)
+    NU = _srpt_nu(batch)
+    with enable_x64():
+        job_ev, t_ev, fs_ev, ovf, npre, ne, peak = _call(
+            lambda a, n, v, k: srpt_scan(a, n, v, k, Q=q_cap, NU=NU, sf=sf),
+            _dev(batch.arrival, jnp.float64),
+            _dev(batch.need, jnp.float64),
+            _dev(batch.service, jnp.float64),
+            _dev(np.full(batch.reps, float(batch.k)), jnp.float64))
+    return _srpt_result(batch, job_ev, t_ev, fs_ev, ovf, npre, ne, q_cap,
+                        peak=peak)
+
+
+@engines.register("sf-srpt", "pallas")
+def _sf_srpt_pallas(batch, **kw):
+    """Fused-kernel ServerFilling-SRPT core: the reference event step with
+    the in-kernel stable bitonic rank/permute of ``sort.bitonic_sort`` —
+    bit-identical to every other sf-srpt engine, ``preemptions`` included."""
+    return _srpt_pallas(True, batch, **kw)
+
+
+@engines.register("ff-srpt", "pallas")
+def _ff_srpt_pallas(batch, **kw):
+    """Fused-kernel FirstFit-SRPT core (see ``_sf_srpt_pallas``)."""
+    return _srpt_pallas(False, batch, **kw)

@@ -1,0 +1,111 @@
+"""Stable bitonic rank/permute network — the in-kernel sort primitive.
+
+``jax.lax.sort`` is the per-event cost ceiling of the preemptive SRPT scans
+on XLA:CPU: each event re-sorts the [R, Q] slot table twice, and the sort
+lowers to a library call the fusing pipeline cannot absorb — inside a
+Pallas kernel body it is not available at all.  :func:`bitonic_sort` is a
+drop-in replacement built from ``Q/2 · log²(Q)`` compare-exchange stages of
+plain ``where``/``reshape`` ops, so it traces inside Pallas kernel bodies
+and fuses like any other elementwise graph.
+
+Bit-exactness contract (pinned by ``tests/test_sim_cross.py``):
+
+* **Same order.**  Ascending lexicographic order over the first
+  ``num_keys`` operands, exactly like ``jax.lax.sort(operands,
+  num_keys=num_keys)``.
+* **Stable.**  A bitonic network is not inherently stable — equal keys can
+  cross at any compare-exchange.  Stability is *restored* by appending the
+  element index (iota) as the final, always-distinct key: two entries
+  compare equal on every user key iff they differ on the iota column, and
+  the iota comparison reproduces the original order.  This is the
+  composite-``(key, slot_index)`` argument: the network sorts the extended
+  key vector, whose total order is unique, and any comparison sort of a
+  totally ordered input yields the one stable permutation.
+* **Sentinel-safe.**  Keys may contain ``±inf`` (the scan cores' empty-slot
+  sentinels); IEEE-754 comparisons order them correctly.  NaN keys are the
+  caller's responsibility (the SRPT ranks are ``max(0, ...)`` so none
+  occur).
+
+Non-power-of-two widths are padded up to ``P = 2^ceil(log2 Q)`` with
+``+inf`` key entries (zero for payload operands), which sort strictly after
+every finite key and after earlier-iota ``+inf`` entries alike, then
+sliced back to ``Q`` — so the visible result is identical to sorting the
+unpadded input.
+
+The compare-exchange partner ``i ^ stride`` is computed by reshaping the
+row into ``(P / 2·stride, 2, stride)`` and reversing the middle length-2
+axis — XOR with a power of two flips exactly one bit, which is that axis
+reversal.  This keeps the network gather-free (a gathered partner index
+made XLA:CPU's constant folder explode compile time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _lex_lt(a_keys, b_keys):
+    """Elementwise lexicographic ``a < b`` over parallel key lists."""
+    lt = a_keys[0] < b_keys[0]
+    eq = a_keys[0] == b_keys[0]
+    for ak, bk in zip(a_keys[1:], b_keys[1:]):
+        lt = lt | (eq & (ak < bk))
+        eq = eq & (ak == bk)
+    return lt
+
+
+def bitonic_sort(operands, dimension: int = 1, num_keys: int = 1,
+                 is_stable: bool = True):
+    """Stable ascending sort over the last axis, bit-equal to
+    ``jax.lax.sort(operands, dimension=-1, num_keys=num_keys,
+    is_stable=True)``.
+
+    ``operands`` is a tuple of equally shaped arrays; the first
+    ``num_keys`` are compared lexicographically, the rest ride along as
+    payload.  ``dimension`` must address the last axis (the scan cores
+    sort slot tables laid out [..., Q]); ``is_stable`` accepts only
+    ``True`` — stability is structural here (see module docstring), not
+    optional.
+    """
+    assert dimension in (operands[0].ndim - 1, -1)
+    assert is_stable, "bitonic_sort is always stable; is_stable=False " \
+                      "would not match lax.sort anyway"
+    Q = operands[0].shape[-1]
+    P = 1 << max(0, Q - 1).bit_length()
+    lead = operands[0].shape[:-1]
+    # broadcasted_iota, not jnp.arange: a Pallas kernel body cannot capture
+    # tracer-time constants, and iota is a traced primitive (>= 2-D on TPU)
+    idx = jax.lax.broadcasted_iota(jnp.int32, lead + (P,), len(lead))
+    cols = []
+    for i, x in enumerate(operands):
+        if P != Q:
+            pad = jnp.full(lead + (P - Q,),
+                           jnp.inf if i < num_keys else 0, x.dtype)
+            x = jnp.concatenate([x, pad], axis=-1)
+        cols.append(x)
+    cols.append(idx)                       # the stability key (always last)
+    key_ix = list(range(num_keys)) + [len(cols) - 1]
+
+    def partner(x, stride):
+        # i ^ stride == flipping one bit == reversing a length-2 axis
+        y = x.reshape(lead + (P // (2 * stride), 2, stride))
+        return y[..., ::-1, :].reshape(lead + (P,))
+
+    size = 2
+    while size <= P:
+        stride = size // 2
+        while stride >= 1:
+            lower = (idx & stride) == 0
+            # i < P, so (i & P) == 0 identically — the final merge stage
+            # (size == P) is all-ascending with no special case
+            asc = (idx & size) == 0
+            flip = lower != asc
+            other = [partner(c, stride) for c in cols]
+            lt = _lex_lt([cols[i] for i in key_ix],
+                         [other[i] for i in key_ix])
+            keep = lt ^ flip
+            cols = [jnp.where(keep, a, b) for a, b in zip(cols, other)]
+            stride //= 2
+        size *= 2
+    return tuple(c[..., :Q] for c in cols[:-1])

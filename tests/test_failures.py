@@ -141,8 +141,9 @@ def test_drain_parity_across_registered_engines(k):
     batch, fb = faulty_batch(wl, num_jobs=400, reps=2, seed=k)
     checked = 0
     for policy, engine in engines.registered():
-        if policy not in DRAIN_POLICIES or engine in ("python", "pallas"):
+        if policy not in DRAIN_POLICIES or engine == "python":
             continue
+        assert engine in engines.FAILURE_ENGINES
         ref = engines.simulate(policy, batch, engine="python", wl=wl,
                                failures=fb)
         out = engines.simulate(policy, batch, engine=engine, wl=wl,
@@ -155,7 +156,7 @@ def test_drain_parity_across_registered_engines(k):
         assert ref.kills is not None and (ref.kills == 0).all()
         assert (ref.availability > 0).all() and (ref.availability < 1).all()
         checked += 1
-    assert checked >= 6    # fcfs/modbs-fcfs/bs-fcfs x jax/jax-shard
+    assert checked >= 9    # fcfs/modbs/bs-fcfs x jax/jax-shard/pallas
 
 
 def test_drain_degrades_response():
@@ -167,17 +168,18 @@ def test_drain_degrades_response():
     assert fault.response.mean() > clean.response.mean()
 
 
-def test_pallas_rejects_failures():
+def test_srpt_scan_engines_reject_failures():
     wl = small_workload(k=32)
     batch, fb = faulty_batch(wl, num_jobs=50, reps=1)
-    with pytest.raises(NotImplementedError, match="capacity mask"):
-        engines.simulate("fcfs", batch, engine="pallas", wl=wl, failures=fb)
+    for engine in ("jax", "jax-shard", "pallas"):
+        with pytest.raises(NotImplementedError, match="fault-injection"):
+            engines.simulate("sf-srpt", batch, engine=engine, failures=fb)
 
 
 def test_scan_engines_reject_kill_mode():
     wl = small_workload(k=32)
     batch, fb = faulty_batch(wl, num_jobs=50, reps=1, mode="kill")
-    for engine in ("jax", "jax-shard"):
+    for engine in ("jax", "jax-shard", "pallas"):
         with pytest.raises(NotImplementedError, match="mode='drain'"):
             engines.simulate("fcfs", batch, engine=engine, wl=wl,
                              failures=fb)

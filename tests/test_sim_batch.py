@@ -327,22 +327,24 @@ def test_bench_sim_smoke_emits_well_formed_json(tmp_path):
          "--out", str(out)],
         check=True, cwd=repo_root, env=env, capture_output=True)
     wall = time.time() - t0
-    # the budget grew 60 -> 75 s with the sixth (srpt) scenario: its four
-    # jitted cells each compile a fresh preemptive scan program (~1-2 s
-    # apiece, twice per cell for the cold/warm split)
-    assert wall < 75, f"--smoke took {wall:.1f}s, budget is 75s"
+    # the budget grew 60 -> 75 s with the sixth (srpt) scenario, then
+    # 75 -> 110 s when pallas gained drain-mode failure kernels and the
+    # srpt bitonic kernels (three failure cells plus two interpret-mode
+    # bitonic srpt cells, each timed twice for the cold/warm split)
+    assert wall < 110, f"--smoke took {wall:.1f}s, budget is 110s"
     on_disk = json.loads(out.read_text())
     assert on_disk["schema"] == bench_sim.SCHEMA
     rows = on_disk["rows"]
     # fig1: 5 engines x 3 policies per k; traces: 4 engines x 3 policies;
-    # failures: 3 engines x 3 policies (no pallas — no capacity mask);
-    # grid: 2 engines x 3 policies (jax-batch + jax-shard — no python
-    # baseline, no pallas grid core); streaming: jax-batch x 3 policies;
-    # srpt: python x 2 policies + (jax-batch + jax-shard) x 2 policies
-    # (batch cells only — smoke skips the srpt grid part, whose rows
-    # would land in the same regression-guard cells anyway)
+    # failures: 4 engines x 3 policies (pallas runs the drain-mode fail
+    # kernels); grid: 2 engines x 3 policies (jax-batch + jax-shard — no
+    # python baseline, no pallas grid core); streaming: jax-batch x 3
+    # policies; srpt: python x 2 policies + (jax-batch + pallas +
+    # jax-shard) x 2 policies (batch cells only — smoke skips the srpt
+    # grid part, whose rows would land in the same regression-guard
+    # cells anyway)
     assert len(rows) == \
-        15 * len(on_disk["config"]["ks"]) + 12 + 9 + 6 + 3 + 6
+        15 * len(on_disk["config"]["ks"]) + 12 + 12 + 6 + 3 + 8
     assert {r["bench"] for r in rows} == {"fig1-critical", "traces",
                                           "failures", "grid", "streaming",
                                           "srpt"}

@@ -7,7 +7,10 @@ responses, same blocking decisions — on the traces both can run.  Also
 pins the O(k) sorted-invariant FCFS step bit-for-bit to the retained
 full-sort reference step, and the fused Pallas kernels
 (``repro.kernels.msj_scan``, interpret mode on CPU) bit-for-bit (rtol=0)
-to the jax-batch scan cores at k ∈ {32, 256}.
+to the jax-batch scan cores at k ∈ {32, 256} — including the preemptive
+``sf-srpt``/``ff-srpt`` kernels, whose in-kernel stable bitonic
+rank/permute network is additionally property-tested against
+``jax.lax.sort(..., is_stable=True)`` on adversarial key sets.
 """
 
 import heapq
@@ -233,21 +236,31 @@ def test_registry_fast_engines_bitexact_vs_jax(k):
 
     wl = figure1_workload(k, theta=0.7)
     batch = wl.sample_traces(1200, 2, seed=17)
+    # The srpt pallas kernels run the reference step per event in the
+    # interpreter, and the bitonic width Q dominates their cost — a
+    # shorter batch and a bounded queue_cap keep those legs to seconds
+    # while still covering both k values (a too-small cap raises
+    # overflow, it never corrupts; the same cap goes to every engine so
+    # the comparison stays apples-to-apples).
+    srpt_batch = wl.sample_traces(400, 2, seed=17)
     checked = 0
     for policy in engines.policies_for("jax"):
-        ref = engines.simulate(policy, batch, engine="jax", wl=wl)
+        srpt = policy.endswith("srpt")
+        b = srpt_batch if srpt else batch
+        kw = {"queue_cap": 96} if srpt else {}
+        ref = engines.simulate(policy, b, engine="jax", wl=wl, **kw)
         for eng in engines.engines_for(policy):
             if eng in ("jax", "python"):
                 continue
-            out = engines.simulate(policy, batch, engine=eng, wl=wl)
+            out = engines.simulate(policy, b, engine=eng, wl=wl, **kw)
             for f in ("response", "wait", "start", "blocked", "p_helper",
-                      "p_routed"):
-                a, b = getattr(out, f), getattr(ref, f)
-                assert (a is None) == (b is None), (policy, eng, f)
+                      "p_routed", "preemptions"):
+                a, b2 = getattr(out, f), getattr(ref, f)
+                assert (a is None) == (b2 is None), (policy, eng, f)
                 if a is not None:
-                    assert np.array_equal(a, b), (policy, eng, f)
+                    assert np.array_equal(a, b2), (policy, eng, f)
             checked += 1
-    assert checked >= 3   # fcfs/modbs-fcfs/bs-fcfs x pallas
+    assert checked >= 10   # 5 jax policies x {jax-shard, pallas}
 
 
 def test_pallas_kernel_family_matches_refs_at_raw_stream_level():
@@ -343,3 +356,71 @@ def test_fcfs_roll_insert_ties_bitexact(args):
         fused = np.asarray(fcfs_scan(a[None], n[None], v[None], k=k)[0])
     assert np.array_equal(fast, ref), f"roll-and-insert != sort ref (k={k})"
     assert np.array_equal(fused, ref), f"pallas != sort ref (k={k})"
+
+
+# -- stable bitonic rank/permute vs lax.sort (property test) ------------------
+#
+# The srpt pallas kernels rank and permute their slot tables with the
+# bitonic network in kernels/msj_scan/sort.py instead of jax.lax.sort.
+# Bit-equality with the *stable* lax.sort on adversarial keys — heavy
+# duplicates, ±inf empty-slot sentinels, all-equal columns — is exactly
+# what makes the fused kernels' queue permutation identical to the scan
+# cores' and hence the whole sample path rtol=0.  The int payload column
+# is a distinct per-element tag, so equality checks the full permutation,
+# not just the sorted keys.
+
+_SORT_R, _SORT_Q = 2, 24   # fixed non-pow2 width: exercises +inf padding
+
+sort_cases = st.tuples(
+    st.integers(1, 2),                                         # num_keys
+    st.lists(st.tuples(
+        st.sampled_from([-np.inf, np.inf, 0.0, 0.0, 1.0, 1.5, 2.5, 2.5]),
+        st.sampled_from([0.0, 1.0, 1.0, 4.0])),                # tie-breaker
+        min_size=_SORT_R * _SORT_Q, max_size=_SORT_R * _SORT_Q),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sort_cases)
+def test_bitonic_sort_bitexact_vs_stable_lax_sort(args):
+    import jax
+
+    from repro.kernels.msj_scan.sort import bitonic_sort
+
+    num_keys, rows = args
+    key = np.array([r[0] for r in rows]).reshape(_SORT_R, _SORT_Q)
+    key2 = np.array([r[1] for r in rows]).reshape(_SORT_R, _SORT_Q)
+    payload = np.arange(key.size, dtype=np.int32).reshape(key.shape)
+    with enable_x64():
+        ops = (jnp.asarray(key, jnp.float64),
+               jnp.asarray(key2, jnp.float64),
+               jnp.asarray(payload, jnp.int32))
+        got = bitonic_sort(ops, num_keys=num_keys)
+        want = jax.lax.sort(ops, dimension=-1, num_keys=num_keys,
+                            is_stable=True)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), num_keys
+
+
+def test_bitonic_sort_corner_cases():
+    """Deterministic corners the sampler may miss: all-equal keys (pure
+    stability — payload must come back verbatim), all-``+inf`` columns
+    (indistinguishable from the pow2 padding), and widths on both sides
+    of a power of two including the degenerate Q=1."""
+    import jax
+
+    from repro.kernels.msj_scan.sort import bitonic_sort
+
+    with enable_x64():
+        for Q in (1, 2, 7, 8, 9, 64):
+            pay = jnp.arange(Q, dtype=jnp.int32)[None]
+            for key in (np.zeros(Q),
+                        np.full(Q, np.inf),
+                        np.resize([np.inf, -np.inf, 0.0], Q)):
+                ops = (jnp.asarray(key, jnp.float64)[None], pay)
+                got = bitonic_sort(ops, num_keys=1)
+                want = jax.lax.sort(ops, dimension=-1, num_keys=1,
+                                    is_stable=True)
+                for g, w in zip(got, want):
+                    assert np.array_equal(np.asarray(g),
+                                          np.asarray(w)), (Q, key[:3])

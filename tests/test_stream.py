@@ -216,20 +216,25 @@ def test_non_streaming_engines_reject_naming_streaming_ones():
                                     chunk_jobs=25, wl=wl)
 
 
-def test_pallas_failure_rejection_names_capable_engines():
-    """Satellite: the pallas failures= error must point at the engines
-    that DO support fault injection."""
+def test_drain_failures_run_on_every_jitted_engine():
+    """The PR-7 pin was "pallas rejects failures= naming the capable
+    engines"; the fused kernels have since grown the drain branch, so
+    the contract flipped: drain-mode outages run on *all four* engines
+    (the registry constant says so) and pallas stays bit-identical.
+    Kill-mode and srpt rejections are pinned in test_failures.py."""
     from repro.core.failures import FailureProcess
     wl = figure1_workload(32)
     batch = wl.sample_traces(50, 2, seed=0)
     proc = FailureProcess(mtbf=50.0, mttr=5.0, mode="drain")
-    with pytest.raises(NotImplementedError) as ei:
-        engines.simulate("fcfs", batch, engine="pallas", wl=wl,
-                         failures=proc)
-    msg = str(ei.value)
-    for eng in engines.FAILURE_ENGINES:
-        assert f"engine={eng!r}" in msg
-    assert ("python", "jax", "jax-shard") == engines.FAILURE_ENGINES
+    fb = proc.sample(wl.k, float(batch.arrival.max()) + 1.0, batch.reps,
+                     seed=3)
+    assert engines.FAILURE_ENGINES == ("python", "jax", "jax-shard",
+                                       "pallas")
+    ref = engines.simulate("fcfs", batch, engine="jax", wl=wl, failures=fb)
+    out = engines.simulate("fcfs", batch, engine="pallas", wl=wl,
+                           failures=fb)
+    assert np.array_equal(out.response, ref.response)
+    assert np.array_equal(out.availability, ref.availability)
 
 
 def test_bs_stream_backlog_overflow_is_loud():
